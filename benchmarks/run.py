@@ -1,0 +1,28 @@
+# One function per paper table. Print ``name,us_per_call,derived`` CSV.
+"""Benchmark harness: engine-level reproduction of every paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [table1 table6 ...]
+"""
+from __future__ import annotations
+
+import sys
+import time
+
+
+def main() -> None:
+    from benchmarks.paper_tables import ALL_TABLES
+
+    wanted = sys.argv[1:] or list(ALL_TABLES)
+    print("name,us_per_call,derived")
+    for name in wanted:
+        fn = ALL_TABLES[name]
+        t0 = time.time()
+        rows = fn()
+        dt = time.time() - t0
+        for row_name, us, derived in rows:
+            print(f"{row_name},{us:.1f},{derived}")
+        print(f"# {name} done in {dt:.1f}s", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,70 @@
+"""Beyond-paper benchmark: schedule-as-data search on the compiled executor.
+
+For each train cell, price every candidate table (1F1B, GPipe, RRFP from
+uniform costs, RRFP from *measured* per-stage op costs) with the static
+tick-timing model over the measured per-op rooflines, and report the best —
+the TPU materialization of the paper's thesis that schedules should be
+consumed flexibly: the winning table is swapped in without recompilation.
+
+    PYTHONPATH=src:. python -m benchmarks.run schedule_search
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.analysis.roofline import (
+    ProductionMeshShape,
+    _t,
+    per_op_costs,
+    roofline_cell,
+)
+from repro.core.costs import CostModel, JitterModel
+from repro.core.synthesis import synthesize
+from repro.core.taskgraph import PipelineSpec
+from repro.launch.cells import plan_cell
+from repro.pipeline import schedules
+from repro.pipeline.spec import from_stage_orders
+
+ARCHS = ("deepseek-7b", "granite-34b", "deepseek-moe-16b")
+
+
+def candidate_tables(spec: PipelineSpec, f: np.ndarray, b: np.ndarray):
+    cm = CostModel(f_cost=f, b_cost=b, w_cost=0 * f, comm_base=1e-5,
+                   compute_jitter=JitterModel(), comm_jitter=JitterModel())
+    yield "1f1b", schedules.one_f_one_b(spec)
+    yield "gpipe", schedules.gpipe(spec)
+    yield "rrfp-uniform", schedules.rrfp(spec)
+    yield "rrfp-measured", from_stage_orders(
+        spec, synthesize(spec, cm).stage_orders)
+
+
+def schedule_search():
+    rows = []
+    for arch in ARCHS:
+        plan = plan_cell(arch, "train_4k", ProductionMeshShape())
+        oc = per_op_costs(plan)
+        S, M = 16, plan.num_microbatches
+        f = np.full(S, _t(oc["F"]))
+        b = np.full(S, _t(oc["B"]))
+        f[0] = _t(oc["F"], oc["embed"])
+        b[0] = _t(oc["B"], oc["embed"], oc["embed"])
+        f[-1] = _t(oc["F"], oc["ce"])
+        b[-1] = _t(oc["B_last"])
+        spec = PipelineSpec(S, M)
+        results = {}
+        for name, table in candidate_tables(spec, f, b):
+            table.validate()
+            r = roofline_cell(arch, "train_4k", table=table, op_costs=oc,
+                              schedule=name)
+            results[name] = r
+        base = results["1f1b"]
+        best_name = min(results, key=lambda k: results[k].est_step_s)
+        for name, r in results.items():
+            tag = " <-best" if name == best_name else ""
+            rows.append((
+                f"sched/{arch}/{name}",
+                r.est_step_s * 1e6,
+                f"MFU={r.projected_mfu:.3f}"
+                f" vs1f1b={base.est_step_s / r.est_step_s:.2f}x{tag}",
+            ))
+    return rows

@@ -1,0 +1,31 @@
+"""RQ4 demo: inject the paper's EMA-based compute jitter (J0-J3) and compare
+how pre-committed 1F1B vs RRFP degrade (Table 6).
+
+    PYTHONPATH=src python examples/jitter_robustness.py
+"""
+import dataclasses
+
+from repro.core import (
+    CostModel, EngineConfig, INJECTION_LEVELS, PipelineSpec,
+    average_makespan, multimodal_stage_flops,
+)
+
+S, M = 8, 48
+spec = PipelineSpec(S, M)
+base = CostModel.from_stage_flops(
+    multimodal_stage_flops(6e12, 2.5e12, S), comm_base=2e-3)
+
+print(f"{'level':>6} {'1F1B (s)':>10} {'slow%':>7} {'RRFP (s)':>10} {'slow%':>7}")
+bases = {}
+for level, inj in INJECTION_LEVELS.items():
+    costs = dataclasses.replace(base, injection=inj)
+    row = [level]
+    for meth, cfg in (("1f1b", EngineConfig(mode="precommitted",
+                                            fixed_order="1f1b")),
+                      ("rrfp", EngineConfig(mode="hint"))):
+        mean, _, _ = average_makespan(spec, costs, cfg, iters=3)
+        bases.setdefault(meth, mean)
+        row += [mean, 100 * (mean / bases[meth] - 1)]
+    print(f"{row[0]:>6} {row[1]:>10.3f} {row[2]:>+6.2f}% {row[3]:>10.3f} "
+          f"{row[4]:>+6.2f}%")
+print("\nRRFP degrades more slowly with jitter level — the paper's RQ4 claim.")

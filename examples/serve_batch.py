@@ -1,0 +1,39 @@
+"""Batched serving demo: pipelined one-token decode steps with stage-local
+KV caches via the serve executor.
+
+    XLA_FLAGS=--xla_force_host_platform_device_count=8 PYTHONPATH=src \
+        python examples/serve_batch.py
+"""
+import os
+
+if "xla_force_host_platform_device_count" not in os.environ.get("XLA_FLAGS", ""):
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.launch.serve import build_server
+
+s = build_server("deepseek-7b", data=2, stages=4, layers=8, batch=8,
+                 cache_len=64)
+cfg = s["cfg"]
+tokens = jax.random.randint(jax.random.key(7), (8,), 0, cfg.vocab_size
+                            ).astype(jnp.int32)
+caches = s["caches"]
+seqs = [np.asarray(tokens)]
+t0 = time.time()
+for pos in range(24):
+    tokens, caches = s["serve_step"](s["sp"], s["io"], caches,
+                                     {"tokens": tokens},
+                                     jnp.asarray(pos, jnp.int32))
+    seqs.append(np.asarray(tokens))
+dt = time.time() - t0
+out = np.stack(seqs, 1)
+print(f"decoded 24 tokens x batch 8 in {dt:.2f}s "
+      f"({8 * 24 / dt:.1f} tok/s on host devices)")
+print("sample rows:")
+for row in out[:3]:
+    print("  ", row.tolist())

@@ -1,0 +1,2 @@
+"""repro: RRFP — readiness-driven pipeline-parallel training in JAX."""
+__version__ = "1.0.0"

@@ -1,0 +1,314 @@
+"""Three-term roofline analysis per (arch × shape × mesh) cell.
+
+Terms (per device, seconds; TPU v5e constants):
+  compute    = HLO_FLOPs / peak_FLOPs          (197 TFLOP/s bf16)
+  memory     = HLO_bytes / HBM_bw              (819 GB/s)
+  collective = wire_bytes / link_bw            (50 GB/s per ICI link)
+
+``HloCostAnalysis`` counts while bodies once (verified; DESIGN §6), so FLOPs
+and bytes are assembled from *standalone lowered per-op programs* (the exact
+F/B bodies the executor switches into, at per-device local shapes) multiplied
+by the schedule's op counts — trip-count-exact by construction.  Collective
+bytes follow the executor's issue pattern analytically (it is our code), and
+are cross-checked against the collective ops visible in the compiled HLO.
+
+Also derives a static step-time estimate: sum over ticks of the slowest
+stage's op time (plus non-overlapped reduction/optimizer tails), giving the
+projected MFU used as the hillclimbing score in EXPERIMENTS.md §Perf.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.launch.cells import CellPlan, plan_cell
+from repro.models.build import ArchModel
+from repro.pipeline.executor import ExecOptions, chunked_ce_sum, _ce_chunk
+from repro.pipeline.spec import OP_B, OP_F, ScheduleTable
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+LINK_BW = 50e9
+CHIPS = 256  # single-pod roofline (16×16)
+
+
+# ---------------------------------------------------------------------------
+# per-op standalone costing
+# ---------------------------------------------------------------------------
+def _cost(fn, *args) -> dict[str, float]:
+    c = jax.jit(fn).lower(*args).compile()
+    ca = c.cost_analysis()
+    return {"flops": float(ca.get("flops", 0.0) or 0.0),
+            "bytes": float(ca.get("bytes accessed", 0.0) or 0.0)}
+
+
+def per_op_costs(plan: CellPlan, opts: ExecOptions | None = None) -> dict:
+    """FLOPs/bytes of each schedule-op body at per-device local shapes.
+
+    Stage archetypes: first (embed+layers), mid (layers), last (layers+CE).
+    MoE collectives are replaced by their local-compute equivalents for
+    costing (collective FLOPs are ~0; wire bytes are modeled separately).
+    """
+    model = plan.model
+    cfg = model.cfg
+    eff_seq = plan.seq_len + (plan.enc_len if cfg.encoder_layers else 0)
+    mb = plan.mb_rows
+    d = cfg.d_model
+    key = jax.random.key(0)
+    sp1 = jax.eval_shape(
+        lambda k: jax.tree.map(lambda x: x[0], model.init_stage_params(k)), key)
+    io = jax.eval_shape(model.init_io_params, key)
+    x = jax.ShapeDtypeStruct((mb, eff_seq, d), cfg.dtype)
+    g = jax.ShapeDtypeStruct((mb, eff_seq, d), cfg.dtype)
+    tokens = jax.ShapeDtypeStruct((mb, plan.seq_len), jnp.int32)
+    aux: dict[str, Any] = {
+        "positions": jnp.broadcast_to(
+            jnp.arange(eff_seq, dtype=jnp.int32)[None], (mb, eff_seq)),
+        "data_size": 16,
+        "moe_layout": "none",  # collectives modeled analytically
+    }
+    if cfg.mrope:
+        aux["mrope"] = jnp.broadcast_to(
+            jnp.arange(eff_seq, dtype=jnp.int32)[None, None], (3, mb, eff_seq))
+    if cfg.encoder_layers:
+        aux["dec_len"] = plan.seq_len
+    rows_first = model.rows(0)
+    rows_last = model.rows(model.num_stages - 1)
+    ce_chunk = _ce_chunk(model, opts) if opts else max(
+        64, min(2048, (1 << 24) // cfg.padded_vocab() * 4))
+
+    def fwd(sp, io_, x):
+        return model.stage_forward(sp, io_, x, aux, rows_first)
+
+    def embed(io_, tokens):
+        e = io_["embed"][tokens]
+        if cfg.encoder_layers:
+            e = jnp.concatenate(
+                [e, jnp.zeros((mb, plan.enc_len, d), cfg.dtype)], axis=1)
+        return e
+
+    def ce(io_, y, labels):
+        if cfg.encoder_layers:
+            y = y[:, : plan.seq_len]
+        return chunked_ce_sum(model, io_, y, labels, ce_chunk)
+
+    out: dict[str, dict] = {}
+    out["F"] = _cost(fwd, sp1, io, x)
+    out["embed"] = _cost(embed, io, tokens)
+    out["ce"] = _cost(ce, io, x, tokens)
+
+    if plan.step == "train":
+        def bwd_mid(sp, io_, x, g):
+            def s(sp, io_, x):
+                y = model.stage_forward(sp, io_, x, aux, rows_first)
+                return jnp.sum(y.astype(jnp.float32) * g.astype(jnp.float32))
+            return jax.grad(s, argnums=(0, 1, 2))(sp, io_, x)
+
+        def bwd_last(sp, io_, x, labels):
+            def s(sp, io_, x):
+                y = model.stage_forward(sp, io_, x, aux, rows_last)
+                return ce(io_, y, labels)
+            return jax.grad(s, argnums=(0, 1, 2))(sp, io_, x)
+
+        out["B"] = _cost(bwd_mid, sp1, io, x, g)
+        out["B_last"] = _cost(bwd_last, sp1, io, x, tokens)
+    else:
+        x1 = jax.ShapeDtypeStruct((mb, 1, d), cfg.dtype)
+        cache = jax.eval_shape(
+            lambda: jax.tree.map(
+                lambda l: jnp.stack([l] * model.l_max),
+                model.init_layer_cache(
+                    mb if not plan.sp_mode else plan.cell.global_batch,
+                    plan.cell.seq_len // (plan.dp_total if plan.sp_mode else 1),
+                    enc_len=max(1, plan.enc_len))))
+        daux = {"data_size": 16, "moe_layout": "none"}
+
+        def dec(sp, io_, x, cache):
+            return model.stage_decode(sp, io_, x, cache,
+                                      jnp.asarray(0, jnp.int32), daux,
+                                      rows_first)
+
+        out["F_dec"] = _cost(dec, sp1, io, x1, cache)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# collective model (wire bytes per device per step)
+# ---------------------------------------------------------------------------
+def collective_bytes(plan: CellPlan, table: ScheduleTable | None) -> dict:
+    cfg = plan.model.cfg
+    model = plan.model
+    d = cfg.d_model
+    n = 16  # data ring
+    eff_seq = plan.seq_len + (plan.enc_len if cfg.encoder_layers else 0)
+    mb_bytes = plan.mb_rows * (eff_seq if plan.step == "train" else 1) * d * 2
+    out = {"permute": 0.0, "grad_rs": 0.0, "param_ag": 0.0, "io_ar": 0.0,
+           "moe": 0.0, "sp": 0.0}
+    if plan.step == "train":
+        T = table.num_ticks
+        out["permute"] = 2.0 * T * mb_bytes  # act fwd + grad bwd rings
+        n_stage = (cfg.param_count(include_embed=False) - d) / model.num_stages
+        n_io = 2 * cfg.padded_vocab() * d
+        expert = 0.0
+        if cfg.moe is not None:
+            moe_layers = sum(1 for k in cfg.pattern if k == "moe")
+            expert = (moe_layers / cfg.num_layers) * n_stage * 0.9
+        repl = n_stage - expert
+        out["grad_rs"] = (repl + n_io) * 2 * (n - 1) / n
+        out["param_ag"] = (repl + n_io) * 2 * (n - 1) / n
+        out["io_ar"] = n_io * 2 * 2 * (n - 1) / n  # psum over model of io grads
+        if cfg.moe is not None:
+            M = table.spec.num_microbatches
+            tokens = plan.mb_rows * plan.seq_len
+            cap_bytes = (tokens * cfg.moe.top_k * cfg.moe.capacity_factor
+                         * d * 2)
+            moe_layers_per_stage = sum(
+                1 for k in cfg.pattern if k == "moe") / model.num_stages
+            per_op = 2 * cap_bytes * (n - 1) / n  # a2a there+back / AG+RS
+            # F issues the pair once; B only transposes it (the dispatched
+            # buffers are checkpoint-policy-saved, so remat re-issues none)
+            out["moe"] = M * moe_layers_per_stage * per_op * 2
+    else:
+        T = plan.num_microbatches + model.num_stages - 1
+        out["permute"] = T * mb_bytes
+        if plan.sp_mode:
+            # distributed flash-decode psums per attention layer
+            attn_slots = int((model.type_ids >= 0).sum()) / model.num_stages
+            kv = cfg.num_kv_heads * cfg.resolved_head_dim
+            out["sp"] = attn_slots * 2 * (n - 1) / n * (
+                plan.cell.global_batch * cfg.num_heads
+                * cfg.resolved_head_dim * 4)
+    out["total"] = sum(out.values())
+    return out
+
+
+# ---------------------------------------------------------------------------
+# cell roofline
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass
+class CellRoofline:
+    arch: str
+    shape: str
+    schedule: str
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    dominant: str
+    model_flops: float
+    hlo_flops_device: float
+    useful_ratio: float
+    est_step_s: float
+    projected_mfu: float
+    notes: str = ""
+
+    def as_dict(self):
+        return dataclasses.asdict(self)
+
+
+class ProductionMeshShape:
+    """Lightweight stand-in: plan_cell only reads ``mesh.shape`` — the
+    roofline never allocates devices."""
+
+    def __init__(self, multi_pod: bool = False):
+        self.shape = ({"pod": 2, "data": 16, "model": 16} if multi_pod
+                      else {"data": 16, "model": 16})
+
+
+def roofline_cell(arch: str, shape: str, mesh=None, schedule: str = "1f1b",
+                  table: ScheduleTable | None = None,
+                  op_costs: dict | None = None) -> CellRoofline:
+    from repro.pipeline import schedules
+    from repro.core.taskgraph import PipelineSpec
+
+    mesh = mesh or ProductionMeshShape()
+    plan = plan_cell(arch, shape, mesh)
+    model = plan.model
+    S = model.num_stages
+    M = plan.num_microbatches
+    if plan.step == "train" and table is None:
+        spec = PipelineSpec(S, M)
+        table = schedules.BUILDERS[schedule](spec)
+    oc = op_costs or per_op_costs(plan)
+
+    if plan.step == "train":
+        # per-stage totals (first / mid / last archetypes)
+        totals = {}
+        for name, extra_f, extra_b in (
+            ("first", oc["embed"], {"flops": oc["embed"]["flops"] * 2,
+                                    "bytes": oc["embed"]["bytes"] * 2}),
+            ("mid", {"flops": 0.0, "bytes": 0.0}, {"flops": 0.0, "bytes": 0.0}),
+            ("last", oc["ce"], None),
+        ):
+            f = {k: oc["F"][k] + extra_f[k] for k in ("flops", "bytes")}
+            if name == "last":
+                b = oc["B_last"]
+            else:
+                b = {k: oc["B"][k] + extra_b[k] for k in ("flops", "bytes")}
+            totals[name] = {k: M * (f[k] + b[k]) for k in ("flops", "bytes")}
+        worst = max(totals.values(), key=lambda t: t["flops"])
+        hlo_flops = worst["flops"]
+        hlo_bytes = worst["bytes"]
+        # static tick timing: slowest stage per tick
+        op_time = {}
+        for name in ("first", "mid", "last"):
+            tf = totals[name]["flops"] / M / 2  # per (F+B)/2 approx split
+        f_t = {
+            "first": _t(oc["F"], oc["embed"]),
+            "mid": _t(oc["F"]),
+            "last": _t(oc["F"], oc["ce"]),
+        }
+        b_t = {
+            "first": _t(oc["B"], oc["embed"], oc["embed"]),
+            "mid": _t(oc["B"]),
+            "last": _t(oc["B_last"]),
+        }
+        arch_of = lambda s: ("first" if s == 0 else
+                             "last" if s == S - 1 else "mid")
+        permute_t = 2 * plan.mb_rows * (plan.seq_len + plan.enc_len) \
+            * model.cfg.d_model * 2 / LINK_BW
+        est = 0.0
+        for t in range(table.num_ticks):
+            tick_max = permute_t
+            for s in range(S):
+                op = int(table.ops[s, t])
+                if op == OP_F:
+                    tick_max = max(tick_max, f_t[arch_of(s)])
+                elif op == OP_B:
+                    tick_max = max(tick_max, b_t[arch_of(s)])
+            est += tick_max
+        colls = collective_bytes(plan, table)
+        est += (colls["grad_rs"] + colls["param_ag"] + colls["io_ar"]) / LINK_BW
+        coll_s = colls["total"] / LINK_BW
+    else:
+        table_t = plan.num_microbatches + S - 1
+        hlo_flops = M * oc["F_dec"]["flops"]
+        hlo_bytes = M * oc["F_dec"]["bytes"]
+        colls = collective_bytes(plan, None)
+        coll_s = colls["total"] / LINK_BW
+        est = table_t * max(_t(oc["F_dec"]),
+                            plan.mb_rows * model.cfg.d_model * 2 / LINK_BW)
+
+    mf = model.model_flops(plan.cell)
+    compute_s = hlo_flops / PEAK_FLOPS
+    memory_s = hlo_bytes / HBM_BW
+    terms = {"compute": compute_s, "memory": memory_s, "collective": coll_s}
+    dominant = max(terms, key=terms.get)
+    useful = mf["model_flops"] / CHIPS / max(hlo_flops, 1.0)
+    mfu = mf["model_flops"] / (CHIPS * PEAK_FLOPS * max(est, 1e-12))
+    return CellRoofline(
+        arch=arch, shape=shape, schedule=schedule,
+        compute_s=compute_s, memory_s=memory_s, collective_s=coll_s,
+        dominant=dominant, model_flops=mf["model_flops"],
+        hlo_flops_device=hlo_flops, useful_ratio=useful,
+        est_step_s=est, projected_mfu=mfu,
+    )
+
+
+def _t(*costs) -> float:
+    f = sum(c["flops"] for c in costs)
+    b = sum(c["bytes"] for c in costs)
+    return max(f / PEAK_FLOPS, b / HBM_BW)

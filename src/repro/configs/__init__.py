@@ -1,0 +1,3 @@
+"""Assigned architecture configs (exact, from public literature) + the
+paper's own workloads.  Select with --arch <id> via repro.configs.registry."""
+from repro.configs.registry import ARCHS, get_arch, list_archs, reduced_config

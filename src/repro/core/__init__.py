@@ -1,0 +1,36 @@
+"""RRFP core: readiness-driven pipeline runtime (the paper's contribution).
+
+Layering (bottom-up):
+  taskgraph -- dependency-constrained task model (§3.1)
+  costs     -- runtime-variability models (§2, RQ4 injection)
+  hints     -- hint orders Π + fixed pre-committed orders (§5, App. A)
+  engine    -- message-driven, ready-set-arbitrated event runtime (§4, App. C/D)
+  bounds    -- Theorem 6.1 / Corollary 6.2 / Fig. 6 analysis (§6, App. B)
+  synthesis -- engine -> static schedule table for the compiled executor
+"""
+from repro.core.costs import (
+    CostModel,
+    InjectionModel,
+    INJECTION_LEVELS,
+    JitterModel,
+    multimodal_stage_flops,
+)
+from repro.core.engine import (
+    DeadlockError,
+    Engine,
+    EngineConfig,
+    RunResult,
+    average_makespan,
+    run_iteration,
+)
+from repro.core.hints import HintArbiter, HintKind
+from repro.core.synthesis import SynthesisResult, ema_update_costs, synthesize
+from repro.core.taskgraph import Kind, PipelineSpec, Task
+
+__all__ = [
+    "CostModel", "InjectionModel", "INJECTION_LEVELS", "JitterModel",
+    "multimodal_stage_flops", "DeadlockError", "Engine", "EngineConfig",
+    "RunResult", "average_makespan", "run_iteration", "HintArbiter",
+    "HintKind", "SynthesisResult", "ema_update_costs", "synthesize",
+    "Kind", "PipelineSpec", "Task",
+]

@@ -1,0 +1,198 @@
+"""Hint orders (§5, Appendix A) and fixed pre-committed execution orders.
+
+A hint order ranks *currently ready* candidates; it never forces waiting.  The
+same objects can also be consumed in ``PRECOMMITTED`` mode by the engine, which
+is how the 1F1B / GPipe / ZeroBubble baselines are expressed: an explicit
+per-stage task sequence that the stage must follow in order, waiting on any
+not-yet-ready entry.  That "one schedule, two consumption modes" contrast is
+the paper's central claim.
+"""
+from __future__ import annotations
+
+import dataclasses
+import enum
+from typing import Sequence
+
+from repro.core.taskgraph import Kind, PipelineSpec, Task
+
+
+class HintKind(enum.Enum):
+    BF = "bf"              # default: backward, then forward, each round
+    FB = "fb"              # forward, then backward, each round
+    B_PRIORITY = "b_priority"  # backward whenever any backward is ready
+    F_PRIORITY = "f_priority"  # forward whenever any forward is ready
+    BFW = "bfw"            # BF + weight-update tasks fill empty rounds
+
+
+def _within_direction_key(t: Task):
+    """Appendix A within-direction priority.
+
+    Forward prefers the *smaller* model-chunk index, backward the *larger*;
+    ties break on the smaller microbatch index.  (W inherits backward's rule.)
+    """
+    if t.kind == Kind.F:
+        return (t.chunk, t.mb)
+    return (-t.chunk, t.mb)
+
+
+def pick(ready: Sequence[Task], kind: Kind) -> Task | None:
+    """NextByPriority(L_r, Pi) restricted to one direction."""
+    cands = [t for t in ready if t.kind == kind]
+    if not cands:
+        return None
+    return min(cands, key=_within_direction_key)
+
+
+@dataclasses.dataclass
+class HintArbiter:
+    """Algorithm 1's arbitration: stateful round structure per stage.
+
+    ``last_dir`` implements the round alternation of the BF/FB hints: after a
+    B executes, the same round's F check runs next (and vice versa for FB).
+    """
+
+    hint: HintKind = HintKind.BF
+    last_dir: Kind | None = None
+
+    def select(self, ready: Sequence[Task]) -> Task | None:
+        """Return the dispatched task for the current ready set (or None)."""
+        order: tuple[Kind, ...]
+        if self.hint == HintKind.B_PRIORITY:
+            order = (Kind.B, Kind.F)
+        elif self.hint == HintKind.F_PRIORITY:
+            order = (Kind.F, Kind.B)
+        elif self.hint == HintKind.FB:
+            order = (Kind.B, Kind.F) if self.last_dir == Kind.F else (Kind.F, Kind.B)
+        elif self.hint in (HintKind.BF, HintKind.BFW):
+            order = (Kind.F, Kind.B) if self.last_dir == Kind.B else (Kind.B, Kind.F)
+        else:  # pragma: no cover
+            raise ValueError(self.hint)
+
+        for k in order:
+            t = pick(ready, k)
+            if t is not None:
+                if self.hint in (HintKind.BF, HintKind.FB, HintKind.BFW):
+                    self.last_dir = t.kind
+                return t
+        # Neither compute direction ready: BFW dispatches an available
+        # weight-update task, then returns to the next arbitration round.
+        if self.hint == HintKind.BFW:
+            return pick(ready, Kind.W)
+        return None
+
+    def reset(self) -> None:
+        self.last_dir = None
+
+
+# --------------------------------------------------------------------------
+# Fixed per-stage execution orders (pre-committed baselines + synthesis grid).
+# --------------------------------------------------------------------------
+
+def gpipe_order(spec: PipelineSpec, stage: int) -> list[Task]:
+    """All forwards, then all backwards (GPipe; also the DeepSpeed-like mode)."""
+    fs = [
+        Task(Kind.F, stage, j, c)
+        for c in range(spec.num_chunks)
+        for j in range(spec.num_microbatches)
+    ]
+    bs = [
+        Task(Kind.B, stage, j, c)
+        for c in reversed(range(spec.num_chunks))
+        for j in range(spec.num_microbatches)
+    ]
+    out = fs + bs
+    if spec.split_backward:
+        out += [
+            Task(Kind.W, stage, j, c)
+            for c in reversed(range(spec.num_chunks))
+            for j in range(spec.num_microbatches)
+        ]
+    return out
+
+
+def one_f_one_b_order(spec: PipelineSpec, stage: int) -> list[Task]:
+    """Standard non-interleaved 1F1B (PipeDream-flush / Megatron default).
+
+    Warmup: (S-1-s) forwards; steady state: alternate 1F/1B; cooldown: drain
+    backwards.  Only defined for num_chunks == 1.
+    """
+    if spec.num_chunks != 1:
+        raise NotImplementedError("interleaved 1F1B handled by synthesis")
+    S, M = spec.num_stages, spec.num_microbatches
+    warmup = min(S - 1 - stage, M)
+    order: list[Task] = [Task(Kind.F, stage, j) for j in range(warmup)]
+    nf, nb = warmup, 0
+    while nb < M:
+        if nf < M:
+            order.append(Task(Kind.F, stage, nf))
+            nf += 1
+        order.append(Task(Kind.B, stage, nb))
+        nb += 1
+    if spec.split_backward:
+        raise NotImplementedError("use zero_bubble_order for split backward")
+    return order
+
+
+def zero_bubble_order(spec: PipelineSpec, stage: int) -> list[Task]:
+    """ZB-H1-style fixed order: 1F1B over (F, B-dX) with W deferred.
+
+    W for microbatch j is scheduled as late as the memory argument allows:
+    early W fill the warmup-asymmetry bubbles, the rest drain in the cooldown.
+    This is the representative fixed-order ZB baseline of §7 (not a full ILP
+    ZB-V reimplementation).
+    """
+    if spec.num_chunks != 1:
+        raise NotImplementedError
+    if not spec.split_backward:
+        raise ValueError("zero_bubble_order requires split_backward=True")
+    S, M = spec.num_stages, spec.num_microbatches
+    warmup = min(S - 1 - stage, M)
+    order: list[Task] = [Task(Kind.F, stage, j) for j in range(warmup)]
+    nf, nb, nw = warmup, 0, 0
+    while nb < M:
+        if nf < M:
+            order.append(Task(Kind.F, stage, nf))
+            nf += 1
+        order.append(Task(Kind.B, stage, nb))
+        nb += 1
+        # ZB: defer W unless we've run out of F's to issue (cooldown), in
+        # which case W fills what would otherwise be a bubble slot.
+        if nf >= M and nw < nb - (S - 1 - stage):
+            order.append(Task(Kind.W, stage, nw))
+            nw += 1
+    while nw < M:
+        order.append(Task(Kind.W, stage, nw))
+        nw += 1
+    return order
+
+
+def modality_balanced_order(
+    spec: PipelineSpec, stage: int, stage_cost: Sequence[float]
+) -> list[Task]:
+    """Cornstarch-like baseline: cost-aware warmup depth, still pre-committed.
+
+    Uses per-stage relative cost to shift the warmup depth (heavier stages get
+    fewer in-flight microbatches), emulating a modality-aware planner that
+    still commits to its order ahead of execution.
+    """
+    if spec.num_chunks != 1:
+        raise NotImplementedError
+    S, M = spec.num_stages, spec.num_microbatches
+    rel = stage_cost[stage] / max(max(stage_cost), 1e-12)
+    warmup = min(max(1, round((S - 1 - stage) * (1.5 - rel))), M, S)
+    order: list[Task] = [Task(Kind.F, stage, j) for j in range(warmup)]
+    nf, nb = warmup, 0
+    while nb < M:
+        if nf < M:
+            order.append(Task(Kind.F, stage, nf))
+            nf += 1
+        order.append(Task(Kind.B, stage, nb))
+        nb += 1
+    return order
+
+
+FIXED_ORDERS = {
+    "gpipe": gpipe_order,
+    "1f1b": one_f_one_b_order,
+    "zb": zero_bubble_order,
+}

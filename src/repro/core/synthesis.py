@@ -1,0 +1,79 @@
+"""Readiness-driven schedule synthesis: the RRFP -> XLA bridge (DESIGN §2).
+
+On a TPU pod the per-tick behavior of every stage must be known at compile
+time, so the runtime cannot skip-and-retry at task granularity.  Instead we
+run the faithful RRFP engine over the *expected* cost model (optionally
+EMA-updated from measured step times — the paper's e_t estimator) and extract
+each stage's realized execution order.  That order is exactly what a
+readiness-first runtime would have dispatched; we then list-schedule it onto
+the executor's tick grid (one ring-permute hop per tick) to obtain a static
+``stage_orders`` table the compiled executor consumes as data — changing the
+table does not recompile.
+
+``synthesize`` returns per-stage task sequences; ``repro.pipeline.spec``
+converts them into a validated ScheduleTable.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.core.costs import CostModel
+from repro.core.engine import Engine, EngineConfig
+from repro.core.hints import HintKind
+from repro.core.taskgraph import PipelineSpec, Task
+
+
+@dataclasses.dataclass
+class SynthesisResult:
+    stage_orders: list[list[Task]]
+    sim_makespan: float
+    #: simulated makespan of pre-committed 1F1B on the same costs (baseline)
+    baseline_makespan: float
+
+    @property
+    def predicted_speedup(self) -> float:
+        return self.baseline_makespan / max(self.sim_makespan, 1e-12)
+
+
+def synthesize(
+    spec: PipelineSpec,
+    costs: CostModel,
+    hint: HintKind = HintKind.BF,
+    buffer_limit: int = 32,
+    use_expected_costs: bool = True,
+) -> SynthesisResult:
+    """Run the RRFP engine and extract per-stage orders for the executor."""
+    cm = costs.expected() if use_expected_costs else costs
+    rrfp = Engine(
+        spec, cm, EngineConfig(mode="hint", hint=hint, buffer_limit=buffer_limit)
+    ).run()
+    base = Engine(
+        spec,
+        cm,
+        EngineConfig(mode="precommitted", fixed_order="1f1b"),
+    ).run()
+    return SynthesisResult(
+        stage_orders=rrfp.stage_orders(),
+        sim_makespan=rrfp.makespan,
+        baseline_makespan=base.makespan,
+    )
+
+
+def ema_update_costs(
+    costs: CostModel,
+    measured_f: np.ndarray,
+    measured_b: np.ndarray,
+    decay: float = 0.9,
+) -> CostModel:
+    """Online cost refresh: e_t = decay*e_{t-1} + (1-decay)*c_t (RQ4's EMA).
+
+    Feeds straggler-aware re-synthesis: ``runtime.straggler`` calls this with
+    per-stage step timings, then ``synthesize`` re-plans without recompiling.
+    """
+    return dataclasses.replace(
+        costs,
+        f_cost=decay * costs.f_cost + (1 - decay) * np.asarray(measured_f),
+        b_cost=decay * costs.b_cost + (1 - decay) * np.asarray(measured_b),
+    )

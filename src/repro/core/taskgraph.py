@@ -1,0 +1,105 @@
+"""Pipeline task graph: the dependency-constrained execution process of §3.1.
+
+Tasks are forward (F), backward (B) and — under BFW decomposition — weight-update
+(W) units at (stage, microbatch, chunk) granularity.  Edges are the paper's
+inter-stage dependencies (F needs upstream activation, B needs downstream
+gradient) and intra-stage dependencies (B needs the local F; W needs the local
+B).  Interleaved (multi-chunk) pipelines wrap forward from the last stage back
+to stage 0 at chunk boundaries.
+"""
+from __future__ import annotations
+
+import dataclasses
+import enum
+from typing import Iterator
+
+
+class Kind(enum.IntEnum):
+    F = 0
+    B = 1
+    W = 2
+
+
+@dataclasses.dataclass(frozen=True, order=True)
+class Task:
+    """One schedulable unit of pipeline work."""
+
+    kind: Kind
+    stage: int
+    mb: int
+    chunk: int = 0
+
+    def __repr__(self) -> str:  # compact traces: F[s2,m5,c0]
+        return f"{self.kind.name}[s{self.stage},m{self.mb},c{self.chunk}]"
+
+
+@dataclasses.dataclass(frozen=True)
+class PipelineSpec:
+    """Static description of one training iteration's task graph."""
+
+    num_stages: int
+    num_microbatches: int
+    num_chunks: int = 1
+    split_backward: bool = False  # BFW: B computes dX only, W updates weights
+
+    def __post_init__(self) -> None:
+        if self.num_stages < 1 or self.num_microbatches < 1 or self.num_chunks < 1:
+            raise ValueError(f"invalid spec {self}")
+
+    # ---- enumeration -------------------------------------------------------
+    def tasks(self) -> Iterator[Task]:
+        for s in range(self.num_stages):
+            for j in range(self.num_microbatches):
+                for c in range(self.num_chunks):
+                    yield Task(Kind.F, s, j, c)
+                    yield Task(Kind.B, s, j, c)
+                    if self.split_backward:
+                        yield Task(Kind.W, s, j, c)
+
+    def num_tasks_per_stage(self) -> int:
+        per = 2 + (1 if self.split_backward else 0)
+        return per * self.num_microbatches * self.num_chunks
+
+    # ---- dependencies ------------------------------------------------------
+    def message_predecessor(self, t: Task) -> Task | None:
+        """The remote task whose *message* makes ``t`` ready (None = local/none).
+
+        Forward activations flow s-1 -> s (wrapping S-1 -> 0 across chunks);
+        backward gradients flow s+1 -> s (wrapping 0 -> S-1 across chunks).
+        """
+        s_last = self.num_stages - 1
+        if t.kind == Kind.F:
+            if t.stage > 0:
+                return Task(Kind.F, t.stage - 1, t.mb, t.chunk)
+            if t.chunk > 0:  # interleaved wrap
+                return Task(Kind.F, s_last, t.mb, t.chunk - 1)
+            return None  # stage 0, chunk 0: data is locally available
+        if t.kind == Kind.B:
+            if t.stage < s_last:
+                return Task(Kind.B, t.stage + 1, t.mb, t.chunk)
+            if t.chunk < self.num_chunks - 1:  # interleaved wrap
+                return Task(Kind.B, 0, t.mb, t.chunk + 1)
+            return None  # last stage, last chunk: loss gradient is local
+        # W depends only on the local B.
+        return None
+
+    def local_predecessor(self, t: Task) -> Task | None:
+        """Same-stage dependency that must have *executed* before ``t``."""
+        if t.kind == Kind.B:
+            return Task(Kind.F, t.stage, t.mb, t.chunk)
+        if t.kind == Kind.W:
+            return Task(Kind.B, t.stage, t.mb, t.chunk)
+        return None
+
+    def predecessors(self, t: Task) -> list[Task]:
+        out = []
+        m = self.message_predecessor(t)
+        if m is not None:
+            out.append(m)
+        l = self.local_predecessor(t)
+        if l is not None:
+            out.append(l)
+        return out
+
+    def total_tasks(self) -> int:
+        return self.num_stages * self.num_tasks_per_stage()

@@ -1,0 +1,7 @@
+"""Pallas TPU kernels for model hot spots + jit'd dispatch wrappers.
+
+Each kernel file pairs a ``pl.pallas_call`` + BlockSpec implementation with a
+pure-jnp oracle in ``ref.py``; ``ops.py`` is the public API used by the model
+zoo and switches between the XLA path (any backend, differentiable) and the
+Pallas path (TPU target; validated on CPU with interpret=True).
+"""

@@ -1,0 +1,108 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose ground truth)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def attention_ref(q, k, v, positions, causal: bool = True, window: int = 0):
+    """Dense-softmax reference attention.
+
+    q: [b, sq, hq, hd]; k, v: [b, sk, hkv, hd]; positions: [b, sq] absolute
+    query positions (key positions are arange(sk)).
+    """
+    b, sq, hq, hd = q.shape
+    _, sk, hkv, _ = k.shape
+    g = hq // hkv
+    qf = (q.astype(jnp.float32) * hd**-0.5).reshape(b, sq, hkv, g, hd)
+    s = jnp.einsum("bqkgd,bjkd->bkgqj", qf, k.astype(jnp.float32))
+    kpos = jnp.arange(sk)
+    mask = jnp.ones((b, sq, sk), jnp.bool_)
+    if causal:
+        mask &= positions[:, :, None] >= kpos[None, None, :]
+    if window > 0:
+        mask &= positions[:, :, None] - kpos[None, None, :] < window
+    s = jnp.where(mask[:, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgqj,bjkd->bkgqd", p, v.astype(jnp.float32))
+    return jnp.moveaxis(o, 3, 1).reshape(b, sq, hq, hd).astype(q.dtype)
+
+
+def decode_ref(q, k_cache, v_cache, lengths, window: int = 0):
+    """Single-token decode attention reference.
+
+    q: [b, 1, hq, hd]; caches: [b, S, hkv, hd]; lengths: [b].
+    """
+    b, _, hq, hd = q.shape
+    _, S, hkv, _ = k_cache.shape
+    g = hq // hkv
+    qf = (q.astype(jnp.float32) * hd**-0.5).reshape(b, hkv, g, hd)
+    s = jnp.einsum("bkgd,bjkd->bkgj", qf, k_cache.astype(jnp.float32))
+    pos = jnp.arange(S)[None, :]
+    mask = pos < lengths[:, None]
+    if window > 0:
+        mask &= pos >= lengths[:, None] - window
+    s = jnp.where(mask[:, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgj,bjkd->bkgd", p, v_cache.astype(jnp.float32))
+    return o.reshape(b, 1, hq, hd).astype(q.dtype)
+
+
+def ssd_ref(x, dt, A, B, C, D, chunk: int = 0):
+    """Sequential (exact) Mamba-2 SSD recurrence.
+
+    x: [b, s, nh, hd]; dt: [b, s, nh]; A: [nh] (negative); B, C: [b, s, ds];
+    D: [nh].  Returns y: [b, s, nh, hd].
+    State: h[nh, hd, ds];  h_t = exp(A*dt) h_{t-1} + dt * x_t B_t^T;
+    y_t = (h_t C_t) + D * x_t.
+    """
+    bsz, s, nh, hd = x.shape
+    ds = B.shape[-1]
+    xf = x.astype(jnp.float32)
+    dtf = dt.astype(jnp.float32)
+    Bf = B.astype(jnp.float32)
+    Cf = C.astype(jnp.float32)
+    Af = A.astype(jnp.float32)
+
+    def step(h, inp):
+        x_t, dt_t, b_t, c_t = inp  # [b,nh,hd], [b,nh], [b,ds], [b,ds]
+        decay = jnp.exp(Af[None, :] * dt_t)  # [b, nh]
+        upd = jnp.einsum("bnh,bs->bnhs", x_t * dt_t[..., None], b_t)
+        h = h * decay[..., None, None] + upd
+        y_t = jnp.einsum("bnhs,bs->bnh", h, c_t)
+        return h, y_t
+
+    h0 = jnp.zeros((bsz, nh, hd, ds), jnp.float32)
+    xs = (jnp.moveaxis(xf, 1, 0), jnp.moveaxis(dtf, 1, 0),
+          jnp.moveaxis(Bf, 1, 0), jnp.moveaxis(Cf, 1, 0))
+    _, ys = jax.lax.scan(step, h0, xs)
+    y = jnp.moveaxis(ys, 0, 1) + D.astype(jnp.float32)[None, None, :, None] * xf
+    return y.astype(x.dtype)
+
+
+def ssd_ref_with_state(x, dt, A, B, C, D):
+    """Like ``ssd_ref`` but also returns the final state (decode handoff)."""
+    bsz, s, nh, hd = x.shape
+    ds = B.shape[-1]
+    y = ssd_ref(x, dt, A, B, C, D)
+    # recompute final state
+    def step(h, inp):
+        x_t, dt_t, b_t = inp
+        decay = jnp.exp(A.astype(jnp.float32)[None, :] * dt_t)
+        upd = jnp.einsum("bnh,bs->bnhs", x_t * dt_t[..., None], b_t)
+        return h * decay[..., None, None] + upd, None
+    h0 = jnp.zeros((bsz, nh, hd, ds), jnp.float32)
+    xs = (jnp.moveaxis(x.astype(jnp.float32), 1, 0),
+          jnp.moveaxis(dt.astype(jnp.float32), 1, 0),
+          jnp.moveaxis(B.astype(jnp.float32), 1, 0))
+    h, _ = jax.lax.scan(step, h0, xs)
+    return y, h
+
+
+def rmsnorm_ref(x, scale, eps: float = 1e-5):
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    xf = xf * jax.lax.rsqrt(jnp.mean(xf * xf, axis=-1, keepdims=True) + eps)
+    return (xf * (1.0 + scale.astype(jnp.float32))).astype(dt)

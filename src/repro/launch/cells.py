@@ -1,0 +1,204 @@
+"""The (architecture × shape) dry-run matrix: input specs + step builders.
+
+``input_specs`` returns weak-type-correct ShapeDtypeStruct stand-ins for
+every model input (no allocation); ``build_cell`` wires model, schedule
+table, executor options and specs for one cell on a given mesh.
+
+Shape semantics (DESIGN §4):
+  train_4k / prefill_32k -> train_step;  decode_32k / long_500k -> serve_step
+  (one token against a seq_len KV cache).  long_500k runs only for
+  sub-quadratic archs (gemma3 local:global, zamba2, xlstm).  seamless
+  train splits the cell's seq_len into dec seq/2 + enc frames seq/2;
+  its decode uses an enc cross-cache of seq_len.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import registry
+from repro.core.taskgraph import PipelineSpec
+from repro.models.build import ArchModel, build
+from repro.models.common import SHAPES, ShapeCell
+from repro.pipeline import schedules
+from repro.pipeline.decode import DecodeOptions, cache_specs, make_serve_fn
+from repro.pipeline.executor import ExecOptions, make_train_fn
+from repro.pipeline.sharding import partition_for
+from repro.pipeline.spec import ScheduleTable
+
+#: archs whose optimizer/grad state must stay in bf16 to fit HBM
+_BF16_GRAD_ARCHS = {"grok-1-314b", "granite-34b", "qwen1.5-32b"}
+
+
+def cell_is_runnable(arch: str, shape: str) -> tuple[bool, str]:
+    cfg = registry.get_arch(arch)
+    cell = SHAPES[shape]
+    if shape == "long_500k" and not cfg.sub_quadratic:
+        return False, "pure full-attention arch: 524k context excluded (DESIGN §4)"
+    return True, ""
+
+
+def all_cells() -> list[tuple[str, str]]:
+    out = []
+    for arch in registry.ARCHS:
+        if arch.startswith("paper-"):
+            continue
+        for shape in SHAPES:
+            ok, _ = cell_is_runnable(arch, shape)
+            if ok:
+                out.append((arch, shape))
+    return out
+
+
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass
+class CellPlan:
+    arch: str
+    shape: str
+    model: ArchModel
+    cell: ShapeCell
+    step: str              # train | decode
+    dp_total: int
+    mb_rows: int
+    num_microbatches: int
+    seq_len: int           # decoder-token length per row
+    enc_len: int
+    sp_mode: bool
+    multi_pod: bool
+
+    @property
+    def tokens_per_step(self) -> int:
+        return self.cell.global_batch * (
+            self.seq_len if self.step == "train" else 1)
+
+
+def plan_cell(arch: str, shape: str, mesh, num_stages: int = 16) -> CellPlan:
+    cfg = registry.get_arch(arch)
+    cell = SHAPES[shape]
+    model = build(cfg, num_stages=num_stages)
+    multi_pod = "pod" in mesh.shape
+    dp_total = mesh.shape["data"] * (mesh.shape["pod"] if multi_pod else 1)
+    seq = cell.seq_len
+    enc_len = 0
+    if cfg.encoder_layers:
+        if cell.step == "train":
+            seq = cell.seq_len // 2
+            enc_len = cell.seq_len // 2
+        else:
+            seq = cell.seq_len
+            enc_len = cell.seq_len
+    if cell.step == "train":
+        rows = max(1, cell.global_batch // dp_total)
+        # microbatch rows of 1 maximize pipeline overlap (M = rows)
+        mb_rows = 1
+        M = rows
+        sp_mode = False
+    else:
+        sp_mode = cell.global_batch < dp_total  # long_500k: batch 1
+        if sp_mode:
+            mb_rows, M = cell.global_batch, 1
+        else:
+            rows = max(1, cell.global_batch // dp_total)
+            mb_rows = 1
+            M = rows
+    return CellPlan(
+        arch=arch, shape=shape, model=model, cell=cell, step=cell.step,
+        dp_total=dp_total, mb_rows=mb_rows, num_microbatches=M,
+        seq_len=seq, enc_len=enc_len, sp_mode=sp_mode, multi_pod=multi_pod,
+    )
+
+
+# ---------------------------------------------------------------------------
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def input_specs(plan: CellPlan) -> dict[str, Any]:
+    """ShapeDtypeStruct stand-ins for the global batch (train) or the decode
+    step inputs (decode)."""
+    cfg = plan.model.cfg
+    gb = plan.cell.global_batch
+    d = cfg.d_model
+    if plan.step == "train":
+        out = {
+            "tokens": _sds((gb, plan.seq_len), jnp.int32),
+            "labels": _sds((gb, plan.seq_len), jnp.int32),
+        }
+        if cfg.embed_input:
+            out["embeds"] = _sds((gb, plan.seq_len, d), jnp.float32)
+        if cfg.mrope:
+            out["mrope"] = _sds((3, gb, plan.seq_len), jnp.int32)
+        if cfg.encoder_layers:
+            out["enc_embeds"] = _sds((gb, plan.enc_len, d), jnp.float32)
+        return out
+    if cfg.embed_input:
+        return {"embeds": _sds((gb, 1, d), jnp.float32)}
+    return {"tokens": _sds((gb,), jnp.int32)}
+
+
+def cache_struct(plan: CellPlan):
+    """ShapeDtypeStruct pytree for the decode caches (global shapes)."""
+    model = plan.model
+    gb = plan.cell.global_batch
+    one = model.init_layer_cache(1, 1, enc_len=1)
+
+    def expand(path, leaf):
+        names = [getattr(p, "key", getattr(p, "name", "")) for p in path]
+        shape = list(leaf.shape)
+        shape[0] = gb
+        if names and names[-1] in ("k", "v"):
+            shape[1] = plan.cell.seq_len
+        if names and names[-1] in ("xk", "xv"):
+            shape[1] = plan.enc_len
+        return _sds((model.num_stages, model.l_max, *shape), leaf.dtype)
+
+    return jax.tree_util.tree_map_with_path(expand, one)
+
+
+# ---------------------------------------------------------------------------
+def build_cell(plan: CellPlan, mesh, schedule: str = "1f1b",
+               split_backward: bool = False):
+    """Returns (step_fn, arg_structs, batch_specs) ready to lower."""
+    model = plan.model
+    cfg = model.cfg
+    key = jax.random.key(0)
+    # params as ShapeDtypeStructs via eval_shape (no allocation)
+    sp_struct = jax.eval_shape(model.init_stage_params, key)
+    io_struct = jax.eval_shape(model.init_io_params, key)
+    partition = partition_for(model, sp_struct, io_struct)
+
+    grad_dtype = jnp.bfloat16 if plan.arch in _BF16_GRAD_ARCHS else jnp.float32
+
+    if plan.step == "train":
+        spec = PipelineSpec(model.num_stages, plan.num_microbatches,
+                            split_backward=split_backward)
+        if schedule == "rrfp":
+            table = schedules.rrfp(spec)
+        elif schedule == "zb":
+            table = schedules.zero_bubble(spec)
+        elif schedule == "gpipe":
+            table = schedules.gpipe(spec)
+        else:
+            table = schedules.one_f_one_b(spec)
+        opts = ExecOptions(
+            mb_rows=plan.mb_rows, seq_len=plan.seq_len, enc_len=plan.enc_len,
+            grad_dtype=grad_dtype,
+            loss_scale=1.0 / plan.tokens_per_step,
+            multi_pod=plan.multi_pod,
+        )
+        fn, batch_specs = make_train_fn(model, table, mesh, opts, partition)
+        return fn, (sp_struct, io_struct, input_specs(plan)), batch_specs
+
+    opts = DecodeOptions(
+        mb_rows=plan.mb_rows, cache_len=plan.cell.seq_len,
+        enc_len=plan.enc_len, sp_mode=plan.sp_mode, multi_pod=plan.multi_pod)
+    wrap, cspecs, batch_specs = make_serve_fn(
+        model, mesh, opts, num_groups=plan.num_microbatches)
+    fn = wrap(partition)
+    args = (sp_struct, io_struct, cache_struct(plan), input_specs(plan),
+            _sds((), jnp.int32))
+    return fn, args, batch_specs

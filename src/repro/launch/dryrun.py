@@ -1,0 +1,128 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (architecture × shape) cell on
+the production meshes and record memory/cost analyses.
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch granite-34b \
+        --shape train_4k [--multi-pod] [--schedule rrfp] [--out out.json]
+    PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod]
+
+The XLA_FLAGS line above MUST precede every other import (jax locks the
+device count at first init); this module is the only place the 512
+placeholder devices exist — tests and benchmarks see the real device.
+"""
+import argparse
+import json
+import re
+import time
+import traceback
+from collections import Counter
+
+import jax
+
+from repro.launch import cells as cells_lib
+from repro.launch.mesh import make_production_mesh
+
+COLLECTIVE_RE = re.compile(
+    r"\b(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)\b")
+
+
+def dryrun_cell(arch: str, shape: str, *, multi_pod: bool = False,
+                schedule: str = "1f1b", num_stages: int = 16,
+                keep_hlo: bool = False) -> dict:
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    plan = cells_lib.plan_cell(arch, shape, mesh, num_stages=num_stages)
+    fn, args, _ = cells_lib.build_cell(plan, mesh, schedule=schedule)
+    t0 = time.time()
+    lowered = jax.jit(fn).lower(*args)
+    t_lower = time.time() - t0
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    hlo = compiled.as_text()
+    colls = Counter(COLLECTIVE_RE.findall(hlo))
+    result = {
+        "arch": arch,
+        "shape": shape,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "schedule": schedule,
+        "step": plan.step,
+        "microbatches": plan.num_microbatches,
+        "lower_s": round(t_lower, 2),
+        "compile_s": round(t_compile, 2),
+        "memory": {
+            "argument_bytes": getattr(mem, "argument_size_in_bytes", None),
+            "output_bytes": getattr(mem, "output_size_in_bytes", None),
+            "temp_bytes": getattr(mem, "temp_size_in_bytes", None),
+            "generated_code_bytes": getattr(
+                mem, "generated_code_size_in_bytes", None),
+        },
+        "cost_raw": {
+            "flops": cost.get("flops"),
+            "bytes_accessed": cost.get("bytes accessed"),
+        },
+        "collectives": dict(colls),
+        "hlo_bytes": len(hlo),
+    }
+    if keep_hlo:
+        result["hlo"] = hlo
+    return result
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--schedule", default="1f1b",
+                    choices=["1f1b", "rrfp", "gpipe", "zb"])
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+
+    if args.all:
+        targets = cells_lib.all_cells()
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all"
+        ok, why = cells_lib.cell_is_runnable(args.arch, args.shape)
+        if not ok:
+            print(f"SKIP {args.arch} × {args.shape}: {why}")
+            return
+        targets = [(args.arch, args.shape)]
+
+    meshes = [args.multi_pod]
+    if args.both_meshes:
+        meshes = [False, True]
+
+    results = []
+    for arch, shape in targets:
+        for mp in meshes:
+            tag = f"{arch} × {shape} × {'2x16x16' if mp else '16x16'}"
+            try:
+                r = dryrun_cell(arch, shape, multi_pod=mp,
+                                schedule=args.schedule)
+                results.append(r)
+                print(f"OK   {tag}: compile={r['compile_s']}s "
+                      f"temp={r['memory']['temp_bytes']} "
+                      f"colls={r['collectives']}")
+            except Exception as e:  # noqa: BLE001 — report and continue
+                traceback.print_exc()
+                results.append({"arch": arch, "shape": shape,
+                                "mesh": "2x16x16" if mp else "16x16",
+                                "error": str(e)})
+                print(f"FAIL {tag}: {e}")
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(results, f, indent=1)
+    failed = [r for r in results if "error" in r]
+    print(f"\n{len(results) - len(failed)}/{len(results)} cells passed")
+    if failed:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

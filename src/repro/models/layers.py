@@ -1,0 +1,404 @@
+"""Transformer building blocks in pure JAX.
+
+Attention is implemented flash-style even on the XLA path: an online-softmax
+scan over KV blocks (``blocked_attention``) so that 32k-token prefill never
+materializes an S×S score matrix.  The Pallas kernels in ``repro.kernels``
+implement the same contract for the TPU hot path; ``repro.kernels.ops``
+dispatches between them.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.common import ArchConfig, dense_init
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+def rmsnorm(x, scale, eps: float = 1e-5):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    x = x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+    return (x * (1.0 + scale.astype(jnp.float32))).astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# RoPE / M-RoPE
+# ---------------------------------------------------------------------------
+def rope_freqs(head_dim: int, theta: float):
+    return 1.0 / (theta ** (np.arange(0, head_dim, 2) / head_dim))
+
+
+def apply_rope(x, positions, theta: float = 10_000.0):
+    """x: [b, s, h, hd]; positions: [b, s] (int)."""
+    hd = x.shape[-1]
+    freqs = jnp.asarray(rope_freqs(hd, theta), jnp.float32)  # [hd/2]
+    ang = positions[..., None].astype(jnp.float32) * freqs  # [b, s, hd/2]
+    cos, sin = jnp.cos(ang)[:, :, None, :], jnp.sin(ang)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def apply_mrope(x, positions3, theta: float = 10_000.0, sections=(16, 24, 24)):
+    """Qwen2-VL multimodal RoPE: positions3 [3, b, s] (t/h/w axes).
+
+    The rotary dimension is split into three sections, each rotated by its
+    own position stream.  ``sections`` are half-dim sizes summing to hd/2.
+    """
+    hd = x.shape[-1]
+    secs = np.asarray(sections, dtype=np.int64)
+    if secs.sum() * 2 != hd:  # reduced configs: rescale proportionally
+        secs = np.maximum(1, (secs * (hd // 2) / secs.sum()).astype(np.int64))
+        secs[-1] = hd // 2 - secs[:-1].sum()
+    freqs = jnp.asarray(rope_freqs(hd, theta), jnp.float32)  # [hd/2]
+    parts = np.concatenate([[0], np.cumsum(secs)])
+    ang_parts = []
+    for i in range(3):
+        f = freqs[parts[i] : parts[i + 1]]
+        ang_parts.append(positions3[i][..., None].astype(jnp.float32) * f)
+    ang = jnp.concatenate(ang_parts, axis=-1)  # [b, s, hd/2]
+    cos, sin = jnp.cos(ang)[:, :, None, :], jnp.sin(ang)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Blocked (flash-style) attention — XLA path
+# ---------------------------------------------------------------------------
+NEG_INF = -1e30
+
+
+def _block_mask(q_pos, k_pos, causal: bool, window: int):
+    m = jnp.ones((q_pos.shape[0], k_pos.shape[0]), jnp.bool_)
+    if causal:
+        m &= q_pos[:, None] >= k_pos[None, :]
+    if window > 0:
+        m &= q_pos[:, None] - k_pos[None, :] < window
+    return m
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(4, 5, 6))
+def blocked_attention(q, k, v, positions, causal=True, window=0, block=512):
+    """Online-softmax attention over KV blocks (flash-style, XLA path).
+
+    q: [b, sq, hq, hd]; k, v: [b, sk, hkv, hd]; positions: [b, sq] absolute
+    query positions (for decode, the current position).  GQA: hq % hkv == 0.
+    Custom VJP: forward saves only (q, k, v, out, lse); backward streams over
+    KV blocks recomputing p from the saved log-sum-exp — O(s·d) residency
+    instead of the O(s²) scan residuals naive autodiff would save.
+    """
+    out, _ = _blocked_attention_fwd_impl(q, k, v, positions, causal, window,
+                                         block)
+    return out
+
+
+def _blocked_attention_fwd_impl(q, k, v, positions, causal, window, block):
+    b, sq, hq, hd = q.shape
+    _, sk, hkv, _ = k.shape
+    g = hq // hkv
+    scale = hd ** -0.5
+    qf = (q * scale).astype(q.dtype).reshape(b, sq, hkv, g, hd)
+    qf = jnp.einsum("bqkgd->bkgqd", qf)
+    nblk = -(-sk // block)
+    pad = nblk * block - sk
+    kf = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    vf = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    kf = kf.reshape(b, nblk, block, hkv, hd)
+    vf = vf.reshape(b, nblk, block, hkv, hd)
+    q_pos = positions  # [b, sq]
+
+    def body(carry, blk):
+        m_i, l_i, acc = carry
+        k_b, v_b, kpos_b = blk  # [b, block, hkv, hd], [block]
+        s = jnp.einsum("bkgqd,bjkd->bkgqj", qf, k_b,
+                       preferred_element_type=jnp.float32)
+        mask = _stream_mask(q_pos, kpos_b, causal, window, sk)
+        s = jnp.where(mask[:, None, None], s, NEG_INF)
+        m_new = jnp.maximum(m_i, s.max(-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m_i - m_new)
+        l_new = l_i * corr + p.sum(-1)
+        acc = acc * corr[..., None] + jnp.einsum(
+            "bkgqj,bjkd->bkgqd", p.astype(v_b.dtype), v_b,
+            preferred_element_type=jnp.float32)
+        return (m_new, l_new, acc), None
+
+    m0 = jnp.full((b, hkv, g, sq), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((b, hkv, g, sq), jnp.float32)
+    a0 = jnp.zeros((b, hkv, g, sq, hd), jnp.float32)
+    kf_t = jnp.moveaxis(kf, 1, 0)
+    vf_t = jnp.moveaxis(vf, 1, 0)
+    kpos = jnp.arange(nblk * block).reshape(nblk, block)
+    (m_f, l_f, acc), _ = jax.lax.scan(body, (m0, l0, a0), (kf_t, vf_t, kpos))
+    l_safe = jnp.maximum(l_f, 1e-30)
+    out = acc / l_safe[..., None]
+    lse = m_f + jnp.log(l_safe)  # [b, hkv, g, sq]
+    out = jnp.moveaxis(out, 3, 1).reshape(b, sq, hq, hd)
+    return out.astype(q.dtype), lse
+
+
+def _stream_mask(q_pos, kpos_b, causal, window, sk):
+    b, sq = q_pos.shape
+    block = kpos_b.shape[0]
+    mask = (q_pos[:, :, None] >= kpos_b[None, None, :]) if causal else (
+        jnp.ones((b, sq, block), jnp.bool_))
+    if window > 0:
+        mask &= q_pos[:, :, None] - kpos_b[None, None, :] < window
+    mask &= (kpos_b < sk)[None, None, :]
+    return mask
+
+
+def _blocked_attention_fwd(q, k, v, positions, causal, window, block):
+    out, lse = _blocked_attention_fwd_impl(q, k, v, positions, causal, window,
+                                           block)
+    return out, (q, k, v, positions, out, lse)
+
+
+def _blocked_attention_bwd(causal, window, block, res, dout):
+    q, k, v, positions, out, lse = res
+    b, sq, hq, hd = q.shape
+    _, sk, hkv, _ = k.shape
+    g = hq // hkv
+    scale = hd ** -0.5
+    qf = jnp.einsum(
+        "bqkgd->bkgqd", (q * scale).astype(q.dtype).reshape(b, sq, hkv, g, hd))
+    do = jnp.einsum("bqkgd->bkgqd", dout.reshape(b, sq, hkv, g, hd))
+    of = jnp.einsum("bqkgd->bkgqd", out.reshape(b, sq, hkv, g, hd))
+    delta = jnp.sum(do.astype(jnp.float32) * of.astype(jnp.float32),
+                    axis=-1)  # [b, hkv, g, sq]
+    nblk = -(-sk // block)
+    pad = nblk * block - sk
+    kf = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    vf = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    kf = jnp.moveaxis(kf.reshape(b, nblk, block, hkv, hd), 1, 0)
+    vf = jnp.moveaxis(vf.reshape(b, nblk, block, hkv, hd), 1, 0)
+    kpos = jnp.arange(nblk * block).reshape(nblk, block)
+    q_pos = positions
+
+    def body(dq_acc, blk):
+        k_b, v_b, kpos_b = blk
+        s = jnp.einsum("bkgqd,bjkd->bkgqj", qf, k_b,
+                       preferred_element_type=jnp.float32)
+        mask = _stream_mask(q_pos, kpos_b, causal, window, sk)
+        p = jnp.where(mask[:, None, None], jnp.exp(s - lse[..., None]), 0.0)
+        p_c = p.astype(k_b.dtype)
+        dv_b = jnp.einsum("bkgqj,bkgqd->bjkd", p_c, do,
+                          preferred_element_type=jnp.float32)
+        dp = jnp.einsum("bkgqd,bjkd->bkgqj", do, v_b,
+                        preferred_element_type=jnp.float32)
+        ds = (p * (dp - delta[..., None])).astype(k_b.dtype)
+        dq_acc = dq_acc + jnp.einsum("bkgqj,bjkd->bkgqd", ds, k_b,
+                                     preferred_element_type=jnp.float32)
+        dk_b = jnp.einsum("bkgqj,bkgqd->bjkd", ds, qf,
+                          preferred_element_type=jnp.float32)
+        return dq_acc, (dk_b, dv_b)
+
+    dq0 = jnp.zeros((b, hkv, g, sq, hd), jnp.float32)
+    dq, (dk_blocks, dv_blocks) = jax.lax.scan(body, dq0, (kf, vf, kpos))
+    dq = (jnp.moveaxis(dq, 3, 1).reshape(b, sq, hq, hd) * scale).astype(q.dtype)
+    dk = jnp.moveaxis(dk_blocks, 0, 1).reshape(b, nblk * block, hkv, hd)
+    dv = jnp.moveaxis(dv_blocks, 0, 1).reshape(b, nblk * block, hkv, hd)
+    dk = dk[:, :sk].astype(k.dtype)
+    dv = dv[:, :sk].astype(v.dtype)
+    return dq, dk, dv, None
+
+
+blocked_attention.defvjp(_blocked_attention_fwd, _blocked_attention_bwd)
+
+
+def decode_attention(q, k_cache, v_cache, lengths, window: int = 0):
+    """Single-position attention against a cache.
+
+    q: [b, 1, hq, hd]; caches: [b, S, hkv, hd]; lengths: [b] valid lengths.
+    """
+    b, _, hq, hd = q.shape
+    _, S, hkv, _ = k_cache.shape
+    g = hq // hkv
+    qf = (q.astype(jnp.float32) * hd**-0.5).reshape(b, hkv, g, hd)
+    s = jnp.einsum("bkgd,bjkd->bkgj", qf, k_cache.astype(jnp.float32))
+    pos = jnp.arange(S)[None, :]
+    mask = pos < lengths[:, None]
+    if window > 0:
+        mask &= pos >= (lengths[:, None] - window)
+    s = jnp.where(mask[:, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgj,bjkd->bkgd", p, v_cache.astype(jnp.float32))
+    return out.reshape(b, 1, hq, hd).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Attention block (GQA, optional bias / sliding window / M-RoPE)
+# ---------------------------------------------------------------------------
+def init_attention(keys, cfg: ArchConfig, cross: bool = False) -> dict:
+    d, hd = cfg.d_model, cfg.resolved_head_dim
+    nq, nkv = cfg.num_heads, cfg.num_kv_heads
+    p = {
+        "wq": dense_init(next(keys), (d, nq * hd), cfg.dtype),
+        "wk": dense_init(next(keys), (d, nkv * hd), cfg.dtype),
+        "wv": dense_init(next(keys), (d, nkv * hd), cfg.dtype),
+        "wo": dense_init(next(keys), (nq * hd, d), cfg.dtype),
+    }
+    if cfg.qkv_bias and not cross:
+        p["bq"] = jnp.zeros((nq * hd,), cfg.dtype)
+        p["bk"] = jnp.zeros((nkv * hd,), cfg.dtype)
+        p["bv"] = jnp.zeros((nkv * hd,), cfg.dtype)
+    return p
+
+
+def attention_qkv(p, x, kv_src, cfg: ArchConfig):
+    b, s, _ = x.shape
+    nq, nkv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
+    q = x @ p["wq"]
+    k = kv_src @ p["wk"]
+    v = kv_src @ p["wv"]
+    if "bq" in p:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    q = q.reshape(b, s, nq, hd)
+    k = k.reshape(b, kv_src.shape[1], nkv, hd)
+    v = v.reshape(b, kv_src.shape[1], nkv, hd)
+    return q, k, v
+
+
+def attention_block(p, x, positions, cfg: ArchConfig, *, causal=True, window=0,
+                    mrope_pos=None, kv_src=None, rope: bool = True):
+    """Self- (or cross-) attention sub-block, pre-norm residual handled by caller."""
+    kv_src = x if kv_src is None else kv_src
+    q, k, v = attention_qkv(p, x, kv_src, cfg)
+    if rope:
+        if cfg.mrope and mrope_pos is not None:
+            q = apply_mrope(q, mrope_pos, cfg.rope_theta)
+            k = apply_mrope(k, mrope_pos, cfg.rope_theta)
+        else:
+            kv_positions = positions if kv_src is x else jnp.broadcast_to(
+                jnp.arange(kv_src.shape[1])[None], kv_src.shape[:2])
+            q = apply_rope(q, positions, cfg.rope_theta)
+            k = apply_rope(k, kv_positions, cfg.rope_theta)
+    from repro.kernels import ops  # late import; dispatches XLA vs Pallas
+    o = ops.flash_attention(q, k, v, positions, causal=causal, window=window)
+    b, s = x.shape[:2]
+    return o.reshape(b, s, -1) @ p["wo"]
+
+
+# ---------------------------------------------------------------------------
+# FFN
+# ---------------------------------------------------------------------------
+def init_ffn(keys, cfg: ArchConfig, d_ff: int | None = None) -> dict:
+    d = cfg.d_model
+    f = d_ff or cfg.d_ff
+    if cfg.act in ("swiglu", "geglu"):
+        return {
+            "wi": dense_init(next(keys), (d, f), cfg.dtype),
+            "wg": dense_init(next(keys), (d, f), cfg.dtype),
+            "wo": dense_init(next(keys), (f, d), cfg.dtype),
+        }
+    return {
+        "wi": dense_init(next(keys), (d, f), cfg.dtype),
+        "wo": dense_init(next(keys), (f, d), cfg.dtype),
+    }
+
+
+def ffn_block(p, x, act: str):
+    h = x @ p["wi"]
+    if act == "swiglu":
+        h = jax.nn.silu(x @ p["wg"]) * h
+    elif act == "geglu":
+        h = jax.nn.gelu(x @ p["wg"]) * h
+    else:
+        h = jax.nn.gelu(h)
+    return h @ p["wo"]
+
+
+# ---------------------------------------------------------------------------
+# Standard decoder layer (attn + ffn, pre-norm)
+# ---------------------------------------------------------------------------
+def init_decoder_layer(keys, cfg: ArchConfig, d_ff: int | None = None) -> dict:
+    return {
+        "ln1": jnp.zeros((cfg.d_model,), cfg.dtype),
+        "attn": init_attention(keys, cfg),
+        "ln2": jnp.zeros((cfg.d_model,), cfg.dtype),
+        "ffn": init_ffn(keys, cfg, d_ff),
+    }
+
+
+def decoder_layer(p, x, positions, cfg: ArchConfig, *, causal=True, window=0,
+                  mrope_pos=None):
+    h = rmsnorm(x, p["ln1"], cfg.norm_eps)
+    x = x + attention_block(p["attn"], h, positions, cfg, causal=causal,
+                            window=window, mrope_pos=mrope_pos)
+    h = rmsnorm(x, p["ln2"], cfg.norm_eps)
+    return x + ffn_block(p["ffn"], h, cfg.act)
+
+
+# ---------------------------------------------------------------------------
+# KV-cache decode variants
+# ---------------------------------------------------------------------------
+def decode_attention_block(p, x, cache, pos, cfg: ArchConfig, window=0,
+                           axis_name: str | None = None):
+    """One-token attention with cache update.
+
+    cache: dict(k=[b,S,hkv,hd], v=[b,S,hkv,hd]); pos: [] scalar current index.
+    If ``axis_name`` is set the cache's S dim is sharded over that axis
+    (sequence parallelism for long_500k) and softmax is combined with psum.
+    """
+    b = x.shape[0]
+    positions = jnp.full((b, 1), pos, jnp.int32)
+    q, k_new, v_new = attention_qkv(p, x, x, cfg)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k_new = apply_rope(k_new, positions, cfg.rope_theta)
+
+    if axis_name is None:
+        k_cache = jax.lax.dynamic_update_slice(cache["k"], k_new, (0, pos, 0, 0))
+        v_cache = jax.lax.dynamic_update_slice(cache["v"], v_new, (0, pos, 0, 0))
+        lengths = jnp.full((b,), pos + 1, jnp.int32)
+        o = decode_attention(q, k_cache, v_cache, lengths, window=window)
+    else:
+        # Sequence-parallel cache: shard_size rows per device.
+        shard = cache["k"].shape[1]
+        idx = jax.lax.axis_index(axis_name)
+        local_pos = pos - idx * shard
+        in_range = (local_pos >= 0) & (local_pos < shard)
+        upd_pos = jnp.clip(local_pos, 0, shard - 1)
+        k_upd = jax.lax.dynamic_update_slice(cache["k"], k_new, (0, upd_pos, 0, 0))
+        v_upd = jax.lax.dynamic_update_slice(cache["v"], v_new, (0, upd_pos, 0, 0))
+        k_cache = jnp.where(in_range, k_upd, cache["k"])
+        v_cache = jnp.where(in_range, v_upd, cache["v"])
+        # distributed flash-decode: local partial softmax + psum combine
+        hkv = k_cache.shape[2]
+        hd = k_cache.shape[3]
+        g = q.shape[2] // hkv
+        qf = (q.astype(jnp.float32) * hd**-0.5).reshape(b, hkv, g, hd)
+        s = jnp.einsum("bkgd,bjkd->bkgj", qf, k_cache.astype(jnp.float32))
+        kpos = idx * shard + jnp.arange(shard)
+        mask = kpos[None, :] <= pos
+        if window > 0:
+            mask &= kpos[None, :] > pos - window
+        s = jnp.where(mask[:, None, None], s, NEG_INF)
+        m_loc = s.max(-1)
+        m_glob = jax.lax.pmax(m_loc, axis_name)
+        p_ = jnp.exp(s - m_glob[..., None])
+        num = jnp.einsum("bkgj,bjkd->bkgd", p_, v_cache.astype(jnp.float32))
+        den = p_.sum(-1)
+        num = jax.lax.psum(num, axis_name)
+        den = jax.lax.psum(den, axis_name)
+        o = (num / jnp.maximum(den[..., None], 1e-30)).reshape(b, 1, -1)
+        o = o.astype(x.dtype)
+    o = o.reshape(b, 1, -1) @ p["wo"]
+    return o, {"k": k_cache, "v": v_cache}
+
+
+def decoder_layer_decode(p, x, cache, pos, cfg: ArchConfig, window=0,
+                         axis_name=None):
+    h = rmsnorm(x, p["ln1"], cfg.norm_eps)
+    a, cache = decode_attention_block(p["attn"], h, cache, pos, cfg,
+                                      window=window, axis_name=axis_name)
+    x = x + a
+    h = rmsnorm(x, p["ln2"], cfg.norm_eps)
+    return x + ffn_block(p["ffn"], h, cfg.act), cache

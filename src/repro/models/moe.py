@@ -1,0 +1,158 @@
+"""Mixture-of-Experts layers with static-capacity dispatch.
+
+Two distributed layouts over the ``data`` mesh axis (DESIGN §3):
+
+* ``ep``  — true expert parallelism (deepseek-moe: 64 experts / 16 devices =
+            4 per device), token exchange via all_to_all.
+* ``tp``  — expert-FFN tensor parallelism on d_ff (grok-1: 8 experts < 16
+            devices), token all-gather + partial compute + reduce-scatter.
+* ``none``— single-device / smoke-test path.
+
+Dispatch is scatter-based (position-in-expert via cumsum of the one-hot
+assignment), never one-hot-matmul, so dispatch FLOPs stay linear in tokens —
+this keeps the compiled roofline compute term honest.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.ad_checkpoint import checkpoint_name
+
+from repro.models.common import ArchConfig, dense_init
+from repro.models.layers import ffn_block, init_ffn
+
+
+def init_moe_ffn(keys, cfg: ArchConfig) -> dict:
+    moe = cfg.moe
+    d, f = cfg.d_model, cfg.d_ff
+    e = moe.num_experts
+    glu = cfg.act in ("swiglu", "geglu")
+    p = {
+        "router": dense_init(next(keys), (d, e), jnp.float32),
+        "wi": dense_init(next(keys), (e, d, f), cfg.dtype),
+        "wo": dense_init(next(keys), (e, f, d), cfg.dtype),
+    }
+    if glu:
+        p["wg"] = dense_init(next(keys), (e, d, f), cfg.dtype)
+    for i in range(moe.num_shared):
+        p[f"shared{i}"] = init_ffn(keys, cfg)
+    return p
+
+
+def _route(x2, router, top_k: int):
+    """x2: [T, d] -> (weights [T, k], experts [T, k]) with softmax-over-topk."""
+    logits = x2.astype(jnp.float32) @ router  # [T, E]
+    w, idx = jax.lax.top_k(logits, top_k)
+    w = jax.nn.softmax(w, axis=-1)
+    return w, idx
+
+
+def _dispatch(x2, idx, capacity: int, num_experts: int):
+    """Scatter tokens into [E, C, d] expert buffers.
+
+    Returns (buffers, slot [T, k], valid [T, k]).  Over-capacity tokens are
+    dropped (standard static-capacity semantics).
+    """
+    T, k = idx.shape
+    flat_e = idx.reshape(-1)  # [T*k]
+    onehot = jax.nn.one_hot(flat_e, num_experts, dtype=jnp.int32)  # [T*k, E]
+    pos = jnp.cumsum(onehot, axis=0) - 1  # position within expert
+    slot = jnp.take_along_axis(pos, flat_e[:, None], axis=1)[:, 0]  # [T*k]
+    valid = slot < capacity
+    slot_c = jnp.where(valid, slot, capacity - 1)
+    buffers = jnp.zeros((num_experts, capacity, x2.shape[1]), x2.dtype)
+    tok = jnp.repeat(jnp.arange(T), k)
+    buffers = buffers.at[flat_e, slot_c].add(
+        jnp.where(valid[:, None], x2[tok], 0).astype(x2.dtype)
+    )
+    return buffers, slot_c.reshape(T, k), valid.reshape(T, k)
+
+
+def _combine(out_buffers, idx, slot, valid, weights):
+    """Gather expert outputs back to tokens and mix with router weights."""
+    T, k = idx.shape
+    gathered = out_buffers[idx.reshape(-1), slot.reshape(-1)]  # [T*k, d]
+    gathered = gathered.reshape(T, k, -1)
+    w = (weights * valid).astype(gathered.dtype)
+    return jnp.einsum("tkd,tk->td", gathered, w)
+
+
+def _expert_ffn(p, buffers, act: str, slot_range=None):
+    """buffers: [E(, ...), C, d] -> same shape through per-expert GLU FFN."""
+    wi, wo = p["wi"], p["wo"]
+    h = jnp.einsum("ecd,edf->ecf", buffers, wi)
+    if "wg" in p:
+        g = jnp.einsum("ecd,edf->ecf", buffers, p["wg"])
+        h = jax.nn.silu(g) * h if act == "swiglu" else jax.nn.gelu(g) * h
+    else:
+        h = jax.nn.gelu(h)
+    return jnp.einsum("ecf,efd->ecd", h, wo)
+
+
+def moe_ffn(p, x, cfg: ArchConfig, *, layout: str = "none",
+            axis_name: str = "data", axis_size: int = 1):
+    """x: [b, s, d] -> [b, s, d].
+
+    layout "ep": p["wi"/"wg"/"wo"] hold the *local* expert shard [E/axis, d, f]
+    and tokens travel via all_to_all.  layout "tp": they hold the f shard
+    [E, d, f/axis] and activations travel via all-gather/reduce-scatter.
+    """
+    moe = cfg.moe
+    b, s, d = x.shape
+    x2 = x.reshape(-1, d)
+    T = x2.shape[0]
+    w, idx = _route(x2, p["router"], moe.top_k)
+
+    if layout == "none":
+        capacity = max(1, int(T * moe.top_k / moe.num_experts * moe.capacity_factor))
+        buffers, slot, valid = _dispatch(x2, idx, capacity, moe.num_experts)
+        out_buf = _expert_ffn(p, buffers, cfg.act)
+        y = _combine(out_buf, idx, slot, valid, w)
+
+    elif layout == "ep":
+        # local experts: E_local = E / axis_size; capacity covers the worst
+        # per-device load after exchange.
+        e_local = moe.num_experts // axis_size
+        capacity = max(1, int(T * moe.top_k / moe.num_experts * moe.capacity_factor))
+        buffers, slot, valid = _dispatch(x2, idx, capacity, moe.num_experts)
+        # [E, C, d] -> all_to_all: each device keeps its e_local experts,
+        # gathering every peer's contribution for them.
+        buffers = buffers.reshape(axis_size, e_local, capacity, d)
+        buffers = jax.lax.all_to_all(buffers, axis_name, 0, 0, tiled=False)
+        # [axis, e_local, C, d]: leading dim = sending peer.  Saved under
+        # the executor's remat policy so the B pass does not re-issue the
+        # forward all_to_all (EXPERIMENTS §Perf, deepseek-moe iteration).
+        eb = jnp.moveaxis(buffers, 0, 1).reshape(e_local, axis_size * capacity, d)
+        eb = checkpoint_name(eb, "moe_dispatched")
+        out = _expert_ffn(
+            {k: p[k] for k in ("wi", "wo", *(["wg"] if "wg" in p else []))},
+            eb, cfg.act)
+        out = jnp.moveaxis(out.reshape(e_local, axis_size, capacity, d), 1, 0)
+        out = jax.lax.all_to_all(out, axis_name, 0, 0, tiled=False)
+        out_buf = out.reshape(moe.num_experts, capacity, d)
+        y = _combine(out_buf, idx, slot, valid, w)
+
+    elif layout == "tp":
+        # f-sharded experts: all peers' tokens fold into the capacity dim,
+        # compute against the local f-slice, reduce-scatter the partials.
+        capacity = max(1, int(T * moe.top_k / moe.num_experts * moe.capacity_factor))
+        buffers, slot, valid = _dispatch(x2, idx, capacity, moe.num_experts)
+        gathered = jax.lax.all_gather(buffers, axis_name, tiled=False)
+        # [axis, E, C, d] -> [E, axis*C, d]
+        ge = jnp.moveaxis(gathered, 0, 1).reshape(
+            moe.num_experts, axis_size * capacity, d)
+        pp = {"wi": p["wi"], "wo": p["wo"]}
+        if "wg" in p:
+            pp["wg"] = p["wg"]
+        out = _expert_ffn(pp, ge, cfg.act)  # partial sums (f-shard)
+        out = jnp.moveaxis(
+            out.reshape(moe.num_experts, axis_size, capacity, d), 1, 0)
+        out_buf = jax.lax.psum_scatter(out, axis_name, scatter_dimension=0,
+                                       tiled=False)
+        y = _combine(out_buf, idx, slot, valid, w)
+    else:
+        raise ValueError(layout)
+
+    for i in range(cfg.moe.num_shared):
+        y = y + ffn_block(p[f"shared{i}"], x2, cfg.act)
+    return y.reshape(b, s, d).astype(x.dtype)

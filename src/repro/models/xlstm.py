@@ -1,0 +1,308 @@
+"""xLSTM blocks (mLSTM matrix-memory + sLSTM scalar-memory) in pure JAX.
+
+mLSTM trains with the stabilized parallel (quadratic) form and decodes with
+the O(1) recurrent state (C [hd, hd], n [hd], m scalar per head) — so
+long_500k decode is sequence-length-free.  sLSTM is inherently sequential
+(recurrent weights) and trains with a lax.scan over time.
+
+Layer pattern follows the paper's xLSTM[7:1] notation: 7 mLSTM per 1 sLSTM.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import ArchConfig, dense_init
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+def init_mlstm_layer(keys, cfg: ArchConfig) -> dict:
+    d = cfg.d_model
+    return {
+        "ln": jnp.zeros((d,), cfg.dtype),
+        "wq": dense_init(next(keys), (d, d), cfg.dtype),
+        "wk": dense_init(next(keys), (d, d), cfg.dtype),
+        "wv": dense_init(next(keys), (d, d), cfg.dtype),
+        "wi": dense_init(next(keys), (d, cfg.num_heads), cfg.dtype),  # input gate
+        "wf": dense_init(next(keys), (d, cfg.num_heads), cfg.dtype),  # forget gate
+        "bi": jnp.zeros((cfg.num_heads,), jnp.float32),
+        "bf": jnp.full((cfg.num_heads,), 3.0, jnp.float32),  # open at init
+        "gate_ln": jnp.zeros((d,), cfg.dtype),
+        "wo": dense_init(next(keys), (d, d), cfg.dtype),
+    }
+
+
+def _mlstm_gates(p, h):
+    """h: [b, s, d] -> (log_i, log_f): [b, s, nh] in fp32."""
+    i_pre = (h @ p["wi"]).astype(jnp.float32) + p["bi"]
+    f_pre = (h @ p["wf"]).astype(jnp.float32) + p["bf"]
+    log_f = -jax.nn.softplus(-f_pre)  # log sigmoid(f): stable
+    return i_pre, log_f
+
+
+def mlstm_parallel(q, k, v, i_pre, log_f):
+    """Stabilized parallel mLSTM.
+
+    q,k,v: [b, s, nh, hd]; i_pre, log_f: [b, s, nh].
+    D[t,j] = sum_{j<u<=t} log_f[u] + i_pre[j]  (j <= t), -inf otherwise;
+    h_t = sum_j exp(D[t,j] - m_t) (q_t . k_j / sqrt(hd)) v_j
+          / max(|sum_j exp(D-m) q.k|, exp(-m_t)).
+    """
+    b, s, nh, hd = q.shape
+    qf = q.astype(jnp.float32) * hd**-0.5
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    cum_f = jnp.cumsum(log_f, axis=1)  # [b, s, nh]
+    # D[t,j] = cum_f[t] - cum_f[j] + i_pre[j]
+    dmat = (
+        cum_f[:, :, None, :] - cum_f[:, None, :, :] + i_pre[:, None, :, :]
+    )  # [b, t, j, nh]
+    tt = jnp.arange(s)
+    mask = tt[:, None] >= tt[None, :]
+    dmat = jnp.where(mask[None, :, :, None], dmat, -jnp.inf)
+    m = jnp.max(dmat, axis=2)  # [b, t, nh] row stabilizer
+    w = jnp.exp(dmat - m[:, :, None, :])  # [b, t, j, nh]
+    scores = jnp.einsum("btnd,bjnd->btjn", qf, kf) * w
+    num = jnp.einsum("btjn,bjnd->btnd", scores, vf)
+    den = jnp.abs(scores.sum(axis=2))  # [b, t, nh]
+    den = jnp.maximum(den, jnp.exp(-m))
+    return (num / den[..., None]).astype(q.dtype)
+
+
+def mlstm_chunked(q, k, v, i_pre, log_f, chunk: int = 128):
+    """Chunkwise-stabilized mLSTM: intra-chunk quadratic + inter-chunk
+    (C, n, m) state passing — O(s·chunk) memory, matches ``mlstm_parallel``.
+
+    The stabilizer recurrence m_t = max(a_t + m_{t-1}, i_t) unrolls to
+    m_t = max_j (A_t - A_j + i_j) over j <= t; across chunk boundaries the
+    earlier-j part is folded into m_prev + A_t.
+    """
+    b, s, nh, hd = q.shape
+    pad = (-s) % chunk
+    if pad:
+        z4 = ((0, 0), (0, pad), (0, 0), (0, 0))
+        z3 = ((0, 0), (0, pad), (0, 0))
+        q = jnp.pad(q, z4)
+        k = jnp.pad(k, z4)
+        v = jnp.pad(v, z4)
+        i_pre = jnp.pad(i_pre, z3, constant_values=NEG_INF_GATE)
+        log_f = jnp.pad(log_f, z3)
+    sp = q.shape[1]
+    nc = sp // chunk
+    qf = (q.astype(jnp.float32) * hd**-0.5).reshape(b, nc, chunk, nh, hd)
+    kf = k.astype(jnp.float32).reshape(b, nc, chunk, nh, hd)
+    vf = v.astype(jnp.float32).reshape(b, nc, chunk, nh, hd)
+    ip = i_pre.reshape(b, nc, chunk, nh)
+    lf = log_f.reshape(b, nc, chunk, nh)
+    A = jnp.cumsum(lf, axis=2)  # inclusive within-chunk cum log-forget
+    A_last = A[:, :, -1]  # [b, nc, nh]
+
+    # ---- intra-chunk quantities -----------------------------------------
+    # D[t,j] = A_t - A_j + i_j (j <= t)
+    dmat = A[:, :, :, None, :] - A[:, :, None, :, :] + ip[:, :, None, :, :]
+    tt = jnp.arange(chunk)
+    tri = tt[:, None] >= tt[None, :]
+    dmat = jnp.where(tri[None, None, :, :, None], dmat, -jnp.inf)
+    m_intra = jnp.max(dmat, axis=3)  # [b, nc, Q, nh]
+    # per-chunk boundary input magnitude: max_j (A_last - A_j + i_j)
+    m_in = jnp.max(A_last[:, :, None, :] - A + ip, axis=2)  # [b, nc, nh]
+
+    # ---- inter-chunk state scan ------------------------------------------
+    def scan_fn(carry, inp):
+        C, n, m = carry  # scaled by exp(-m)
+        a_last, m_in_c, kc, vc, Ac, ipc = inp
+        m_out = carry[2]
+        # emit state entering this chunk
+        emit = (C, n, m)
+        m_new = jnp.maximum(a_last + m, m_in_c)  # [b, nh]
+        w_old = jnp.exp(a_last + m - m_new)
+        wj = jnp.exp(a_last[:, None] - Ac + ipc - m_new[:, None])  # [b,Q,nh]
+        C_new = C * w_old[..., None, None] + jnp.einsum(
+            "bjnd,bjne,bjn->bnde", vc, kc, wj)
+        n_new = n * w_old[..., None] + jnp.einsum("bjne,bjn->bne", kc, wj)
+        return (C_new, n_new, m_new), emit
+
+    C0 = jnp.zeros((b, nh, hd, hd), jnp.float32)
+    n0 = jnp.zeros((b, nh, hd), jnp.float32)
+    m0 = jnp.full((b, nh), -jnp.inf, jnp.float32)
+    xs = (jnp.moveaxis(A_last, 1, 0), jnp.moveaxis(m_in, 1, 0),
+          jnp.moveaxis(kf, 1, 0), jnp.moveaxis(vf, 1, 0),
+          jnp.moveaxis(A, 1, 0), jnp.moveaxis(ip, 1, 0))
+    _, (C_in, n_in, m_prev) = jax.lax.scan(scan_fn, (C0, n0, m0), xs)
+    C_in = jnp.moveaxis(C_in, 0, 1)  # [b, nc, nh, hd, hd]
+    n_in = jnp.moveaxis(n_in, 0, 1)
+    m_prev = jnp.moveaxis(m_prev, 0, 1)  # [b, nc, nh]
+
+    # ---- combine ----------------------------------------------------------
+    m_inter = m_prev[:, :, None, :] + A  # [b, nc, Q, nh]
+    m_tot = jnp.maximum(m_intra, m_inter)
+    m_tot = jnp.maximum(m_tot, -1e30)  # guard -inf - -inf
+    w_intra = jnp.where(tri[None, None, :, :, None],
+                        jnp.exp(dmat - m_tot[:, :, :, None, :]), 0.0)
+    scores = jnp.einsum("bctnd,bcjnd->bctjn", qf, kf) * w_intra
+    num = jnp.einsum("bctjn,bcjnd->bctnd", scores, vf)
+    den = scores.sum(axis=3)  # [b, nc, Q, nh]
+    w_int = jnp.exp(m_inter - m_tot)  # [b, nc, Q, nh]
+    num = num + jnp.einsum(
+        "bctne,bcnde,bctn->bctnd", qf, C_in, w_int)
+    den = den + jnp.einsum("bctnd,bcnd->bctn", qf, n_in) * w_int
+    den = jnp.maximum(jnp.abs(den), jnp.exp(-m_tot))
+    y = (num / den[..., None]).reshape(b, sp, nh, hd)
+    return y[:, :s].astype(q.dtype)
+
+
+NEG_INF_GATE = -1e30
+
+
+def mlstm_layer(p, x, cfg: ArchConfig, chunk: int = 128):
+    from repro.models.layers import rmsnorm
+
+    b, s, d = x.shape
+    nh = cfg.num_heads
+    hd = d // nh
+    h = rmsnorm(x, p["ln"], cfg.norm_eps)
+    q = (h @ p["wq"]).reshape(b, s, nh, hd)
+    k = (h @ p["wk"]).reshape(b, s, nh, hd)
+    v = (h @ p["wv"]).reshape(b, s, nh, hd)
+    i_pre, log_f = _mlstm_gates(p, h)
+    if s <= 2 * chunk:
+        y = mlstm_parallel(q, k, v, i_pre, log_f).reshape(b, s, d)
+    else:
+        y = mlstm_chunked(q, k, v, i_pre, log_f, chunk=chunk).reshape(b, s, d)
+    y = rmsnorm(y, p["gate_ln"], cfg.norm_eps)
+    return x + y @ p["wo"]
+
+
+def init_mlstm_cache(batch: int, cfg: ArchConfig):
+    nh = cfg.num_heads
+    hd = cfg.d_model // nh
+    return {
+        "C": jnp.zeros((batch, nh, hd, hd), jnp.float32),
+        "n": jnp.zeros((batch, nh, hd), jnp.float32),
+        "m": jnp.full((batch, nh), -jnp.inf, jnp.float32),
+    }
+
+
+def mlstm_layer_decode(p, x, cache, cfg: ArchConfig):
+    """Recurrent mLSTM step.  x: [b, 1, d]."""
+    from repro.models.layers import rmsnorm
+
+    b, _, d = x.shape
+    nh = cfg.num_heads
+    hd = d // nh
+    h = rmsnorm(x, p["ln"], cfg.norm_eps)[:, 0]
+    q = (h @ p["wq"]).reshape(b, nh, hd).astype(jnp.float32) * hd**-0.5
+    k = (h @ p["wk"]).reshape(b, nh, hd).astype(jnp.float32)
+    v = (h @ p["wv"]).reshape(b, nh, hd).astype(jnp.float32)
+    i_pre = (h @ p["wi"]).astype(jnp.float32) + p["bi"]  # [b, nh]
+    f_pre = (h @ p["wf"]).astype(jnp.float32) + p["bf"]
+    log_f = -jax.nn.softplus(-f_pre)
+    m_prev, C_prev, n_prev = cache["m"], cache["C"], cache["n"]
+    m_new = jnp.maximum(log_f + m_prev, i_pre)
+    f_sc = jnp.exp(log_f + m_prev - m_new)[..., None]
+    i_sc = jnp.exp(i_pre - m_new)[..., None]
+    C_new = f_sc[..., None] * C_prev + i_sc[..., None] * jnp.einsum(
+        "bnd,bne->bnde", v, k
+    )
+    n_new = f_sc * n_prev + i_sc * k
+    num = jnp.einsum("bnde,bne->bnd", C_new, q)
+    den = jnp.maximum(jnp.abs(jnp.einsum("bnd,bnd->bn", n_new, q)),
+                      jnp.exp(-m_new))
+    y = (num / den[..., None]).reshape(b, d).astype(x.dtype)
+    y = rmsnorm(y, p["gate_ln"], cfg.norm_eps)
+    out = x + (y @ p["wo"])[:, None]
+    return out, {"C": C_new, "n": n_new, "m": m_new}
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+def init_slstm_layer(keys, cfg: ArchConfig) -> dict:
+    d = cfg.d_model
+    nh = cfg.num_heads
+    hd = d // nh
+    return {
+        "ln": jnp.zeros((d,), cfg.dtype),
+        "wz": dense_init(next(keys), (d, d), cfg.dtype),
+        "wi": dense_init(next(keys), (d, d), cfg.dtype),
+        "wf": dense_init(next(keys), (d, d), cfg.dtype),
+        "wo_gate": dense_init(next(keys), (d, d), cfg.dtype),
+        # block-diagonal recurrent weights: [nh, hd, hd] per gate
+        "rz": dense_init(next(keys), (nh, hd, hd), cfg.dtype, scale=0.02),
+        "ri": dense_init(next(keys), (nh, hd, hd), cfg.dtype, scale=0.02),
+        "rf": dense_init(next(keys), (nh, hd, hd), cfg.dtype, scale=0.02),
+        "ro": dense_init(next(keys), (nh, hd, hd), cfg.dtype, scale=0.02),
+        "bf": jnp.full((d,), 3.0, jnp.float32),
+        "gate_ln": jnp.zeros((d,), cfg.dtype),
+        "wo": dense_init(next(keys), (d, d), cfg.dtype),
+    }
+
+
+def init_slstm_cache(batch: int, cfg: ArchConfig):
+    d = cfg.d_model
+    return {
+        "c": jnp.zeros((batch, d), jnp.float32),
+        "n": jnp.ones((batch, d), jnp.float32),
+        "h": jnp.zeros((batch, d), jnp.float32),
+        "m": jnp.zeros((batch, d), jnp.float32),
+    }
+
+
+def _slstm_step(p, cfg, state, inp):
+    """One recurrence step.  inp: pre-computed input projections [b, 4, d]."""
+    nh = cfg.num_heads
+    d = cfg.d_model
+    hd = d // nh
+    c, n, h, m = state
+    hb = h.reshape(-1, nh, hd)
+    rec = lambda r: jnp.einsum("bnd,nde->bne", hb, r.astype(jnp.float32)).reshape(-1, d)
+    z_pre = inp[:, 0] + rec(p["rz"])
+    i_pre = inp[:, 1] + rec(p["ri"])
+    f_pre = inp[:, 2] + rec(p["rf"]) + p["bf"]
+    o_pre = inp[:, 3] + rec(p["ro"])
+    z = jnp.tanh(z_pre)
+    log_f = -jax.nn.softplus(-f_pre)
+    m_new = jnp.maximum(log_f + m, i_pre)
+    i_sc = jnp.exp(i_pre - m_new)
+    f_sc = jnp.exp(log_f + m - m_new)
+    c_new = f_sc * c + i_sc * z
+    n_new = f_sc * n + i_sc
+    h_new = jax.nn.sigmoid(o_pre) * c_new / jnp.maximum(n_new, 1e-6)
+    return (c_new, n_new, h_new, m_new), h_new
+
+
+def slstm_layer(p, x, cfg: ArchConfig):
+    from repro.models.layers import rmsnorm
+
+    b, s, d = x.shape
+    h0 = rmsnorm(x, p["ln"], cfg.norm_eps)
+    inp = jnp.stack(
+        [h0 @ p["wz"], h0 @ p["wi"], h0 @ p["wf"], h0 @ p["wo_gate"]], axis=2
+    ).astype(jnp.float32)  # [b, s, 4, d]
+    state = (
+        jnp.zeros((b, d), jnp.float32),
+        jnp.ones((b, d), jnp.float32),
+        jnp.zeros((b, d), jnp.float32),
+        jnp.zeros((b, d), jnp.float32),
+    )
+    step = lambda st, i: _slstm_step(p, cfg, st, i)
+    _, hs = jax.lax.scan(step, state, jnp.moveaxis(inp, 1, 0))
+    y = jnp.moveaxis(hs, 0, 1).astype(x.dtype)  # [b, s, d]
+    y = rmsnorm(y, p["gate_ln"], cfg.norm_eps)
+    return x + y @ p["wo"]
+
+
+def slstm_layer_decode(p, x, cache, cfg: ArchConfig):
+    from repro.models.layers import rmsnorm
+
+    h0 = rmsnorm(x, p["ln"], cfg.norm_eps)[:, 0]
+    inp = jnp.stack(
+        [h0 @ p["wz"], h0 @ p["wi"], h0 @ p["wf"], h0 @ p["wo_gate"]], axis=1
+    ).astype(jnp.float32)  # [b, 4, d]
+    state = (cache["c"], cache["n"], cache["h"], cache["m"])
+    (c, n, h, m), y = _slstm_step(p, cfg, state, inp)
+    y = rmsnorm(y.astype(x.dtype), p["gate_ln"], cfg.norm_eps)
+    out = x + (y @ p["wo"])[:, None]
+    return out, {"c": c, "n": n, "h": h, "m": m}

@@ -1,0 +1,102 @@
+"""Parameter partition policy: PartitionSpecs + reduction groups per leaf.
+
+Layout (DESIGN §3):
+* stage layer params — leading [S] dim on the ``model`` axis; MoE expert
+  leaves additionally sharded over ``data`` (EP on the expert dim for
+  deepseek-moe, TP on d_ff for grok); everything else data-replicated with
+  ZeRO-1 optimizer-state sharding over (pod, data).
+* io params (embed / head / final_ln / shared block) — replicated; their
+  grads are psum'd over ``model`` (stage-masked contributions) and enter the
+  same ZeRO-1 flat shard as the data-replicated stage grads.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models.build import ArchModel
+
+
+@dataclasses.dataclass
+class ParamPartition:
+    stage_specs: Any  # pytree of PartitionSpec matching stage params
+    io_specs: Any
+    #: pytree of bool matching stage params: True if leaf is sharded over
+    #: data (EP/TP experts) and must NOT be DP-reduced.
+    stage_data_sharded: Any
+
+
+_MOE_EP_KEYS = ("wi", "wg", "wo")
+
+
+def partition_for(model: ArchModel, stage_params, io_params) -> ParamPartition:
+    layout = model.moe_layout
+
+    def _is_routed_expert(path) -> bool:
+        names = [getattr(p, "key", getattr(p, "name", "")) for p in path]
+        # routed expert leaves live DIRECTLY under "moe" (shared experts are
+        # nested one level deeper: moe/shared<i>/wi)
+        return (len(names) >= 2 and names[-2] == "moe"
+                and names[-1] in _MOE_EP_KEYS)
+
+    def spec_for(path, leaf):
+        names = [getattr(p, "key", getattr(p, "name", "")) for p in path]
+        extra = [None] * (leaf.ndim - 1)
+        if _is_routed_expert(path):
+            # leaf: [S, l_max, E, d, f]
+            if layout == "ep":
+                extra[1] = "data"  # shard the expert dim
+            elif layout == "tp":
+                # wi/wg: [.., E, d, f] shard f; wo: [.., E, f, d] shard f
+                extra[3 if names[-1] in ("wi", "wg") else 2] = "data"
+        return P("model", *extra)
+
+    def data_sharded(path, leaf):
+        return _is_routed_expert(path) and layout != "none"
+
+    stage_specs = jax.tree_util.tree_map_with_path(spec_for, stage_params)
+    flags = jax.tree_util.tree_map_with_path(data_sharded, stage_params)
+    io_specs = jax.tree.map(lambda _: P(), io_params)
+    return ParamPartition(stage_specs, io_specs, flags)
+
+
+# ---------------------------------------------------------------------------
+# flat ZeRO-1 shard helpers
+# ---------------------------------------------------------------------------
+def flatten_replicated(tree, flags, pad_to: int,
+                       dtype=jnp.float32) -> jnp.ndarray:
+    """Concat flattened data-replicated leaves into one padded vector."""
+    leaves = [
+        l.astype(dtype).reshape(-1)
+        for l, f in zip(jax.tree.leaves(tree), jax.tree.leaves(flags))
+        if not f
+    ]
+    vec = jnp.concatenate(leaves) if leaves else jnp.zeros((0,), dtype)
+    pad = (-vec.size) % pad_to
+    return jnp.pad(vec, (0, pad))
+
+
+def unflatten_replicated(vec: jnp.ndarray, tree, flags):
+    """Inverse of flatten_replicated: fill the replicated leaves from vec."""
+    out = []
+    off = 0
+    for l, f in zip(jax.tree.leaves(tree), jax.tree.leaves(flags)):
+        if f:
+            out.append(l)
+        else:
+            n = l.size
+            out.append(vec[off : off + n].reshape(l.shape).astype(l.dtype))
+            off += n
+    return jax.tree.unflatten(jax.tree.structure(tree), out)
+
+
+def replicated_size(tree, flags) -> int:
+    return sum(
+        l.size
+        for l, f in zip(jax.tree.leaves(tree), jax.tree.leaves(flags))
+        if not f
+    )

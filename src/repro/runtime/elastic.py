@@ -1,0 +1,77 @@
+"""Elastic re-meshing: re-plan (data × model) for a degraded device set.
+
+At 1000+ node scale, node loss is routine: the runtime checkpoints, picks the
+largest feasible (data, model) grid for the surviving devices, re-lays-out
+the stage dimension (layers redistribute across the new stage count), and
+restores.  Stage re-layout works on host arrays so it composes with
+CheckpointStore.restore on any mesh.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+import jax
+
+from repro.models.build import ArchModel, build
+from repro.models.common import stage_layout, global_layer_index
+
+
+@dataclasses.dataclass(frozen=True)
+class MeshPlan:
+    data: int
+    model: int
+
+    @property
+    def devices(self) -> int:
+        return self.data * self.model
+
+
+def plan_remesh(alive_devices: int, prefer_model: int = 16,
+                min_model: int = 2) -> MeshPlan:
+    """Largest (data × model) grid fitting the surviving devices, preferring
+    deep pipelines, then data width."""
+    best = None
+    m = prefer_model
+    while m >= min_model:
+        d = alive_devices // m
+        if d >= 1:
+            plan = MeshPlan(data=d, model=m)
+            if best is None or plan.devices > best.devices:
+                best = plan
+        m //= 2
+    if best is None:
+        raise ValueError(f"cannot build a mesh from {alive_devices} devices")
+    return best
+
+
+def relayout_stage_params(old_model: ArchModel, new_num_stages: int,
+                          stage_params_host):
+    """Re-distribute per-layer params [S_old, l_max_old, ...] onto a new
+    stage count (host-side; feeds device_put under the new mesh)."""
+    cfg = old_model.cfg
+    new_model = build(cfg, num_stages=new_num_stages)
+    old_gli = global_layer_index(old_model.counts)
+    new_gli = global_layer_index(new_model.counts)
+    # map: global layer -> (old stage, old slot)
+    where_old = {}
+    for s in range(old_model.num_stages):
+        for i in range(old_model.l_max):
+            g = old_gli[s, i]
+            if g >= 0:
+                where_old[g] = (s, i)
+
+    def remap(leaf):
+        leaf = np.asarray(leaf)
+        out = np.zeros((new_model.num_stages, new_model.l_max) + leaf.shape[2:],
+                       leaf.dtype)
+        for s in range(new_model.num_stages):
+            for i in range(new_model.l_max):
+                g = new_gli[s, i]
+                if g >= 0:
+                    so, io_ = where_old[g]
+                    out[s, i] = leaf[so, io_]
+        return out
+
+    return new_model, jax.tree.map(remap, stage_params_host)
