@@ -1,0 +1,85 @@
+"""Actor-runtime benchmark: hint vs. precommitted under jitter (host runtime).
+
+Runs the same one-schedule-two-consumption-modes contrast as the DES tables,
+but through ``repro.runtime.rrfp`` — message-driven actors, mailbox
+admission, CRN-keyed latency sampling — and emits ``BENCH_actor_runtime.json``
+so the perf trajectory of the host runtime accumulates across PRs.
+
+    PYTHONPATH=src python -m benchmarks.run --backend actor
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+
+from repro.core import (
+    CostModel,
+    EngineConfig,
+    HintKind,
+    INJECTION_LEVELS,
+    PipelineSpec,
+    multimodal_stage_flops,
+    run_iteration,
+)
+from repro.runtime.rrfp import ActorConfig, average_makespan_actor, run_actor_iteration
+
+S, M = 8, 32
+ITERS = 4
+
+
+def _base_costs(seed: int = 0) -> CostModel:
+    return CostModel.from_stage_flops(
+        multimodal_stage_flops(4e12, 2e12, S), comm_base=2e-3, seed=seed)
+
+
+def run_actor_benchmark() -> dict:
+    """Hint (BF) vs precommitted 1F1B makespans across injection levels."""
+    spec = PipelineSpec(S, M)
+    rows = []
+    for level, inj in INJECTION_LEVELS.items():
+        costs = dataclasses.replace(_base_costs(), injection=inj)
+        pre, pre_std, _ = average_makespan_actor(
+            spec, costs, ActorConfig(mode="precommitted", fixed_order="1f1b"),
+            ITERS)
+        hint, hint_std, _ = average_makespan_actor(
+            spec, costs, ActorConfig(mode="hint", hint=HintKind.BF), ITERS)
+        rows.append({
+            "level": level,
+            "precommitted_1f1b_s": pre,
+            "precommitted_std": pre_std,
+            "hint_bf_s": hint,
+            "hint_std": hint_std,
+            "speedup": pre / max(hint, 1e-12),
+        })
+    # DES cross-check at J0: same spec, same keying seed policy
+    costs0 = _base_costs()
+    des = run_iteration(spec, costs0, EngineConfig(mode="hint")).makespan
+    act = run_actor_iteration(spec, costs0, ActorConfig(mode="hint")).makespan
+    return {
+        "spec": {"stages": S, "microbatches": M, "iters": ITERS},
+        "rows": rows,
+        "des_vs_actor_hint_J0": {"des_s": des, "actor_s": act},
+    }
+
+
+def emit_json(path: str = "BENCH_actor_runtime.json") -> dict:
+    report = run_actor_benchmark()
+    with open(path, "w") as f:
+        json.dump(report, f, indent=2)
+    return report
+
+
+def actor_runtime_rows(
+    json_path: str = "BENCH_actor_runtime.json",
+) -> list[tuple[str, float, str]]:
+    """CSV rows for ``benchmarks.run`` (and the ALL_TABLES registry)."""
+    report = emit_json(json_path)
+    out = []
+    for r in report["rows"]:
+        out.append((
+            f"actor/{r['level']}/1f1b", r["precommitted_1f1b_s"] * 1e6,
+            "speedup=1.00x"))
+        out.append((
+            f"actor/{r['level']}/hint-bf", r["hint_bf_s"] * 1e6,
+            f"speedup={r['speedup']:.2f}x"))
+    return out

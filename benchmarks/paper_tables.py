@@ -274,3 +274,14 @@ ALL_TABLES = {
     # beyond-paper: schedule-as-data search on the compiled executor
     "schedule_search": schedule_search,
 }
+
+
+def _actor_runtime():
+    # late import: keeps repro.runtime.rrfp out of the DES-only tables
+    from benchmarks.actor_compare import actor_runtime_rows
+
+    return actor_runtime_rows()
+
+
+# host actor runtime: hint vs precommitted under jitter (+ JSON artifact)
+ALL_TABLES["actor_runtime"] = _actor_runtime

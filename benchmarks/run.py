@@ -2,17 +2,51 @@
 """Benchmark harness: engine-level reproduction of every paper table/figure.
 
     PYTHONPATH=src python -m benchmarks.run [table1 table6 ...]
+    PYTHONPATH=src python -m benchmarks.run --backend actor
+
+``--backend des`` (default) drives the discrete-event engine tables;
+``--backend actor`` drives the host actor runtime (``repro.runtime.rrfp``)
+and writes ``BENCH_actor_runtime.json`` comparing hint vs. precommitted
+makespan under injected jitter.
 """
 from __future__ import annotations
 
+import argparse
 import sys
 import time
 
 
 def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("tables", nargs="*", help="table names (default: all)")
+    ap.add_argument("--backend", default="des", choices=("des", "actor"),
+                    help="des: discrete-event engine; actor: host actor "
+                         "runtime (emits BENCH_actor_runtime.json)")
+    ap.add_argument("--json-out", default="BENCH_actor_runtime.json",
+                    help="actor backend: where to write the JSON report")
+    args = ap.parse_args()
+
+    if args.backend == "actor":
+        from benchmarks.actor_compare import actor_runtime_rows
+
+        if args.tables:
+            print(f"# --backend actor ignores table names {args.tables}",
+                  file=sys.stderr)
+        t0 = time.time()
+        print("name,us_per_call,derived")
+        for row_name, us, derived in actor_runtime_rows(args.json_out):
+            print(f"{row_name},{us:.1f},{derived}")
+        print(f"# actor_runtime done in {time.time() - t0:.1f}s "
+              f"-> {args.json_out}", file=sys.stderr)
+        return
+
     from benchmarks.paper_tables import ALL_TABLES
 
-    wanted = sys.argv[1:] or list(ALL_TABLES)
+    wanted = args.tables or list(ALL_TABLES)
+    unknown = [n for n in wanted if n not in ALL_TABLES]
+    if unknown:
+        raise SystemExit(
+            f"unknown table(s) {unknown}; available: {list(ALL_TABLES)}")
     print("name,us_per_call,derived")
     for name in wanted:
         fn = ALL_TABLES[name]

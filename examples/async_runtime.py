@@ -1,0 +1,71 @@
+"""Actor-runtime quickstart: dispatch by arrival, not by table tick.
+
+Part 1 — simulated transport: the same 8-stage/32-microbatch pipeline run
+through the actor runtime in both consumption modes on identical sampled
+latencies (CRN keying), across the paper's jitter levels.
+
+Part 2 — thread transport: a tiny real model trained for a few steps with
+thread-per-stage actors driving jitted stage callables (forward/backward
+factored out of the compiled executor).
+
+    PYTHONPATH=src python examples/async_runtime.py
+"""
+import dataclasses
+
+import jax
+
+from repro.core import (
+    CostModel, INJECTION_LEVELS, PipelineSpec, multimodal_stage_flops,
+)
+from repro.runtime.rrfp import ActorConfig, average_makespan_actor
+
+# ---------------------------------------------------------------------------
+print("=== simulated transport: hint vs precommitted under jitter ===")
+S, M = 8, 32
+spec = PipelineSpec(S, M)
+base = CostModel.from_stage_flops(
+    multimodal_stage_flops(4e12, 2e12, S), comm_base=2e-3)
+
+print(f"{'level':>6} {'1F1B (s)':>10} {'RRFP (s)':>10} {'speedup':>8}")
+for level, inj in INJECTION_LEVELS.items():
+    costs = dataclasses.replace(base, injection=inj)
+    pre, _, _ = average_makespan_actor(
+        spec, costs, ActorConfig(mode="precommitted", fixed_order="1f1b"), 3)
+    hint, _, _ = average_makespan_actor(
+        spec, costs, ActorConfig(mode="hint"), 3)
+    print(f"{level:>6} {pre:>10.3f} {hint:>10.3f} {pre / hint:>7.2f}x")
+
+# ---------------------------------------------------------------------------
+print("\n=== thread transport: real jitted stage callables ===")
+from repro.configs import registry                      # noqa: E402
+from repro.core.taskgraph import PipelineSpec as PS     # noqa: E402
+from repro.models.build import build                    # noqa: E402
+from repro.pipeline.stagefn import (                    # noqa: E402
+    ActorStageProgram, StageFnOptions, StageFns)
+from repro.data.synthetic import synth_batch            # noqa: E402
+from repro.runtime.rrfp import ActorDriver              # noqa: E402
+
+S2, M2, mb_rows, seq = 2, 4, 2, 16
+cfg = registry.reduced_config("deepseek-7b", num_layers=4)
+model = build(cfg, num_stages=S2)
+key = jax.random.key(0)
+sp = model.init_stage_params(key)
+io = model.init_io_params(jax.random.fold_in(key, 1))
+tokens = M2 * mb_rows * seq
+fns = StageFns(model, StageFnOptions(
+    mb_rows=mb_rows, seq_len=seq, loss_scale=1.0 / tokens))
+spec2 = PS(S2, M2)
+for step in range(3):
+    batch = synth_batch(cfg, M2 * mb_rows, seq, step=step)
+    programs = [
+        ActorStageProgram(
+            fns, s, jax.tree.map(lambda x, s=s: x[s], sp), io, batch)
+        for s in range(S2)
+    ]
+    res = ActorDriver(spec2, None, ActorConfig(mode="hint")).run_threaded(
+        list(programs))
+    loss = sum(p.loss_sum for p in programs) / tokens
+    print(f"step {step}: loss {loss:.4f}  wall makespan "
+          f"{res.makespan * 1e3:.1f} ms  tasks {len(res.end)}")
+print("\nSame runtime, two transports: simulation for schedule studies, "
+      "threads for real execution.")

@@ -42,6 +42,8 @@ CHIPS = 256  # single-pod roofline (16×16)
 def _cost(fn, *args) -> dict[str, float]:
     c = jax.jit(fn).lower(*args).compile()
     ca = c.cost_analysis()
+    if isinstance(ca, (list, tuple)):  # older jax: one dict per device
+        ca = ca[0] if ca else {}
     return {"flops": float(ca.get("flops", 0.0) or 0.0),
             "bytes": float(ca.get("bytes accessed", 0.0) or 0.0)}
 

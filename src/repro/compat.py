@@ -1,0 +1,32 @@
+"""JAX version compatibility shims.
+
+The repo targets the current jax API (``jax.shard_map`` with ``check_vma``,
+``jax.sharding.AxisType``); older installs (<= 0.4.x) expose the same
+functionality as ``jax.experimental.shard_map.shard_map`` with ``check_rep``
+and meshes without axis types.  Route every use through here so version skew
+stays in one file.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check_vma: bool = True):
+    """``jax.shard_map`` on new jax, experimental fallback on old."""
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(
+            f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+            check_vma=check_vma)
+    from jax.experimental.shard_map import shard_map as _sm
+
+    return _sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+               check_rep=check_vma)
+
+
+def make_mesh(shape, axes):
+    """``jax.make_mesh`` with explicit-Auto axis types when supported."""
+    axis_type = getattr(getattr(jax, "sharding"), "AxisType", None)
+    if axis_type is not None:
+        return jax.make_mesh(
+            shape, axes, axis_types=(axis_type.Auto,) * len(axes))
+    return jax.make_mesh(shape, axes)

@@ -33,7 +33,12 @@ from typing import Callable
 import numpy as np
 
 from repro.core.costs import CostModel
-from repro.core.hints import FIXED_ORDERS, HintArbiter, HintKind, pick
+from repro.core.hints import (
+    FIXED_ORDERS,
+    HintArbiter,
+    HintKind,
+    backpressure_drain,
+)
 from repro.core.taskgraph import Kind, PipelineSpec, Task
 
 
@@ -203,25 +208,11 @@ class Engine:
             )
 
         def select_backpressure(st: _Stage) -> Task | None:
-            """App. C drain orders."""
-            if spec.num_chunks == 1:
-                return pick(sorted(st.ready), Kind.B)
-            # Interleaved: focus microbatches in index order; follow the fixed
-            # local completion order F_0..F_{C-1}, B_{C-1}..B_0; wait if the
-            # next required task is not ready.
-            C = spec.num_chunks
-            j = st.drain_focus
-            while j < spec.num_microbatches:
-                seq_order = [Task(Kind.F, st.idx, j, c) for c in range(C)] + [
-                    Task(Kind.B, st.idx, j, c) for c in reversed(range(C))
-                ]
-                for t in seq_order:
-                    if t in st.done:
-                        continue
-                    return t if t in st.ready else None
-                j += 1
-                st.drain_focus = j
-            return None
+            """App. C drain orders (shared impl in core.hints)."""
+            task, st.drain_focus = backpressure_drain(
+                spec, st.idx, sorted(st.ready), st.done, st.drain_focus
+            )
+            return task
 
         def select(st: _Stage) -> Task | None:
             if cfg.mode == "precommitted":
@@ -377,21 +368,7 @@ class Engine:
     # ------------------------------------------------------------------
     def _message_successor(self, t: Task) -> Task | None:
         """The remote task whose readiness this task's completion message feeds."""
-        spec = self.spec
-        s_last = spec.num_stages - 1
-        if t.kind == Kind.F:
-            if t.stage < s_last:
-                return Task(Kind.F, t.stage + 1, t.mb, t.chunk)
-            if t.chunk < spec.num_chunks - 1:
-                return Task(Kind.F, 0, t.mb, t.chunk + 1)
-            return None  # last stage: loss grad is local (B enabled locally)
-        if t.kind == Kind.B:
-            if t.stage > 0:
-                return Task(Kind.B, t.stage - 1, t.mb, t.chunk)
-            if t.chunk > 0:
-                return Task(Kind.B, s_last, t.mb, t.chunk - 1)
-            return None
-        return None
+        return self.spec.message_successor(t)
 
 
 # --------------------------------------------------------------------------

@@ -84,6 +84,37 @@ class HintArbiter:
         self.last_dir = None
 
 
+def backpressure_drain(
+    spec: PipelineSpec,
+    stage: int,
+    ready: Sequence[Task],
+    done: set[Task],
+    drain_focus: int,
+) -> tuple[Task | None, int]:
+    """Appendix C drain orders, shared by the DES engine and the actor runtime.
+
+    Non-interleaved pipelines drain backward-only; interleaved pipelines
+    follow the deterministic per-microbatch completion order
+    F_0..F_{C-1}, B_{C-1}..B_0 focused on microbatches in index order.
+    Returns (task-or-None, updated drain focus).
+    """
+    if spec.num_chunks == 1:
+        return pick(sorted(ready), Kind.B), drain_focus
+    C = spec.num_chunks
+    ready_set = set(ready)
+    j = drain_focus
+    while j < spec.num_microbatches:
+        seq_order = [Task(Kind.F, stage, j, c) for c in range(C)] + [
+            Task(Kind.B, stage, j, c) for c in reversed(range(C))
+        ]
+        for t in seq_order:
+            if t in done:
+                continue
+            return (t if t in ready_set else None), j
+        j += 1
+    return None, j
+
+
 # --------------------------------------------------------------------------
 # Fixed per-stage execution orders (pre-committed baselines + synthesis grid).
 # --------------------------------------------------------------------------

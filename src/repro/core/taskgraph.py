@@ -83,6 +83,27 @@ class PipelineSpec:
         # W depends only on the local B.
         return None
 
+    def message_successor(self, t: Task) -> Task | None:
+        """The remote task whose readiness ``t``'s completion message feeds.
+
+        Inverse of :meth:`message_predecessor`; shared by the DES engine and
+        the host actor runtime so both route messages identically.
+        """
+        s_last = self.num_stages - 1
+        if t.kind == Kind.F:
+            if t.stage < s_last:
+                return Task(Kind.F, t.stage + 1, t.mb, t.chunk)
+            if t.chunk < self.num_chunks - 1:  # interleaved wrap
+                return Task(Kind.F, 0, t.mb, t.chunk + 1)
+            return None  # last stage: loss grad is local (B enabled locally)
+        if t.kind == Kind.B:
+            if t.stage > 0:
+                return Task(Kind.B, t.stage - 1, t.mb, t.chunk)
+            if t.chunk > 0:  # interleaved wrap
+                return Task(Kind.B, s_last, t.mb, t.chunk - 1)
+            return None
+        return None
+
     def local_predecessor(self, t: Task) -> Task | None:
         """Same-stage dependency that must have *executed* before ``t``."""
         if t.kind == Kind.B:

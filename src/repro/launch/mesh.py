@@ -5,23 +5,17 @@ importing this module touches no jax device state.
 """
 from __future__ import annotations
 
-import jax
+from repro.compat import make_mesh as _make_mesh
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
-    )
+    return _make_mesh(shape, axes)
 
 
 def make_mesh(data: int, model: int, pods: int = 1):
     """Arbitrary (pod ×) data × model mesh for tests / reduced runs."""
     if pods > 1:
-        return jax.make_mesh(
-            (pods, data, model), ("pod", "data", "model"),
-            axis_types=(jax.sharding.AxisType.Auto,) * 3)
-    return jax.make_mesh(
-        (data, model), ("data", "model"),
-        axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        return _make_mesh((pods, data, model), ("pod", "data", "model"))
+    return _make_mesh((data, model), ("data", "model"))

@@ -7,6 +7,15 @@ Runs on whatever devices exist (forced host devices for CPU runs), wiring
 together: synthetic data prefetch, the schedule-table executor, ZeRO-1
 AdamW, checkpoint/restart, straggler-driven re-synthesis, and (optionally)
 jitter injection to demonstrate the RRFP loop end-to-end.
+
+``--runtime actor`` (opt-in) swaps the compiled schedule-table executor for
+the host actor runtime (``repro.runtime.rrfp``): thread-per-stage actors
+dispatch real jitted stage callables by message arrival under hint-order
+arbitration, accumulate grads per stage, and feed realized per-task timings
+into the straggler monitor's EMA — the paper's runtime loop made executable:
+
+    PYTHONPATH=src python -m repro.launch.train --runtime actor \
+        --arch deepseek-7b --stages 2 --microbatches 4 --steps 5 --seq 32
 """
 from __future__ import annotations
 
@@ -74,6 +83,104 @@ def build_trainer(arch: str, *, data: int, stages: int, layers: int | None,
     )
 
 
+# ---------------------------------------------------------------------------
+# actor-runtime backend (opt-in via --runtime actor)
+# ---------------------------------------------------------------------------
+def train_actor(args) -> list[float]:
+    """Train with thread-per-stage actors dispatching real stage callables.
+
+    Single-process: stage s's parameters live with stage s's actor; AdamW
+    runs host-side over the accumulated per-stage grads.  Returns the loss
+    history (for tests)."""
+    from repro.core.hints import HintKind
+    from repro.optim.adamw import _adamw_update, lr_at
+    from repro.pipeline.stagefn import (
+        ActorStageProgram, StageFnOptions, StageFns)
+    from repro.runtime.rrfp import ActorConfig, ActorDriver
+
+    cfg = (registry.reduced_config(args.arch, num_layers=args.layers)
+           if not args.full_size else registry.get_arch(args.arch))
+    model = build(cfg, num_stages=args.stages)
+    key = jax.random.key(0)
+    stage_params = model.init_stage_params(key)
+    io_params = model.init_io_params(jax.random.fold_in(key, 1))
+    spec = PipelineSpec(args.stages, args.microbatches)
+    batch_size = args.microbatches * args.mb_rows
+    tokens = batch_size * args.seq
+    fns = StageFns(model, StageFnOptions(
+        mb_rows=args.mb_rows, seq_len=args.seq, loss_scale=1.0 / tokens))
+    if args.schedule == "rrfp":
+        mode, fixed = "hint", "1f1b"
+    elif args.schedule in ("1f1b", "gpipe"):
+        mode, fixed = "precommitted", args.schedule
+    else:
+        raise SystemExit(
+            f"--runtime actor supports schedules rrfp/1f1b/gpipe, "
+            f"not {args.schedule!r} (zb needs split-backward W tasks, which "
+            f"the actor stage program does not execute yet)")
+    acfg = ActorConfig(mode=mode, fixed_order=fixed,
+                       deadlock_timeout=args.deadlock_timeout)
+
+    opt_cfg = AdamWConfig(lr=args.lr, warmup_steps=min(20, args.steps),
+                          total_steps=max(args.steps, 1))
+    params = {"sp": stage_params, "io": io_params}
+    mstate = jax.tree.map(
+        lambda x: jnp.zeros(x.shape, jnp.float32), params)
+    vstate = jax.tree.map(
+        lambda x: jnp.zeros(x.shape, jnp.float32), params)
+
+    @jax.jit
+    def apply_update(params, grads, m, v, step):
+        lr = lr_at(opt_cfg, step)
+
+        def upd(p, g, m_, v_):
+            p32, m2, v2 = _adamw_update(
+                opt_cfg, p.astype(jnp.float32), g, m_, v_, step, lr)
+            return p32.astype(p.dtype), m2, v2
+
+        out = jax.tree.map(upd, params, grads, m, v)
+        new_p = jax.tree.map(lambda o: o[0], out, is_leaf=lambda o: isinstance(o, tuple))
+        new_m = jax.tree.map(lambda o: o[1], out, is_leaf=lambda o: isinstance(o, tuple))
+        new_v = jax.tree.map(lambda o: o[2], out, is_leaf=lambda o: isinstance(o, tuple))
+        return new_p, new_m, new_v, lr
+
+    monitor = StragglerMonitor(spec=spec, costs=CostModel.uniform(args.stages))
+    print(f"arch={args.arch} N={cfg.param_count():,} params  runtime=actor "
+          f"mode={mode}  stages={args.stages}  microbatches={args.microbatches}")
+    losses: list[float] = []
+    for step in range(args.steps):
+        batch = synth_batch(cfg, batch_size, args.seq, seed=args.seed,
+                            step=step)
+        sp, io = params["sp"], params["io"]
+        programs = [
+            ActorStageProgram(
+                fns, s, jax.tree.map(lambda x, s=s: x[s], sp), io, batch)
+            for s in range(args.stages)
+        ]
+        t0 = time.time()
+        result = ActorDriver(spec, None, acfg).run_threaded(list(programs))
+        d_sp = jax.tree.map(lambda *xs: jnp.stack(xs),
+                            *[p.d_stage for p in programs])
+        d_io = jax.tree.map(lambda *xs: sum(xs[1:], xs[0]),
+                            *[p.d_io for p in programs])
+        grads = jax.tree.map(lambda g: g.astype(jnp.float32),
+                             {"sp": d_sp, "io": d_io})
+        params, mstate, vstate, lr = apply_update(
+            params, grads, mstate, vstate, jnp.asarray(step, jnp.int32))
+        loss = sum(p.loss_sum for p in programs) / tokens
+        losses.append(loss)
+        bd = result.breakdown()
+        new_table = monitor.observe_result(result)
+        dt = time.time() - t0
+        print(f"step {step:4d}  loss {loss:8.4f}  lr {float(lr):.2e}  "
+              f"{dt*1e3:7.1f} ms  makespan {result.makespan*1e3:7.1f} ms  "
+              f"blocking {bd['blocking']*1e3:6.1f} ms"
+              + ("  [replan]" if new_table is not None else ""))
+    if monitor.replans:
+        print(f"straggler monitor triggered {monitor.replans} replan(s)")
+    return losses
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="deepseek-7b")
@@ -86,6 +193,12 @@ def main() -> None:
     ap.add_argument("--steps", type=int, default=20)
     ap.add_argument("--schedule", default="rrfp",
                     choices=list(schedules.BUILDERS))
+    ap.add_argument("--runtime", default="table", choices=("table", "actor"),
+                    help="table: compiled schedule-table executor (default); "
+                         "actor: thread-per-stage readiness-driven runtime")
+    ap.add_argument("--deadlock-timeout", type=float, default=120.0,
+                    help="actor runtime: seconds of stage starvation before "
+                         "aborting with DeadlockError")
     ap.add_argument("--full-size", action="store_true")
     ap.add_argument("--lr", type=float, default=1e-3)
     ap.add_argument("--ckpt-dir", default=None)
@@ -93,6 +206,10 @@ def main() -> None:
     ap.add_argument("--resume", action="store_true")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
+
+    if args.runtime == "actor":
+        train_actor(args)
+        return
 
     data = args.devices // args.stages
     assert data >= 1, "need devices >= stages"

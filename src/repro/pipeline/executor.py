@@ -27,10 +27,11 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import PartitionSpec as P
 
+from repro.compat import shard_map
 from repro.models.build import ArchModel
-from repro.models.layers import rmsnorm
 from repro.pipeline.sharding import ParamPartition, partition_for
 from repro.pipeline.spec import OP_B, OP_F, OP_IDLE, OP_W, ScheduleTable
+from repro.pipeline.stagefn import chunked_ce_sum, default_ce_chunk
 
 
 @dataclasses.dataclass(frozen=True)
@@ -56,44 +57,7 @@ def _eff_seq(model: ArchModel, opts: ExecOptions) -> int:
 
 
 def _ce_chunk(model: ArchModel, opts: ExecOptions) -> int:
-    if opts.ce_chunk:
-        return opts.ce_chunk
-    v = model.cfg.padded_vocab()
-    return max(64, min(2048, (1 << 24) // v * 4))
-
-
-# ---------------------------------------------------------------------------
-# loss
-# ---------------------------------------------------------------------------
-def chunked_ce_sum(model: ArchModel, io, y, labels, chunk: int):
-    """Sum of token cross-entropies, scanned over token chunks (bounded
-    logits working set; checkpointed so backward re-materializes per chunk)."""
-    cfg = model.cfg
-    h = rmsnorm(y, io["final_ln"], cfg.norm_eps)
-    d = h.shape[-1]
-    h2 = h.reshape(-1, d)
-    l2 = labels.reshape(-1)
-    n = h2.shape[0]
-    pad = (-n) % chunk
-    if pad:
-        h2 = jnp.pad(h2, ((0, pad), (0, 0)))
-        l2 = jnp.pad(l2, (0, pad), constant_values=-1)
-    h3 = h2.reshape(-1, chunk, d)
-    l3 = l2.reshape(-1, chunk)
-    head = io["head"]
-
-    @jax.checkpoint
-    def body(carry, inp):
-        h_c, l_c = inp
-        logits = (h_c @ head.T).astype(jnp.float32)
-        lse = jax.nn.logsumexp(logits, axis=-1)
-        pick = jnp.take_along_axis(
-            logits, jnp.maximum(l_c, 0)[:, None], axis=1)[:, 0]
-        w = (l_c >= 0).astype(jnp.float32)
-        return carry + jnp.sum((lse - pick) * w), None
-
-    total, _ = jax.lax.scan(body, jnp.zeros((), jnp.float32), (h3, l3))
-    return total
+    return default_ce_chunk(model.cfg, opts.ce_chunk)
 
 
 # ---------------------------------------------------------------------------
@@ -370,7 +334,7 @@ def make_train_fn(
         if flag
     }
 
-    fn = jax.shard_map(
+    fn = shard_map(
         device_fn,
         mesh=mesh,
         in_specs=(partition.stage_specs, partition.io_specs, batch_specs),

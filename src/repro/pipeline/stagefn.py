@@ -1,0 +1,215 @@
+"""Standalone per-stage jitted callables (factored out of the executor).
+
+``pipeline.executor`` compiles the *whole* schedule into one SPMD program —
+every stage steps in lockstep through a tick grid.  The actor runtime needs
+the opposite factoring: one independently-callable, jitted function per
+(stage, op) that a host thread can dispatch the moment the stage's message
+arrives.  This module provides that factoring for single-process meshes
+(CPU or multi-device single-host), sharing the executor's loss
+(:func:`chunked_ce_sum`) and its remat-based backward recipe: B re-runs the
+stage forward under ``jax.grad`` of a scalarized objective (CE at the last
+stage, <y, g_in> elsewhere).
+
+``ActorStageProgram`` adapts the callables to the actor runtime's
+``work_fn(task, payload)`` protocol: it holds the stage's residual store
+(per-microbatch forward inputs) and gradient accumulators, consumes arrived
+activations/gradients as message payloads, and emits the outgoing payload.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.taskgraph import Kind, Task
+from repro.models.build import ArchModel
+from repro.models.layers import rmsnorm
+
+
+@dataclasses.dataclass(frozen=True)
+class StageFnOptions:
+    mb_rows: int             # microbatch rows
+    seq_len: int             # tokens per row
+    ce_chunk: int = 0        # 0 -> auto from vocab size
+    loss_scale: float = 1.0  # applied to the backward seed
+
+
+def default_ce_chunk(cfg, requested: int = 0) -> int:
+    if requested:
+        return requested
+    v = cfg.padded_vocab()
+    return max(64, min(2048, (1 << 24) // v * 4))
+
+
+# ---------------------------------------------------------------------------
+# loss (shared with the executor)
+# ---------------------------------------------------------------------------
+def chunked_ce_sum(model: ArchModel, io, y, labels, chunk: int):
+    """Sum of token cross-entropies, scanned over token chunks (bounded
+    logits working set; checkpointed so backward re-materializes per chunk)."""
+    cfg = model.cfg
+    h = rmsnorm(y, io["final_ln"], cfg.norm_eps)
+    d = h.shape[-1]
+    h2 = h.reshape(-1, d)
+    l2 = labels.reshape(-1)
+    n = h2.shape[0]
+    pad = (-n) % chunk
+    if pad:
+        h2 = jnp.pad(h2, ((0, pad), (0, 0)))
+        l2 = jnp.pad(l2, (0, pad), constant_values=-1)
+    h3 = h2.reshape(-1, chunk, d)
+    l3 = l2.reshape(-1, chunk)
+    head = io["head"]
+
+    @jax.checkpoint
+    def body(carry, inp):
+        h_c, l_c = inp
+        logits = (h_c @ head.T).astype(jnp.float32)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        pick = jnp.take_along_axis(
+            logits, jnp.maximum(l_c, 0)[:, None], axis=1)[:, 0]
+        w = (l_c >= 0).astype(jnp.float32)
+        return carry + jnp.sum((lse - pick) * w), None
+
+    total, _ = jax.lax.scan(body, jnp.zeros((), jnp.float32), (h3, l3))
+    return total
+
+
+# ---------------------------------------------------------------------------
+# per-stage callables
+# ---------------------------------------------------------------------------
+class StageFns:
+    """Jitted forward/backward per stage of a single-process pipeline.
+
+    ``forward(s)(sp_s, io, x, bm) -> (y, loss_sum)`` — loss_sum nonzero only
+    at the last stage.  ``backward(s)(sp_s, io, x, g_in, bm) ->
+    (dx, d_stage, d_io)`` — g_in ignored at the last stage (the loss is the
+    objective there).
+    """
+
+    def __init__(self, model: ArchModel, opts: StageFnOptions):
+        self.model = model
+        self.opts = opts
+        cfg = model.cfg
+        self.ce_chunk = default_ce_chunk(cfg, opts.ce_chunk)
+        self._fwd: dict[int, Any] = {}
+        self._bwd: dict[int, Any] = {}
+
+    # ---- helpers -------------------------------------------------------
+    def _aux(self, bm: dict) -> dict:
+        seq = self.opts.seq_len
+        a: dict[str, Any] = {
+            "positions": jnp.broadcast_to(
+                jnp.arange(seq, dtype=jnp.int32)[None],
+                (self.opts.mb_rows, seq)),
+            "data_size": 1,
+            "moe_layout": "none",  # single process: experts computed locally
+        }
+        if "mrope" in bm:
+            a["mrope"] = bm["mrope"]
+        return a
+
+    def _embed(self, io, bm: dict):
+        cfg = self.model.cfg
+        if cfg.embed_input:
+            return bm["embeds"].astype(cfg.dtype)
+        return io["embed"][bm["tokens"]]
+
+    def _objective(self, stage: int, sp_s, io, x, g_in, bm):
+        model, cfg = self.model, self.model.cfg
+        x0 = self._embed(io, bm).astype(cfg.dtype) if stage == 0 else x
+        y = model.stage_forward(sp_s, io, x0, self._aux(bm), model.rows(stage))
+        if stage == model.num_stages - 1:
+            return chunked_ce_sum(
+                model, io, y, bm["labels"], self.ce_chunk) * self.opts.loss_scale
+        return jnp.sum(y.astype(jnp.float32) * g_in.astype(jnp.float32))
+
+    # ---- public --------------------------------------------------------
+    def forward(self, stage: int):
+        if stage not in self._fwd:
+            model, cfg = self.model, self.model.cfg
+            last = stage == model.num_stages - 1
+
+            def f(sp_s, io, x, bm):
+                x0 = (self._embed(io, bm).astype(cfg.dtype)
+                      if stage == 0 else x)
+                y = model.stage_forward(
+                    sp_s, io, x0, self._aux(bm), model.rows(stage))
+                loss = (chunked_ce_sum(model, io, y, bm["labels"],
+                                       self.ce_chunk)
+                        if last else jnp.zeros((), jnp.float32))
+                return y, loss
+
+            self._fwd[stage] = jax.jit(f)
+        return self._fwd[stage]
+
+    def backward(self, stage: int):
+        if stage not in self._bwd:
+            def b(sp_s, io, x, g_in, bm):
+                dsp, dio, dx = jax.grad(
+                    lambda sp_, io_, x_: self._objective(
+                        stage, sp_, io_, x_, g_in, bm),
+                    argnums=(0, 1, 2))(sp_s, io, x)
+                return dx, dsp, dio
+
+            self._bwd[stage] = jax.jit(b)
+        return self._bwd[stage]
+
+
+def microbatch(batch: dict, mb: int, mb_rows: int) -> dict:
+    """Host-side microbatch slice of a [M*mb_rows, ...] batch dict."""
+    lo, hi = mb * mb_rows, (mb + 1) * mb_rows
+    out = {}
+    for k, v in batch.items():
+        if k == "mrope":
+            out[k] = v[:, lo:hi]
+        else:
+            out[k] = v[lo:hi]
+    return out
+
+
+# ---------------------------------------------------------------------------
+# actor-runtime adapter
+# ---------------------------------------------------------------------------
+class ActorStageProgram:
+    """``work_fn(task, payload)`` for one stage actor driving real callables.
+
+    F: consume the upstream activation payload (None at stage 0), run the
+    jitted forward, stash the stage input for remat-backward, emit y.
+    B: consume the downstream gradient payload (None at the last stage),
+    re-run forward under grad, accumulate parameter grads, emit dx.
+    """
+
+    def __init__(self, fns: StageFns, stage: int, sp_s, io, batch: dict):
+        self.fns = fns
+        self.stage = stage
+        self.sp_s = sp_s
+        self.io = io
+        self.batch = batch
+        self.residual: dict[int, Any] = {}  # mb -> stage input
+        self.d_stage = jax.tree.map(jnp.zeros_like, sp_s)
+        self.d_io = jax.tree.map(jnp.zeros_like, io)
+        self.loss_sum = 0.0
+        self._g_dummy = None
+
+    def __call__(self, task: Task, payload: Any) -> Any:
+        bm = microbatch(self.batch, task.mb, self.fns.opts.mb_rows)
+        if task.kind == Kind.F:
+            x = payload  # None at stage 0 (embedded inside the callable)
+            y, loss = self.fns.forward(self.stage)(
+                self.sp_s, self.io, x, bm)
+            self.residual[task.mb] = x
+            self.loss_sum += float(loss)
+            self._g_dummy = jnp.zeros_like(y)
+            return y
+        if task.kind == Kind.B:
+            x = self.residual.pop(task.mb)
+            g_in = payload if payload is not None else self._g_dummy
+            dx, dsp, dio = self.fns.backward(self.stage)(
+                self.sp_s, self.io, x, g_in, bm)
+            self.d_stage = jax.tree.map(jnp.add, self.d_stage, dsp)
+            self.d_io = jax.tree.map(jnp.add, self.d_io, dio)
+            return dx
+        raise ValueError(f"actor stage program cannot run {task!r}")

@@ -1,0 +1,43 @@
+"""RRFP host actor runtime: message-driven pipeline dispatch (§4–§5).
+
+The executable counterpart of the DES engine in ``repro.core.engine``: each
+pipeline stage is an actor with per-kind ready buffers fed by a message
+transport, dispatching work by *arrival* under hint-order arbitration — not
+by schedule-table tick.  See ``docs/runtime.md`` for the architecture.
+
+Layering (bottom-up):
+  messages  -- envelopes + per-TP-rank fan-out
+  tp_group  -- §4.2 all-ranks admission barrier
+  mailbox   -- thread-safe per-kind arrival buffers
+  transport -- SimTransport (virtual clock, injectable heavy-tailed latency)
+               / ThreadTransport (thread-per-stage, real callables)
+  actor     -- ready-set arbitration + App. C backpressure + thread loop
+  driver    -- builds/wires everything; emits core.engine.RunResult traces
+"""
+from repro.runtime.rrfp.actor import StageActor, TaskTrace
+from repro.runtime.rrfp.driver import (
+    ActorConfig,
+    ActorDriver,
+    average_makespan_actor,
+    run_actor_iteration,
+)
+from repro.runtime.rrfp.mailbox import Mailbox
+from repro.runtime.rrfp.messages import Envelope, envelopes_for
+from repro.runtime.rrfp.tp_group import Admission, TPGroup
+from repro.runtime.rrfp.transport import SimTransport, ThreadTransport
+
+__all__ = [
+    "ActorConfig",
+    "ActorDriver",
+    "Admission",
+    "Envelope",
+    "Mailbox",
+    "SimTransport",
+    "StageActor",
+    "TaskTrace",
+    "ThreadTransport",
+    "TPGroup",
+    "average_makespan_actor",
+    "envelopes_for",
+    "run_actor_iteration",
+]

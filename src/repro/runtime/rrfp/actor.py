@@ -1,0 +1,214 @@
+"""Stage actors: readiness-driven dispatch at host level (§4, §5, App. A/C).
+
+A :class:`StageActor` owns one pipeline stage's scheduling state: the set of
+tasks whose messages have been admitted (``arrived``), the currently ready
+set, the done set, the F/B balance counters for Appendix C backpressure, and
+a :class:`~repro.core.hints.HintArbiter` for ready-set arbitration.  The
+actor is *reactive*: it makes a dispatch decision only when poked by an
+arrival or a completion — there is no schedule-table tick anywhere.
+
+The same actor expresses both consumption modes of the paper's central
+contrast:
+
+* ``hint``        — Algorithm 1 over the current ready set, plus the App. C
+                    backward-only / deterministic drain under backpressure;
+* ``precommitted``— follow a fixed per-stage order, waiting on any entry
+                    that is not yet ready (1F1B / GPipe / ZB baselines).
+
+``run_thread`` is the thread-per-stage execution loop used by the
+ThreadTransport: it blocks on the mailbox condition, dispatches real work
+callables, and reports completions back through the transport.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time as _time
+from typing import Any, Callable
+
+from repro.core.engine import DeadlockError, StageStats
+from repro.core.hints import HintArbiter, HintKind, backpressure_drain
+from repro.core.taskgraph import Kind, PipelineSpec, Task
+
+from repro.runtime.rrfp.mailbox import Mailbox
+from repro.runtime.rrfp.messages import envelopes_for
+
+
+@dataclasses.dataclass
+class TaskTrace:
+    """One dispatch record (start/end on the driver's clock)."""
+
+    task: Task
+    start: float
+    end: float
+
+
+class StageActor:
+    """Scheduling brain + (optionally) execution thread for one stage."""
+
+    def __init__(
+        self,
+        idx: int,
+        spec: PipelineSpec,
+        mailbox: Mailbox,
+        *,
+        mode: str = "hint",
+        hint: HintKind = HintKind.BF,
+        order: list[Task] | None = None,
+        buffer_limit: int = 32,
+    ):
+        if mode not in ("hint", "precommitted"):
+            raise ValueError(f"unknown mode {mode!r}")
+        if mode == "precommitted" and order is None:
+            raise ValueError("precommitted mode needs a per-stage order")
+        self.idx = idx
+        self.spec = spec
+        self.mailbox = mailbox
+        self.mode = mode
+        self.arbiter = HintArbiter(hint)
+        self.order = order
+        self.order_pos = 0
+        self.buffer_limit = buffer_limit
+        self.arrived: set[Task] = set()
+        self.ready: set[Task] = set()
+        self.done: set[Task] = set()
+        self.n_f = 0
+        self.n_b = 0
+        self.drain_focus = 0
+        self.stats = StageStats()
+        self.traces: list[TaskTrace] = []
+        self._total = spec.num_tasks_per_stage()
+
+    # ---- readiness bookkeeping (call under the mailbox lock) ---------------
+    def _is_ready(self, t: Task) -> bool:
+        mp = self.spec.message_predecessor(t)
+        if mp is not None and t not in self.arrived:
+            return False
+        lp = self.spec.local_predecessor(t)
+        if lp is not None and lp not in self.done:
+            return False
+        return True
+
+    def _maybe_enqueue(self, t: Task) -> None:
+        if t not in self.done and t not in self.ready and self._is_ready(t):
+            self.ready.add(t)
+
+    def sync_mailbox(self) -> None:
+        """Drain admitted arrivals from the mailbox buffers into the ready set."""
+        for t in self.mailbox.arrived_tasks():
+            self.arrived.add(t)
+            self._maybe_enqueue(t)
+
+    # ---- arbitration -------------------------------------------------------
+    def backpressured(self) -> bool:
+        return self.mode == "hint" and self.n_f - self.n_b >= self.buffer_limit
+
+    def select(self) -> Task | None:
+        """Pick the next task to dispatch from the *currently* ready set."""
+        if self.mode == "precommitted":
+            if self.order_pos >= len(self.order):
+                return None
+            nxt = self.order[self.order_pos]
+            return nxt if nxt in self.ready else None
+        if self.backpressured():
+            task, self.drain_focus = backpressure_drain(
+                self.spec, self.idx, sorted(self.ready), self.done,
+                self.drain_focus)
+            return task
+        return self.arbiter.select(sorted(self.ready))
+
+    def begin(self, task: Task) -> Any:
+        """Commit to a dispatch: consume the task's buffered message (if any)
+        and return its payload."""
+        self.ready.discard(task)
+        if self.mode == "precommitted":
+            self.order_pos += 1
+        payload = None
+        if task in self.mailbox.buffers[task.kind]:
+            payload = self.mailbox.consume(task)
+        return payload
+
+    def complete(self, task: Task) -> Task | None:
+        """Mark done, enable local successors; return the remote successor
+        whose message must now be sent (or None)."""
+        self.done.add(task)
+        if task.kind == Kind.F:
+            self.n_f += 1
+            self._maybe_enqueue(Task(Kind.B, self.idx, task.mb, task.chunk))
+        elif task.kind == Kind.B:
+            self.n_b += 1
+            if self.spec.split_backward:
+                self._maybe_enqueue(Task(Kind.W, self.idx, task.mb, task.chunk))
+        return self.spec.message_successor(task)
+
+    def finished(self) -> bool:
+        return len(self.done) == self._total
+
+    def waiting_on(self) -> list[Task]:
+        """Diagnostics: not-yet-done tasks whose message has not arrived."""
+        out = []
+        for t in self.spec.tasks():
+            if t.stage != self.idx or t in self.done:
+                continue
+            mp = self.spec.message_predecessor(t)
+            if mp is not None and t not in self.arrived:
+                out.append(t)
+        return sorted(out)
+
+    # ---- thread-per-stage execution loop (ThreadTransport) -----------------
+    def run_thread(
+        self,
+        work_fn: Callable[[Task, Any], Any],
+        transport,
+        clock: Callable[[], float],
+        *,
+        tp_degree: int = 1,
+        deadlock_timeout: float = 30.0,
+        abort=None,
+        poll: float = 0.05,
+    ) -> None:
+        """Execute this stage's tasks as they become ready.
+
+        ``work_fn(task, payload) -> out_payload`` runs the real computation
+        (e.g. a jitted stage callable); ``out_payload`` rides on the outgoing
+        envelope.  Raises :class:`DeadlockError` if the mailbox starves for
+        ``deadlock_timeout`` seconds while work remains.
+        """
+        idle_since = clock()
+        while not self.finished():
+            if abort is not None and abort.is_set():
+                return
+            with self.mailbox.cond:
+                task = None
+                while True:
+                    self.sync_mailbox()
+                    task = self.select()
+                    if task is not None or self.finished():
+                        break
+                    if self.mailbox.stopped or (
+                            abort is not None and abort.is_set()):
+                        return
+                    self.mailbox.wait_for_work(poll)
+                    if self.mailbox.starved_for() > deadlock_timeout:
+                        if abort is not None:
+                            abort.set()
+                        raise DeadlockError(
+                            f"stage {self.idx} starved >{deadlock_timeout}s "
+                            f"with {self._total - len(self.done)} tasks left; "
+                            f"waiting on messages for {self.waiting_on()[:4]}")
+                if task is None:  # finished() flipped
+                    return
+                payload = self.begin(task)
+            start = clock()
+            self.stats.blocking += max(0.0, start - idle_since)
+            out_payload = work_fn(task, payload)
+            end = clock()
+            self.stats.compute += end - start
+            with self.mailbox.cond:
+                succ = self.complete(task)
+            self.traces.append(TaskTrace(task, start, end))
+            idle_since = end
+            if succ is not None:
+                for env in envelopes_for(
+                        succ, self.idx, tp_degree, send_time=end,
+                        payload=out_payload):
+                    transport.send(env, now=end)

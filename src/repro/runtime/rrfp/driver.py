@@ -1,0 +1,282 @@
+"""Actor-runtime driver: builds the actors, pumps messages, records traces.
+
+Two execution substrates behind one configuration:
+
+* ``run()`` — :class:`~repro.runtime.rrfp.transport.SimTransport` on a
+  virtual clock.  Arrivals and completions are heap events; actors make
+  every dispatch decision reactively (no schedule-table tick).  Compute and
+  communication samples are keyed per task (common random numbers), so hint
+  vs. precommitted runs on the same seed experience the same realized
+  variability — the paper's one-schedule-two-consumption-modes contrast
+  isolated from sampling noise.
+
+* ``run_threaded(work_fn)`` — thread-per-stage actors over the
+  :class:`~repro.runtime.rrfp.transport.ThreadTransport`, executing real
+  work callables (e.g. jitted stage functions from
+  ``repro.pipeline.stagefn``) on the wall clock.
+
+Both return the DES engine's :class:`~repro.core.engine.RunResult`, so
+``benchmarks/``, the Theorem 6.1 bound checker and
+``runtime.straggler`` consume actor traces unchanged.
+"""
+from __future__ import annotations
+
+import dataclasses
+import heapq
+import threading
+import zlib
+from typing import Any, Callable
+
+import numpy as np
+
+from repro.core.costs import CostModel
+from repro.core.engine import DeadlockError, RunResult, StageStats
+from repro.core.hints import FIXED_ORDERS, HintKind
+from repro.core.taskgraph import Kind, PipelineSpec, Task
+
+from repro.runtime.rrfp.actor import StageActor
+from repro.runtime.rrfp.mailbox import Mailbox
+from repro.runtime.rrfp.messages import Envelope, envelopes_for
+from repro.runtime.rrfp.transport import SimTransport, ThreadTransport
+
+
+@dataclasses.dataclass
+class ActorConfig:
+    """Runtime configuration (mirrors ``EngineConfig`` where they overlap)."""
+
+    mode: str = "hint"  # "hint" (RRFP) | "precommitted" (fixed-order baselines)
+    hint: HintKind = HintKind.BF
+    fixed_order: str = "1f1b"  # precommitted mode: key into FIXED_ORDERS
+    custom_orders: list[list[Task]] | None = None  # overrides fixed_order
+    buffer_limit: int = 32  # App. C backpressure limit
+    tp_degree: int = 1
+    tp_coord_base: float = 75e-6  # scalar all-gather cost (Table 3)
+    seed: int = 0
+    #: thread mode: seconds of mailbox starvation before DeadlockError
+    deadlock_timeout: float = 30.0
+
+
+def _compute_rng(seed: int, task: Task) -> np.random.Generator:
+    return np.random.default_rng(
+        [seed & 0x7FFFFFFF, zlib.crc32(b"rrfp-compute"),
+         int(task.kind), task.stage, task.mb, task.chunk])
+
+
+class ActorDriver:
+    """One training iteration through the actor runtime."""
+
+    def __init__(self, spec: PipelineSpec, costs: CostModel | None,
+                 config: ActorConfig):
+        if costs is not None and costs.num_stages != spec.num_stages:
+            raise ValueError("cost model / spec stage mismatch")
+        self.spec = spec
+        self.costs = costs
+        self.config = config
+
+    # ------------------------------------------------------------------
+    def _build_actors(self) -> tuple[list[Mailbox], list[StageActor]]:
+        spec, cfg = self.spec, self.config
+        mailboxes, actors = [], []
+        for s in range(spec.num_stages):
+            order = None
+            if cfg.mode == "precommitted":
+                if cfg.custom_orders is not None:
+                    order = cfg.custom_orders[s]
+                else:
+                    order = FIXED_ORDERS[cfg.fixed_order](spec, s)
+            mb = Mailbox(s, cfg.tp_degree)
+            mailboxes.append(mb)
+            actors.append(StageActor(
+                s, spec, mb, mode=cfg.mode, hint=cfg.hint, order=order,
+                buffer_limit=cfg.buffer_limit))
+        return mailboxes, actors
+
+    def _seed_inputs(self, mailboxes: list[Mailbox]) -> None:
+        """Stage 0 / chunk 0 forward inputs are locally available at t=0."""
+        for j in range(self.spec.num_microbatches):
+            mailboxes[0].deliver_local(Task(Kind.F, 0, j, 0))
+
+    # ---- simulation substrate -----------------------------------------
+    def run(self) -> RunResult:
+        if self.costs is None:
+            raise ValueError("simulation mode requires a CostModel")
+        spec, cfg, costs = self.spec, self.config, self.costs
+        mailboxes, actors = self._build_actors()
+
+        events: list = []  # (time, seq, kind, payload)
+        seq = 0
+
+        def push(t: float, ekind: str, payload) -> None:
+            nonlocal seq
+            heapq.heappush(events, (t, seq, ekind, payload))
+            seq += 1
+
+        transport = SimTransport(
+            costs, schedule=lambda t, env: push(t, "deliver", env),
+            seed=cfg.seed)
+        inj_states = [costs.injection.make_state() for _ in range(spec.num_stages)]
+        busy_until = [0.0] * spec.num_stages
+        idle_since = [0.0] * spec.num_stages
+        start: dict[Task, float] = {}
+        end: dict[Task, float] = {}
+        n_done = 0
+        total = spec.total_tasks()
+
+        self._seed_inputs(mailboxes)
+        for a in actors:
+            a.sync_mailbox()
+
+        def try_dispatch(s: int, now: float) -> None:
+            actor = actors[s]
+            if busy_until[s] > now:
+                return
+            task = actor.select()
+            if task is None:
+                return
+            actor.begin(task)
+            coord = mailboxes[s].group.coordination_cost(task, cfg.tp_coord_base)
+            rng = _compute_rng(cfg.seed, task)
+            dur = costs.sample_compute(task.kind, s, task.mb, rng)
+            if task.kind != Kind.W:
+                dur += costs.injection.sample_delay(inj_states[s], dur, rng)
+            actor.stats.blocking += max(0.0, now - idle_since[s])
+            actor.stats.tp_coord += coord
+            actor.stats.compute += dur
+            begin = now + coord
+            start[task] = begin
+            busy_until[s] = begin + dur
+            push(busy_until[s], "complete", task)
+
+        for s in range(spec.num_stages):
+            try_dispatch(s, 0.0)
+
+        while events:
+            now, _, ekind, payload = heapq.heappop(events)
+            if ekind == "complete":
+                task: Task = payload
+                s = task.stage
+                end[task] = now
+                n_done += 1
+                succ = actors[s].complete(task)
+                if succ is not None:
+                    for env in envelopes_for(succ, s, cfg.tp_degree,
+                                             send_time=now):
+                        transport.send(env, now=now)
+                idle_since[s] = now
+                try_dispatch(s, now)
+            else:  # deliver
+                env: Envelope = payload
+                s = env.dst_stage
+                adm = mailboxes[s].deliver(env, now=now)
+                if adm is not None:
+                    actors[s].sync_mailbox()
+                    try_dispatch(s, now)
+
+        if n_done != total:
+            starved = {
+                a.idx: a.waiting_on()[:4] for a in actors if not a.finished()
+            }
+            raise DeadlockError(
+                f"actor runtime stalled with {total - n_done} tasks "
+                f"unexecuted (mode={cfg.mode}); starved stages -> first "
+                f"missing messages: {starved}")
+        makespan = max(end.values())
+        for s, a in enumerate(actors):
+            a.stats.blocking += max(0.0, makespan - busy_until[s])
+            a.stats.deferrals = mailboxes[s].group.deferrals
+        return RunResult(
+            makespan=makespan,
+            stage_stats=[a.stats for a in actors],
+            start=start,
+            end=end,
+            spec=spec,
+        )
+
+    # ---- thread-per-stage substrate ------------------------------------
+    def run_threaded(
+        self,
+        work_fn: Callable[[Task, Any], Any] | list[Callable[[Task, Any], Any]],
+    ) -> RunResult:
+        """Drive real per-stage callables with thread actors (wall clock).
+
+        ``work_fn(task, payload)`` (or one callable per stage) performs the
+        actual computation and returns the payload for the outgoing message.
+        """
+        import time as _time
+
+        spec, cfg = self.spec, self.config
+        mailboxes, actors = self._build_actors()
+        transport = ThreadTransport({m.stage: m for m in mailboxes})
+        work_fns = (work_fn if isinstance(work_fn, list)
+                    else [work_fn] * spec.num_stages)
+        t0 = _time.perf_counter()
+        clock = lambda: _time.perf_counter() - t0  # noqa: E731
+        abort = threading.Event()
+        errors: list[BaseException] = []
+
+        def runner(actor: StageActor):
+            try:
+                actor.run_thread(
+                    work_fns[actor.idx], transport, clock,
+                    tp_degree=cfg.tp_degree,
+                    deadlock_timeout=cfg.deadlock_timeout,
+                    abort=abort,
+                    poll=min(0.05, cfg.deadlock_timeout / 4),
+                )
+            except BaseException as e:  # noqa: BLE001 - reraised on join
+                errors.append(e)
+                abort.set()
+
+        self._seed_inputs(mailboxes)
+        threads = [
+            threading.Thread(target=runner, args=(a,), name=f"stage-{a.idx}",
+                             daemon=True)
+            for a in actors
+        ]
+        for th in threads:
+            th.start()
+        for th in threads:
+            th.join()
+        for m in mailboxes:
+            m.stop()
+        if errors:
+            raise errors[0]
+        start = {tr.task: tr.start for a in actors for tr in a.traces}
+        end = {tr.task: tr.end for a in actors for tr in a.traces}
+        if len(end) != spec.total_tasks():
+            raise DeadlockError(
+                f"threaded run finished {len(end)}/{spec.total_tasks()} tasks")
+        makespan = max(end.values())
+        for a in actors:
+            a.stats.blocking += max(
+                0.0, makespan - max(tr.end for tr in a.traces))
+            a.stats.deferrals = a.mailbox.group.deferrals
+        return RunResult(
+            makespan=makespan,
+            stage_stats=[a.stats for a in actors],
+            start=start,
+            end=end,
+            spec=spec,
+        )
+
+
+# --------------------------------------------------------------------------
+def run_actor_iteration(
+    spec: PipelineSpec, costs: CostModel, config: ActorConfig
+) -> RunResult:
+    return ActorDriver(spec, costs, config).run()
+
+
+def average_makespan_actor(
+    spec: PipelineSpec,
+    costs: CostModel,
+    config: ActorConfig,
+    iters: int = 10,
+) -> tuple[float, float, list[RunResult]]:
+    """Mean/std of makespan over independently-seeded iterations (CRN per seed)."""
+    results = []
+    for i in range(iters):
+        cfg = dataclasses.replace(config, seed=config.seed + 1000 * i)
+        results.append(ActorDriver(spec, costs, cfg).run())
+    xs = np.array([r.makespan for r in results])
+    return float(xs.mean()), float(xs.std()), results

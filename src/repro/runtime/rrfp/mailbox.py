@@ -1,0 +1,94 @@
+"""Per-stage mailbox: message intake + per-kind ready buffers (§4.1).
+
+The mailbox is the only shared state between a stage actor and the transport
+that feeds it, so it is fully thread-safe (one lock + condition per mailbox).
+Incoming envelopes pass the TP-group admission gate; admitted tasks land in
+per-kind *arrival buffers* — the host analog of the paper's four per-stage
+message buffers — in FIFO arrival order.  The actor consumes them under the
+same lock when it arbitrates.
+
+In simulation mode the driver calls ``deliver`` from the virtual-clock pump
+(single thread, the lock is uncontended); in thread mode each sender's actor
+thread calls it concurrently.
+"""
+from __future__ import annotations
+
+import threading
+import time as _time
+
+from repro.core.taskgraph import Kind, Task
+
+from repro.runtime.rrfp.messages import Envelope
+from repro.runtime.rrfp.tp_group import Admission, TPGroup
+
+
+class Mailbox:
+    """Arrival buffers for one stage actor."""
+
+    def __init__(self, stage: int, tp_degree: int = 1):
+        self.stage = stage
+        self.group = TPGroup(stage, tp_degree)
+        self.cond = threading.Condition()
+        #: admitted-but-unconsumed arrivals, FIFO per kind
+        self.buffers: dict[Kind, list[Task]] = {k: [] for k in Kind}
+        #: payload of the last admitted envelope per task (thread mode)
+        self.payloads: dict[Task, object] = {}
+        self.stopped = False
+        #: monotonic wall time of the last admission/consumption (thread-mode
+        #: starvation detection)
+        self.last_progress = _time.monotonic()
+        self.high_water = {k: 0 for k in Kind}
+
+    # ---- producer side ----------------------------------------------------
+    def deliver(self, env: Envelope, now: float = 0.0) -> Admission | None:
+        """Offer one envelope; buffer the task if its TP rank set completes."""
+        with self.cond:
+            adm = self.group.offer(env, now)
+            if env.payload is not None:
+                self.payloads[env.task] = env.payload
+            if adm is not None:
+                buf = self.buffers[adm.task.kind]
+                buf.append(adm.task)
+                self.high_water[adm.task.kind] = max(
+                    self.high_water[adm.task.kind], len(buf))
+                self.last_progress = _time.monotonic()
+                self.cond.notify_all()
+            return adm
+
+    def deliver_local(self, task: Task) -> None:
+        """Buffer a task whose input is locally produced (no message needed):
+        stage-0/chunk-0 forwards at iteration start, and the last stage's
+        loss gradient."""
+        with self.cond:
+            self.buffers[task.kind].append(task)
+            self.high_water[task.kind] = max(
+                self.high_water[task.kind], len(self.buffers[task.kind]))
+            self.last_progress = _time.monotonic()
+            self.cond.notify_all()
+
+    def stop(self) -> None:
+        with self.cond:
+            self.stopped = True
+            self.cond.notify_all()
+
+    # ---- consumer side (call under ``cond``) ------------------------------
+    def arrived_tasks(self) -> list[Task]:
+        """All buffered tasks in FIFO-per-kind order (F, B, W)."""
+        out: list[Task] = []
+        for k in Kind:
+            out.extend(self.buffers[k])
+        return out
+
+    def consume(self, task: Task) -> object:
+        """Remove a dispatched task from its buffer; return its payload."""
+        self.buffers[task.kind].remove(task)
+        self.last_progress = _time.monotonic()
+        return self.payloads.pop(task, None)
+
+    def wait_for_work(self, timeout: float | None = None) -> bool:
+        """Block until new work arrives or ``stop``; False on timeout."""
+        return self.cond.wait(timeout)
+
+    def starved_for(self) -> float:
+        """Seconds since the mailbox last made progress (thread mode)."""
+        return _time.monotonic() - self.last_progress

@@ -1,0 +1,61 @@
+"""Message types of the host actor runtime (§4.1).
+
+Everything that moves between stage actors is an :class:`Envelope`: a
+task-readiness notification addressed to the (stage, rank) that will hold the
+payload.  With tensor parallelism each logical message fans out into one
+envelope per TP rank; the receiving :class:`~repro.runtime.rrfp.tp_group.TPGroup`
+re-assembles them and only then admits the task into the stage's ready
+buffers (§4.2).
+
+Envelopes are deliberately payload-free in simulation mode — the payload is
+the *fact of arrival*.  In thread mode the payload slot carries the actual
+activation / gradient array produced by the sender's jitted stage callable.
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from typing import Any
+
+from repro.core.taskgraph import Task
+
+_seq = itertools.count()
+
+
+@dataclasses.dataclass(frozen=True)
+class Envelope:
+    """One task-readiness message in flight.
+
+    ``task`` is receiver-side: the task this message makes ready (not the
+    sender task that produced it).  ``seq`` is a global monotone id used for
+    FIFO tie-breaking and tracing.
+    """
+
+    task: Task
+    src_stage: int
+    dst_stage: int
+    rank: int = 0
+    send_time: float = 0.0
+    payload: Any = None
+    seq: int = dataclasses.field(default_factory=lambda: next(_seq))
+
+
+def envelopes_for(
+    task: Task,
+    src_stage: int,
+    tp_degree: int,
+    send_time: float = 0.0,
+    payload: Any = None,
+) -> list[Envelope]:
+    """Fan one logical message out into per-TP-rank envelopes."""
+    return [
+        Envelope(
+            task=task,
+            src_stage=src_stage,
+            dst_stage=task.stage,
+            rank=r,
+            send_time=send_time,
+            payload=payload,
+        )
+        for r in range(max(1, tp_degree))
+    ]

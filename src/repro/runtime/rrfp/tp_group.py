@@ -1,0 +1,79 @@
+"""Tensor-parallel group consistency barrier (§4.2, Appendix D).
+
+A stage with tp_degree K is K ranks executing in lockstep; the group can only
+agree to dispatch a task once *all* ranks hold its input message.  The
+:class:`TPGroup` tracks per-rank arrivals and admits a task at the arrival of
+its last rank.  Whenever the per-rank arrival spread is nonzero the group has
+been *deferred* by rank divergence — the paper's App. D counter.
+
+Each collective-relevant dispatch additionally pays a scalar all-gather
+(``coordination_cost``), calibrated to Table 3 like the DES engine.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+
+from repro.core.taskgraph import Kind, Task
+
+from repro.runtime.rrfp.messages import Envelope
+
+
+@dataclasses.dataclass
+class Admission:
+    """Result of the last-rank arrival that completed a task's message set."""
+
+    task: Task
+    admit_time: float
+    spread: float  # max - min per-rank arrival time
+
+    @property
+    def deferred(self) -> bool:
+        return self.spread > 0.0
+
+
+class TPGroup:
+    """All-ranks readiness gate for one pipeline stage."""
+
+    def __init__(self, stage: int, tp_degree: int = 1):
+        self.stage = stage
+        self.tp_degree = max(1, tp_degree)
+        self._held: dict[Task, dict[int, float]] = {}
+        self.deferrals = 0
+        self.admitted = 0
+
+    def offer(self, env: Envelope, now: float) -> Admission | None:
+        """Record one rank's copy; return an Admission when the set completes.
+
+        Duplicate deliveries for a rank are idempotent (first arrival wins,
+        matching a receive-side buffer that holds the message).
+        """
+        if env.dst_stage != self.stage:
+            raise ValueError(
+                f"envelope for stage {env.dst_stage} offered to group "
+                f"{self.stage}")
+        if not 0 <= env.rank < self.tp_degree:
+            raise ValueError(f"rank {env.rank} out of range for K={self.tp_degree}")
+        holds = self._held.setdefault(env.task, {})
+        holds.setdefault(env.rank, now)
+        if len(holds) < self.tp_degree:
+            return None
+        del self._held[env.task]
+        times = sorted(holds.values())
+        spread = times[-1] - times[0]
+        if spread > 0:
+            self.deferrals += 1
+        self.admitted += 1
+        return Admission(task=env.task, admit_time=now, spread=spread)
+
+    def pending(self) -> dict[Task, int]:
+        """Tasks with an incomplete rank set -> number of ranks still missing."""
+        return {
+            t: self.tp_degree - len(h) for t, h in self._held.items()
+        }
+
+    def coordination_cost(self, task: Task, base: float) -> float:
+        """Per-dispatch scalar all-gather overhead (F/B only, like the engine)."""
+        if self.tp_degree <= 1 or task.kind == Kind.W:
+            return 0.0
+        return base * (1.0 + math.log2(self.tp_degree))

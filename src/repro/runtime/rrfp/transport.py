@@ -1,0 +1,80 @@
+"""Pluggable message transports for the actor runtime (§4.1).
+
+* :class:`SimTransport` — in-process queue transport with *injectable*
+  heavy-tailed latency: each envelope's arrival is delayed by a sample from
+  the :class:`~repro.core.costs.CostModel` communication jitter (per TP
+  rank), delivered on the driver's virtual clock.  Sampling is keyed by
+  (seed, task, rank) rather than drawn from a shared stream, so two runs in
+  different consumption modes see the *same* realized latencies — common
+  random numbers for apples-to-apples hint-vs-precommitted comparisons.
+
+* :class:`ThreadTransport` — wall-clock transport between thread-per-stage
+  actors in one process: ``send`` delivers straight into the destination
+  mailbox (the Python-object hand-off is the wire), waking the receiver's
+  condition variable.
+"""
+from __future__ import annotations
+
+import zlib
+from typing import Callable, Protocol
+
+import numpy as np
+
+from repro.core.costs import CostModel
+
+from repro.runtime.rrfp.mailbox import Mailbox
+from repro.runtime.rrfp.messages import Envelope
+
+
+class Transport(Protocol):
+    def send(self, env: Envelope, now: float = 0.0) -> None:
+        """Hand one envelope to the network; delivery is asynchronous."""
+        ...
+
+
+def rng_for(seed: int, env: Envelope) -> np.random.Generator:
+    """Deterministic per-(task, rank) generator: the CRN keying."""
+    t = env.task
+    return np.random.default_rng(
+        [seed & 0x7FFFFFFF, zlib.crc32(b"rrfp-comm"),
+         int(t.kind), t.stage, t.mb, t.chunk, env.rank])
+
+
+class SimTransport:
+    """Virtual-time transport with sampled heavy-tailed latency.
+
+    ``schedule(time, env)`` is the driver's event-loop hook; the transport
+    never blocks and never touches wall time.
+    """
+
+    def __init__(
+        self,
+        costs: CostModel,
+        schedule: Callable[[float, Envelope], None],
+        seed: int = 0,
+        on_send: Callable[[Envelope, float], None] | None = None,
+    ):
+        self.costs = costs
+        self.schedule = schedule
+        self.seed = seed
+        self.on_send = on_send
+        self.sent = 0
+
+    def send(self, env: Envelope, now: float = 0.0) -> None:
+        lat = self.costs.sample_comm(rng_for(self.seed, env))
+        self.sent += 1
+        if self.on_send is not None:
+            self.on_send(env, lat)
+        self.schedule(now + lat, env)
+
+
+class ThreadTransport:
+    """Direct mailbox-to-mailbox delivery between actor threads."""
+
+    def __init__(self, mailboxes: dict[int, Mailbox]):
+        self.mailboxes = mailboxes
+        self.sent = 0
+
+    def send(self, env: Envelope, now: float = 0.0) -> None:
+        self.sent += 1
+        self.mailboxes[env.dst_stage].deliver(env, now=now)

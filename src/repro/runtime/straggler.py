@@ -14,9 +14,10 @@ import dataclasses
 import numpy as np
 
 from repro.core.costs import CostModel
+from repro.core.engine import RunResult
 from repro.core.hints import HintKind
 from repro.core.synthesis import ema_update_costs, synthesize
-from repro.core.taskgraph import PipelineSpec
+from repro.core.taskgraph import Kind, PipelineSpec
 from repro.pipeline.spec import ScheduleTable, from_stage_orders
 
 
@@ -46,3 +47,14 @@ class StragglerMonitor:
             syn = synthesize(self.spec, self.costs, hint=self.hint)
             return from_stage_orders(self.spec, syn.stage_orders)
         return None
+
+    def observe_result(self, result: RunResult) -> ScheduleTable | None:
+        """EMA feedback from realized actor-runtime (or DES) task timings.
+
+        Collapses a :class:`RunResult` trace to per-stage mean F/B durations
+        and feeds :meth:`observe` — the paper's e_t estimator driven by the
+        host runtime's own dispatch records instead of external profiling.
+        """
+        f = result.durations(Kind.F).mean(axis=1)
+        b = result.durations(Kind.B).mean(axis=1)
+        return self.observe(f, b)

@@ -1,7 +1,11 @@
 """Core RRFP engine behaviour: correctness, deadlock freedom, paper claims."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ModuleNotFoundError:  # deterministic fallback (tests/_hyp_stub.py)
+    from _hyp_stub import given, settings, strategies as st
 
 from repro.core import (
     CostModel,

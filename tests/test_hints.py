@@ -1,0 +1,166 @@
+"""Focused coverage for core/hints.py (Algorithm 1 / Appendix A).
+
+Complements the engine-level tests: exercises round alternation, the
+within-direction priority of ``pick``, BFW's empty-round filling, and the
+shared Appendix C drain helper directly.
+"""
+import pytest
+
+from repro.core.hints import (
+    FIXED_ORDERS,
+    HintArbiter,
+    HintKind,
+    backpressure_drain,
+    pick,
+)
+from repro.core.taskgraph import Kind, PipelineSpec, Task
+
+
+def F(stage, mb, chunk=0):
+    return Task(Kind.F, stage, mb, chunk)
+
+
+def B(stage, mb, chunk=0):
+    return Task(Kind.B, stage, mb, chunk)
+
+
+def W(stage, mb, chunk=0):
+    return Task(Kind.W, stage, mb, chunk)
+
+
+# ---------------------------------------------------------------------------
+# pick(): within-direction tie-breaking (App. A)
+# ---------------------------------------------------------------------------
+class TestPick:
+    def test_forward_prefers_smaller_chunk_then_smaller_mb(self):
+        ready = [F(0, 2, 1), F(0, 5, 0), F(0, 3, 0)]
+        assert pick(ready, Kind.F) == F(0, 3, 0)
+
+    def test_backward_prefers_larger_chunk_then_smaller_mb(self):
+        ready = [B(0, 1, 0), B(0, 7, 1), B(0, 4, 1)]
+        assert pick(ready, Kind.B) == B(0, 4, 1)
+
+    def test_w_inherits_backward_rule(self):
+        ready = [W(0, 3, 0), W(0, 1, 1)]
+        assert pick(ready, Kind.W) == W(0, 1, 1)
+
+    def test_empty_direction_returns_none(self):
+        assert pick([F(0, 0)], Kind.B) is None
+        assert pick([], Kind.F) is None
+
+
+# ---------------------------------------------------------------------------
+# HintArbiter.select(): round alternation
+# ---------------------------------------------------------------------------
+class TestRoundAlternation:
+    def test_bf_rounds(self):
+        """BF: each round tries B then F; after dispatching one direction the
+        same round's other direction runs next."""
+        arb = HintArbiter(HintKind.BF)
+        assert arb.select([B(0, 0), F(0, 0)]) == B(0, 0)
+        assert arb.select([B(0, 1), F(0, 0)]) == F(0, 0)  # same round: F next
+        assert arb.select([B(0, 1), F(0, 1)]) == B(0, 1)  # new round: B first
+
+    def test_fb_rounds(self):
+        arb = HintArbiter(HintKind.FB)
+        assert arb.select([B(0, 0), F(0, 0)]) == F(0, 0)
+        assert arb.select([B(0, 0), F(0, 1)]) == B(0, 0)  # same round: B next
+        assert arb.select([B(0, 1), F(0, 1)]) == F(0, 1)  # new round
+
+    def test_alternation_skips_missing_direction_without_blocking(self):
+        """A hint ranks ready candidates; it never forces waiting."""
+        arb = HintArbiter(HintKind.BF)
+        assert arb.select([F(0, 0)]) == F(0, 0)
+        assert arb.select([F(0, 1)]) == F(0, 1)  # still no B ready: F again
+        assert arb.select([B(0, 0), F(0, 2)]) == B(0, 0)
+
+    def test_priority_hints_have_no_round_state(self):
+        arb = HintArbiter(HintKind.B_PRIORITY)
+        assert arb.select([B(0, 0), F(0, 0)]) == B(0, 0)
+        assert arb.select([B(0, 1), F(0, 0)]) == B(0, 1)  # B again: no rounds
+        arb_f = HintArbiter(HintKind.F_PRIORITY)
+        assert arb_f.select([B(0, 0), F(0, 0)]) == F(0, 0)
+        assert arb_f.select([B(0, 0), F(0, 1)]) == F(0, 1)
+
+    def test_reset_clears_round_state(self):
+        arb = HintArbiter(HintKind.BF)
+        assert arb.select([B(0, 0), F(0, 0)]) == B(0, 0)
+        arb.reset()
+        assert arb.select([B(0, 1), F(0, 0)]) == B(0, 1)  # fresh round: B
+
+
+# ---------------------------------------------------------------------------
+# BFW: weight-update tasks fill empty rounds
+# ---------------------------------------------------------------------------
+class TestBFW:
+    def test_w_only_when_no_compute_direction_ready(self):
+        arb = HintArbiter(HintKind.BFW)
+        assert arb.select([W(0, 0), F(0, 0), B(0, 0)]) == B(0, 0)
+        assert arb.select([W(0, 0), F(0, 0)]) == F(0, 0)
+        assert arb.select([W(0, 0)]) == W(0, 0)
+
+    def test_w_dispatch_does_not_consume_the_round(self):
+        """After a W fills an empty round, the next round still opens with B."""
+        arb = HintArbiter(HintKind.BFW)
+        assert arb.select([B(0, 0), F(0, 0)]) == B(0, 0)
+        assert arb.select([W(0, 0)]) == W(0, 0)  # empty round: W fills
+        # last_dir still reflects the B: the interrupted round's F comes next
+        assert arb.select([B(0, 1), F(0, 0)]) == F(0, 0)
+
+    def test_w_priority_follows_backward_rule(self):
+        arb = HintArbiter(HintKind.BFW)
+        assert arb.select([W(0, 2, 0), W(0, 5, 1)]) == W(0, 5, 1)
+
+
+# ---------------------------------------------------------------------------
+# Appendix C drain helper (shared by engine and actor runtime)
+# ---------------------------------------------------------------------------
+class TestBackpressureDrain:
+    def test_non_interleaved_backward_only(self):
+        spec = PipelineSpec(2, 4)
+        ready = [F(0, 2), B(0, 0), B(0, 1)]
+        task, focus = backpressure_drain(spec, 0, ready, set(), 0)
+        assert task == B(0, 0) and focus == 0
+
+    def test_non_interleaved_no_backward_ready_waits(self):
+        spec = PipelineSpec(2, 4)
+        task, _ = backpressure_drain(spec, 0, [F(0, 2)], set(), 0)
+        assert task is None
+
+    def test_interleaved_follows_completion_order(self):
+        spec = PipelineSpec(2, 2, num_chunks=2)
+        done = {F(0, 0, 0)}
+        # next required for mb 0 is F chunk 1; it is ready -> dispatched
+        task, focus = backpressure_drain(
+            spec, 0, [F(0, 0, 1), F(0, 1, 0)], done, 0)
+        assert task == F(0, 0, 1) and focus == 0
+        # mb 0 fully done -> focus advances to mb 1
+        done = {F(0, 0, 0), F(0, 0, 1), B(0, 0, 1), B(0, 0, 0)}
+        task, focus = backpressure_drain(spec, 0, [F(0, 1, 0)], done, 0)
+        assert task == F(0, 1, 0) and focus == 1
+
+    def test_interleaved_waits_for_required_task(self):
+        spec = PipelineSpec(2, 2, num_chunks=2)
+        done = {F(0, 0, 0)}
+        # required next is F(0,0,1); only mb1 work is ready -> wait
+        task, _ = backpressure_drain(spec, 0, [F(0, 1, 0)], done, 0)
+        assert task is None
+
+
+# ---------------------------------------------------------------------------
+# Fixed orders registry sanity
+# ---------------------------------------------------------------------------
+def test_fixed_orders_registry_complete():
+    spec = PipelineSpec(4, 6)
+    for name in ("gpipe", "1f1b"):
+        for s in range(4):
+            order = FIXED_ORDERS[name](spec, s)
+            assert len(order) == spec.num_tasks_per_stage()
+    specw = PipelineSpec(4, 6, split_backward=True)
+    for s in range(4):
+        assert len(FIXED_ORDERS["zb"](specw, s)) == specw.num_tasks_per_stage()
+
+
+def test_zb_order_requires_split_backward():
+    with pytest.raises(ValueError):
+        FIXED_ORDERS["zb"](PipelineSpec(4, 6), 0)

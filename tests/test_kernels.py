@@ -7,7 +7,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ModuleNotFoundError:  # deterministic fallback (tests/_hyp_stub.py)
+    from _hyp_stub import given, settings, strategies as st
 
 from repro.kernels import ops, ref
 

@@ -10,7 +10,11 @@ import subprocess
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ModuleNotFoundError:  # deterministic fallback (tests/_hyp_stub.py)
+    from _hyp_stub import given, settings, strategies as st
 
 from repro.core.costs import CostModel
 from repro.core.taskgraph import Kind, PipelineSpec, Task
