@@ -6,11 +6,14 @@ admission, CRN-keyed latency sampling — and emits ``BENCH_actor_runtime.json``
 so the perf trajectory of the host runtime accumulates across PRs.
 
     PYTHONPATH=src python -m benchmarks.run --backend actor
+
+Set ``REPRO_SMOKE=1`` to shrink the sweep for CI smoke runs.
 """
 from __future__ import annotations
 
 import dataclasses
 import json
+import os
 
 from repro.core import (
     CostModel,
@@ -35,14 +38,18 @@ def _base_costs(seed: int = 0) -> CostModel:
 def run_actor_benchmark() -> dict:
     """Hint (BF) vs precommitted 1F1B makespans across injection levels."""
     spec = PipelineSpec(S, M)
+    smoke = bool(os.environ.get("REPRO_SMOKE"))
+    iters = 1 if smoke else ITERS
+    levels = ["J0", "J2"] if smoke else list(INJECTION_LEVELS)
     rows = []
-    for level, inj in INJECTION_LEVELS.items():
+    for level in levels:
+        inj = INJECTION_LEVELS[level]
         costs = dataclasses.replace(_base_costs(), injection=inj)
         pre, pre_std, _ = average_makespan_actor(
             spec, costs, ActorConfig(mode="precommitted", fixed_order="1f1b"),
-            ITERS)
+            iters)
         hint, hint_std, _ = average_makespan_actor(
-            spec, costs, ActorConfig(mode="hint", hint=HintKind.BF), ITERS)
+            spec, costs, ActorConfig(mode="hint", hint=HintKind.BF), iters)
         rows.append({
             "level": level,
             "precommitted_1f1b_s": pre,
@@ -56,7 +63,7 @@ def run_actor_benchmark() -> dict:
     des = run_iteration(spec, costs0, EngineConfig(mode="hint")).makespan
     act = run_actor_iteration(spec, costs0, ActorConfig(mode="hint")).makespan
     return {
-        "spec": {"stages": S, "microbatches": M, "iters": ITERS},
+        "spec": {"stages": S, "microbatches": M, "iters": iters},
         "rows": rows,
         "des_vs_actor_hint_J0": {"des_s": des, "actor_s": act},
     }

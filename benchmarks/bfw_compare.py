@@ -1,0 +1,230 @@
+"""BFW paper-table sweep: split-backward W deferral, end to end.
+
+The paper's headline numbers come from the BFW hint — backward split into a
+dX-only B on the critical path and a deferrable weight-gradient W task.  This
+benchmark reproduces that claim at two altitudes and emits ``BENCH_bfw.json``:
+
+* **Simulated sweep** — hints × jitter levels × language/multimodal
+  workloads (``benchmarks.workloads``) × both backends (DES engine and actor
+  runtime).  Fused-vs-split cost models conserve total backward work
+  (``CostModel.with_split_backward``), so the BFW-vs-BF ratio isolates
+  scheduling flexibility.  The compared methods:
+
+  - ``pre_1f1b``  — precommitted 1F1B, fused backward (the baseline)
+  - ``pre_zb``    — precommitted ZB-H1 fixed order, split backward
+  - ``hint_bf``   — readiness-driven BF hint, fused backward
+  - ``hint_bfw``  — readiness-driven BFW hint, split backward, W deferral
+                    capped at ``W_DEFER_CAP`` outstanding stashes per stage
+
+* **Real threaded smoke** — thread-per-stage actors driving *real jitted*
+  stage callables (``pipeline.stagefn``) through the same runtime, BFW split
+  vs. BF fused on a tiny model: proves the W path executes end to end (loss
+  parity, grads accumulated, deferral cap honored).
+
+    PYTHONPATH=src python -m benchmarks.run --backend actor --hint bfw --split-backward
+
+Set ``REPRO_SMOKE=1`` to shrink the sweep for CI smoke runs.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+
+import numpy as np
+
+from repro.core import (
+    EngineConfig,
+    HintKind,
+    INJECTION_LEVELS,
+    PipelineSpec,
+    average_makespan,
+)
+from repro.runtime.rrfp import ActorConfig, average_makespan_actor
+
+from benchmarks.workloads import stage_costs
+
+S, M = 8, 24
+ITERS = 4
+W_DEFER_CAP = 4
+
+WORKLOADS = {
+    "language/GPT3-Large": ("gpt3-large", None),
+    "multimodal/Qwen3-1.7B+ViT-H": ("qwen3-1.7b", "vit-h"),
+}
+
+
+def _smoke() -> bool:
+    return bool(os.environ.get("REPRO_SMOKE"))
+
+
+def _mean_engine(spec, cm, cfg, iters):
+    m, _, _ = average_makespan(spec, cm, cfg, iters)
+    return m
+
+
+def _mean_actor(spec, cm, cfg, iters):
+    m, _, _ = average_makespan_actor(spec, cm, cfg, iters)
+    return m
+
+
+def sweep_rows(iters: int = ITERS) -> list[dict]:
+    """Mean makespans for every (workload, jitter level, backend) cell."""
+    levels = ["J0", "J2"] if _smoke() else list(INJECTION_LEVELS)
+    workloads = (dict(list(WORKLOADS.items())[:1]) if _smoke() else WORKLOADS)
+    iters = 1 if _smoke() else iters
+    fused = PipelineSpec(S, M)
+    split = PipelineSpec(S, M, split_backward=True)
+    out = []
+    for wname, (lm, vit) in workloads.items():
+        base = stage_costs(lm, vit, pp=S)
+        for level in levels:
+            cm_f = dataclasses.replace(base, injection=INJECTION_LEVELS[level])
+            cm_s = cm_f.with_split_backward()
+            for backend in ("engine", "actor"):
+                if backend == "engine":
+                    ms = {
+                        "pre_1f1b": _mean_engine(fused, cm_f, EngineConfig(
+                            mode="precommitted", fixed_order="1f1b"), iters),
+                        "pre_zb": _mean_engine(split, cm_s, EngineConfig(
+                            mode="precommitted", fixed_order="zb"), iters),
+                        "hint_bf": _mean_engine(fused, cm_f, EngineConfig(
+                            mode="hint", hint=HintKind.BF), iters),
+                        "hint_bfw": _mean_engine(split, cm_s, EngineConfig(
+                            mode="hint", hint=HintKind.BFW), iters),
+                    }
+                else:
+                    ms = {
+                        "pre_1f1b": _mean_actor(fused, cm_f, ActorConfig(
+                            mode="precommitted", fixed_order="1f1b"), iters),
+                        "pre_zb": _mean_actor(split, cm_s, ActorConfig(
+                            mode="precommitted", fixed_order="zb"), iters),
+                        "hint_bf": _mean_actor(fused, cm_f, ActorConfig(
+                            mode="hint", hint=HintKind.BF), iters),
+                        "hint_bfw": _mean_actor(split, cm_s, ActorConfig(
+                            mode="hint", hint=HintKind.BFW,
+                            w_defer_cap=W_DEFER_CAP), iters),
+                    }
+                out.append({
+                    "workload": wname,
+                    "level": level,
+                    "backend": backend,
+                    "makespan_s": ms,
+                    "speedups": {
+                        "bfw_vs_bf": ms["hint_bf"] / ms["hint_bfw"],
+                        "bfw_vs_1f1b": ms["pre_1f1b"] / ms["hint_bfw"],
+                        "bfw_vs_zb": ms["pre_zb"] / ms["hint_bfw"],
+                    },
+                })
+    return out
+
+
+def real_threaded_bfw(steps: int = 2) -> dict:
+    """BFW on *real* jitted stage callables: the executed (not simulated)
+    W path.  Verifies completion, loss parity with the fused backward, and
+    the activation-memory deferral cap."""
+    import jax
+
+    from repro.configs import registry
+    from repro.data.synthetic import synth_batch
+    from repro.models.build import build
+    from repro.pipeline.stagefn import (
+        ActorStageProgram, StageFnOptions, StageFns)
+    from repro.runtime.rrfp import ActorDriver
+
+    S2, M2, mb_rows, seq, cap = 2, 4, 2, 16, 2
+    cfg = registry.reduced_config("deepseek-7b", num_layers=4)
+    model = build(cfg, num_stages=S2)
+    key = jax.random.key(0)
+    sp = model.init_stage_params(key)
+    io = model.init_io_params(jax.random.fold_in(key, 1))
+    tokens = M2 * mb_rows * seq
+    fns = StageFns(model, StageFnOptions(
+        mb_rows=mb_rows, seq_len=seq, loss_scale=1.0 / tokens))
+
+    def run(split: bool) -> dict:
+        spec = PipelineSpec(S2, M2, split_backward=split)
+        acfg = ActorConfig(
+            mode="hint",
+            hint=HintKind.BFW if split else HintKind.BF,
+            w_defer_cap=cap if split else 0,
+            deadlock_timeout=300.0)
+        step_ms, losses, w_high = [], [], 0
+        for step in range(steps):
+            batch = synth_batch(cfg, M2 * mb_rows, seq, step=step)
+            programs = [
+                ActorStageProgram(
+                    fns, s, jax.tree.map(lambda x, s=s: x[s], sp), io, batch,
+                    split_backward=split)
+                for s in range(S2)
+            ]
+            res = ActorDriver(spec, None, acfg).run_threaded(list(programs))
+            assert len(res.end) == spec.total_tasks(), "tasks went missing"
+            step_ms.append(res.makespan * 1e3)
+            losses.append(float(sum(p.loss_acc for p in programs)) / tokens)
+            w_high = max(w_high, *(p.w_high_water for p in programs))
+        return {"step_ms": step_ms, "loss": losses, "w_high_water": w_high,
+                "tasks": spec.total_tasks()}
+
+    fused = run(split=False)
+    bfw = run(split=True)
+    assert bfw["w_high_water"] <= cap, (bfw["w_high_water"], cap)
+    assert abs(bfw["loss"][0] - fused["loss"][0]) < 1e-4 * max(
+        1.0, abs(fused["loss"][0])), (bfw["loss"], fused["loss"])
+    return {
+        "model": "deepseek-7b (reduced, 4 layers)",
+        "stages": S2, "microbatches": M2, "w_defer_cap": cap,
+        "bf_fused": fused, "bfw_split": bfw,
+        "loss_parity": True,
+    }
+
+
+def run_bfw_benchmark() -> dict:
+    rows = sweep_rows()
+    actor_jittered = [
+        r for r in rows if r["backend"] == "actor" and r["level"] != "J0"]
+    bfw_le_bf = all(
+        r["makespan_s"]["hint_bfw"] <= r["makespan_s"]["hint_bf"]
+        for r in actor_jittered)
+    mean_ratio = float(np.mean(
+        [r["speedups"]["bfw_vs_bf"] for r in actor_jittered]))
+    return {
+        "spec": {"stages": S, "microbatches": M,
+                 "iters": 1 if _smoke() else ITERS,
+                 "w_defer_cap": W_DEFER_CAP, "smoke": _smoke()},
+        "sweep": rows,
+        "real_threaded": real_threaded_bfw(),
+        "summary": {
+            "bfw_le_bf_on_jittered_actor_sweep": bfw_le_bf,
+            "mean_bfw_vs_bf_speedup_jittered_actor": mean_ratio,
+        },
+    }
+
+
+def emit_json(path: str = "BENCH_bfw.json") -> dict:
+    report = run_bfw_benchmark()
+    with open(path, "w") as f:
+        json.dump(report, f, indent=2)
+    return report
+
+
+def bfw_rows(json_path: str = "BENCH_bfw.json") -> list[tuple[str, float, str]]:
+    """CSV rows for ``benchmarks.run`` (name, us_per_call, derived)."""
+    report = emit_json(json_path)
+    out = []
+    for r in report["sweep"]:
+        tag = f"bfw/{r['workload']}/{r['level']}/{r['backend']}"
+        ms = r["makespan_s"]
+        sp = r["speedups"]
+        out.append((f"{tag}/hint-bfw", ms["hint_bfw"] * 1e6,
+                    f"vs_bf={sp['bfw_vs_bf']:.2f}x"))
+        out.append((f"{tag}/hint-bf", ms["hint_bf"] * 1e6,
+                    f"vs_1f1b={sp['bfw_vs_1f1b']:.2f}x"))
+    rt = report["real_threaded"]
+    out.append(("bfw/real-threaded/bfw-split",
+                float(np.mean(rt["bfw_split"]["step_ms"])) * 1e3,
+                f"w_high_water={rt['bfw_split']['w_high_water']}"))
+    out.append(("bfw/real-threaded/bf-fused",
+                float(np.mean(rt["bf_fused"]["step_ms"])) * 1e3,
+                f"loss_parity={rt['loss_parity']}"))
+    return out

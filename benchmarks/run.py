@@ -3,11 +3,15 @@
 
     PYTHONPATH=src python -m benchmarks.run [table1 table6 ...]
     PYTHONPATH=src python -m benchmarks.run --backend actor
+    PYTHONPATH=src python -m benchmarks.run --backend actor --hint bfw --split-backward
 
 ``--backend des`` (default) drives the discrete-event engine tables;
 ``--backend actor`` drives the host actor runtime (``repro.runtime.rrfp``)
 and writes ``BENCH_actor_runtime.json`` comparing hint vs. precommitted
-makespan under injected jitter.
+makespan under injected jitter.  Adding ``--hint bfw --split-backward``
+switches to the BFW sweep (``benchmarks.bfw_compare``): split-backward W
+deferral across hints × jitter levels × workloads × backends, plus a
+real-jitted-callable threaded run, emitting ``BENCH_bfw.json``.
 """
 from __future__ import annotations
 
@@ -22,22 +26,43 @@ def main() -> None:
     ap.add_argument("--backend", default="des", choices=("des", "actor"),
                     help="des: discrete-event engine; actor: host actor "
                          "runtime (emits BENCH_actor_runtime.json)")
-    ap.add_argument("--json-out", default="BENCH_actor_runtime.json",
-                    help="actor backend: where to write the JSON report")
+    ap.add_argument("--hint", default="bf", choices=("bf", "bfw"),
+                    help="actor backend: bf (default sweep) or bfw "
+                         "(split-backward sweep, needs --split-backward)")
+    ap.add_argument("--split-backward", action="store_true",
+                    help="actor backend: run the BFW split-backward sweep "
+                         "(emits BENCH_bfw.json)")
+    ap.add_argument("--json-out", default=None,
+                    help="actor backend: where to write the JSON report "
+                         "(default BENCH_actor_runtime.json, or "
+                         "BENCH_bfw.json for the BFW sweep)")
     args = ap.parse_args()
 
     if args.backend == "actor":
-        from benchmarks.actor_compare import actor_runtime_rows
-
         if args.tables:
             print(f"# --backend actor ignores table names {args.tables}",
                   file=sys.stderr)
+        bfw = args.split_backward or args.hint == "bfw"
+        if bfw and not (args.split_backward and args.hint == "bfw"):
+            raise SystemExit(
+                "--hint bfw and --split-backward go together: the BFW hint "
+                "needs W tasks, which only exist under split backward")
+        if bfw:
+            from benchmarks.bfw_compare import bfw_rows as rows_fn
+
+            json_out = args.json_out or "BENCH_bfw.json"
+            label = "bfw"
+        else:
+            from benchmarks.actor_compare import actor_runtime_rows as rows_fn
+
+            json_out = args.json_out or "BENCH_actor_runtime.json"
+            label = "actor_runtime"
         t0 = time.time()
         print("name,us_per_call,derived")
-        for row_name, us, derived in actor_runtime_rows(args.json_out):
+        for row_name, us, derived in rows_fn(json_out):
             print(f"{row_name},{us:.1f},{derived}")
-        print(f"# actor_runtime done in {time.time() - t0:.1f}s "
-              f"-> {args.json_out}", file=sys.stderr)
+        print(f"# {label} done in {time.time() - t0:.1f}s "
+              f"-> {json_out}", file=sys.stderr)
         return
 
     from benchmarks.paper_tables import ALL_TABLES

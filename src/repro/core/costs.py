@@ -168,6 +168,26 @@ class CostModel:
     def sample_comm(self, rng: np.random.Generator) -> float:
         return self.comm_base * self.comm_jitter.sample(rng)
 
+    def with_split_backward(self, dx_frac: float = 0.5) -> "CostModel":
+        """BFW decomposition of this model's backward cost.
+
+        The fused B cost splits into a dX-only B (``dx_frac`` of it, on the
+        critical path) and a deferrable W carrying the rest — total backward
+        work is conserved, so fused-vs-split comparisons isolate scheduling
+        flexibility from compute volume.
+        """
+        if not 0.0 < dx_frac < 1.0:
+            raise ValueError(f"dx_frac must be in (0, 1), got {dx_frac}")
+        if np.any(self.w_cost):
+            raise ValueError(
+                "backward is already split (nonzero w_cost); splitting again "
+                "would discard W work and break conservation")
+        return dataclasses.replace(
+            self,
+            b_cost=self.b_cost * dx_frac,
+            w_cost=self.b_cost * (1.0 - dx_frac),
+        )
+
     def expected(self) -> "CostModel":
         """Jitter-free copy (used for schedule synthesis)."""
         return dataclasses.replace(

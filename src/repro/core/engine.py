@@ -143,6 +143,11 @@ class Engine:
     def __init__(self, spec: PipelineSpec, costs: CostModel, config: EngineConfig):
         if costs.num_stages != spec.num_stages:
             raise ValueError("cost model / spec stage mismatch")
+        if (spec.split_backward and config.mode == "hint"
+                and config.hint != HintKind.BFW):
+            raise ValueError(
+                f"hint mode on a split-backward spec requires HintKind.BFW "
+                f"(got {config.hint}): only the BFW hint dispatches W tasks")
         self.spec = spec
         self.costs = costs
         self.config = config

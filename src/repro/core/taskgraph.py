@@ -102,6 +102,8 @@ class PipelineSpec:
             if t.chunk > 0:  # interleaved wrap
                 return Task(Kind.B, s_last, t.mb, t.chunk - 1)
             return None
+        # W is stage-local: its weight gradient feeds no other stage, so it
+        # never emits a message and never passes a TP admission gate.
         return None
 
     def local_predecessor(self, t: Task) -> Task | None:

@@ -30,6 +30,7 @@ import numpy as np
 from repro.ckpt.store import CheckpointStore
 from repro.configs import registry
 from repro.core.costs import CostModel
+from repro.core.hints import HintKind
 from repro.core.taskgraph import PipelineSpec
 from repro.data.synthetic import PrefetchIterator, synth_batch
 from repro.launch.mesh import make_mesh
@@ -54,7 +55,8 @@ def build_trainer(arch: str, *, data: int, stages: int, layers: int | None,
     io_params = model.init_io_params(jax.random.fold_in(key, 1))
     partition = partition_for(model, stage_params, io_params)
 
-    spec = PipelineSpec(stages, microbatches)
+    spec = PipelineSpec(stages, microbatches,
+                        split_backward=(schedule == "zb"))
     table = schedules.BUILDERS[schedule](spec)
     global_tokens = data * microbatches * mb_rows * seq
     opts = ExecOptions(mb_rows=mb_rows, seq_len=seq,
@@ -92,7 +94,6 @@ def train_actor(args) -> list[float]:
     Single-process: stage s's parameters live with stage s's actor; AdamW
     runs host-side over the accumulated per-stage grads.  Returns the loss
     history (for tests)."""
-    from repro.core.hints import HintKind
     from repro.optim.adamw import _adamw_update, lr_at
     from repro.pipeline.stagefn import (
         ActorStageProgram, StageFnOptions, StageFns)
@@ -104,21 +105,34 @@ def train_actor(args) -> list[float]:
     key = jax.random.key(0)
     stage_params = model.init_stage_params(key)
     io_params = model.init_io_params(jax.random.fold_in(key, 1))
-    spec = PipelineSpec(args.stages, args.microbatches)
+    split = args.split_backward or args.schedule == "zb"
+    hint = HintKind(args.hint)
+    spec = PipelineSpec(args.stages, args.microbatches, split_backward=split)
     batch_size = args.microbatches * args.mb_rows
     tokens = batch_size * args.seq
     fns = StageFns(model, StageFnOptions(
         mb_rows=args.mb_rows, seq_len=args.seq, loss_scale=1.0 / tokens))
     if args.schedule == "rrfp":
         mode, fixed = "hint", "1f1b"
+        if split != (hint == HintKind.BFW):
+            raise SystemExit(
+                "--hint bfw and --split-backward go together: the BFW hint "
+                "needs W tasks, which only exist under split backward (and "
+                "only the BFW hint dispatches them)")
+    elif args.schedule == "zb":
+        mode, fixed = "precommitted", "zb"
     elif args.schedule in ("1f1b", "gpipe"):
+        if split:
+            raise SystemExit(
+                f"--split-backward is not defined for the fused-order "
+                f"{args.schedule!r} baseline; use --schedule zb")
         mode, fixed = "precommitted", args.schedule
     else:
         raise SystemExit(
-            f"--runtime actor supports schedules rrfp/1f1b/gpipe, "
-            f"not {args.schedule!r} (zb needs split-backward W tasks, which "
-            f"the actor stage program does not execute yet)")
-    acfg = ActorConfig(mode=mode, fixed_order=fixed,
+            f"--runtime actor supports schedules rrfp/1f1b/gpipe/zb, "
+            f"not {args.schedule!r}")
+    acfg = ActorConfig(mode=mode, hint=hint, fixed_order=fixed,
+                       w_defer_cap=args.w_defer_cap,
                        deadlock_timeout=args.deadlock_timeout)
 
     opt_cfg = AdamWConfig(lr=args.lr, warmup_steps=min(20, args.steps),
@@ -144,9 +158,15 @@ def train_actor(args) -> list[float]:
         new_v = jax.tree.map(lambda o: o[2], out, is_leaf=lambda o: isinstance(o, tuple))
         return new_p, new_m, new_v, lr
 
-    monitor = StragglerMonitor(spec=spec, costs=CostModel.uniform(args.stages))
+    # The monitor re-synthesizes precommitted tables through the DES engine,
+    # whose baseline orders model a fused backward — feed it the fused twin
+    # of the spec (same stages/microbatches, W folded into B).
+    monitor = StragglerMonitor(
+        spec=PipelineSpec(args.stages, args.microbatches),
+        costs=CostModel.uniform(args.stages))
     print(f"arch={args.arch} N={cfg.param_count():,} params  runtime=actor "
-          f"mode={mode}  stages={args.stages}  microbatches={args.microbatches}")
+          f"mode={mode}  hint={hint.value}  split_backward={split}  "
+          f"stages={args.stages}  microbatches={args.microbatches}")
     losses: list[float] = []
     for step in range(args.steps):
         batch = synth_batch(cfg, batch_size, args.seq, seed=args.seed,
@@ -154,7 +174,8 @@ def train_actor(args) -> list[float]:
         sp, io = params["sp"], params["io"]
         programs = [
             ActorStageProgram(
-                fns, s, jax.tree.map(lambda x, s=s: x[s], sp), io, batch)
+                fns, s, jax.tree.map(lambda x, s=s: x[s], sp), io, batch,
+                split_backward=split)
             for s in range(args.stages)
         ]
         t0 = time.time()
@@ -167,7 +188,9 @@ def train_actor(args) -> list[float]:
                              {"sp": d_sp, "io": d_io})
         params, mstate, vstate, lr = apply_update(
             params, grads, mstate, vstate, jnp.asarray(step, jnp.int32))
-        loss = sum(p.loss_sum for p in programs) / tokens
+        # single device sync per step: the programs accumulate the loss as a
+        # device array (no float() in the F hot path)
+        loss = float(sum(p.loss_acc for p in programs)) / tokens
         losses.append(loss)
         bd = result.breakdown()
         new_table = monitor.observe_result(result)
@@ -196,6 +219,17 @@ def main() -> None:
     ap.add_argument("--runtime", default="table", choices=("table", "actor"),
                     help="table: compiled schedule-table executor (default); "
                          "actor: thread-per-stage readiness-driven runtime")
+    ap.add_argument("--hint", default="bf",
+                    choices=[h.value for h in HintKind],
+                    help="actor runtime, --schedule rrfp: hint order for "
+                         "ready-set arbitration (bfw needs --split-backward)")
+    ap.add_argument("--split-backward", action="store_true",
+                    help="actor runtime: BFW decomposition — B computes dX "
+                         "only, deferrable W tasks accumulate weight grads")
+    ap.add_argument("--w-defer-cap", type=int, default=4,
+                    help="actor runtime, split backward: max outstanding "
+                         "un-executed W tasks per stage (activation-memory "
+                         "bound; 0 = unbounded)")
     ap.add_argument("--deadlock-timeout", type=float, default=120.0,
                     help="actor runtime: seconds of stage starvation before "
                          "aborting with DeadlockError")

@@ -87,6 +87,14 @@ class StageFns:
     at the last stage.  ``backward(s)(sp_s, io, x, g_in, bm) ->
     (dx, d_stage, d_io)`` — g_in ignored at the last stage (the loss is the
     objective there).
+
+    Under BFW decomposition the fused backward splits into two jitted
+    callables over the *same* scalarized objective:
+
+    * ``backward_dx(s)(sp_s, io, x, g_in, bm) -> dx`` — the dX-only B task
+      (``argnums=(2,)``), on the critical inter-stage path;
+    * ``weight_grad(s)(sp_s, io, x, g_in, bm) -> (d_stage, d_io)`` — the
+      deferrable per-microbatch W task (``argnums=(0, 1)``), stage-local.
     """
 
     def __init__(self, model: ArchModel, opts: StageFnOptions):
@@ -96,6 +104,8 @@ class StageFns:
         self.ce_chunk = default_ce_chunk(cfg, opts.ce_chunk)
         self._fwd: dict[int, Any] = {}
         self._bwd: dict[int, Any] = {}
+        self._bwd_dx: dict[int, Any] = {}
+        self._wgrad: dict[int, Any] = {}
 
     # ---- helpers -------------------------------------------------------
     def _aux(self, bm: dict) -> dict:
@@ -157,6 +167,32 @@ class StageFns:
             self._bwd[stage] = jax.jit(b)
         return self._bwd[stage]
 
+    def backward_dx(self, stage: int):
+        """dX-only backward (the B task of the BFW decomposition)."""
+        if stage not in self._bwd_dx:
+            def b_dx(sp_s, io, x, g_in, bm):
+                (dx,) = jax.grad(
+                    lambda x_: self._objective(
+                        stage, sp_s, io, x_, g_in, bm),
+                    argnums=(0,))(x)
+                return dx
+
+            self._bwd_dx[stage] = jax.jit(b_dx)
+        return self._bwd_dx[stage]
+
+    def weight_grad(self, stage: int):
+        """Per-microbatch weight gradient (the deferrable W task)."""
+        if stage not in self._wgrad:
+            def w(sp_s, io, x, g_in, bm):
+                dsp, dio = jax.grad(
+                    lambda sp_, io_: self._objective(
+                        stage, sp_, io_, x, g_in, bm),
+                    argnums=(0, 1))(sp_s, io)
+                return dsp, dio
+
+            self._wgrad[stage] = jax.jit(w)
+        return self._wgrad[stage]
+
 
 def microbatch(batch: dict, mb: int, mb_rows: int) -> dict:
     """Host-side microbatch slice of a [M*mb_rows, ...] batch dict."""
@@ -178,21 +214,49 @@ class ActorStageProgram:
 
     F: consume the upstream activation payload (None at stage 0), run the
     jitted forward, stash the stage input for remat-backward, emit y.
-    B: consume the downstream gradient payload (None at the last stage),
-    re-run forward under grad, accumulate parameter grads, emit dx.
+    B (fused): consume the downstream gradient payload (None at the last
+    stage), re-run forward under grad, accumulate parameter grads, emit dx.
+
+    With ``split_backward=True`` (the BFW decomposition):
+
+    B: run the dX-only backward, stash the (x, g_in) pair for the W task,
+    emit dx.  Stage 0 skips the dX computation entirely — no stage consumes
+    its input gradient.
+    W: consume the stashed pair, run the weight-grad callable, accumulate
+    ``d_stage``/``d_io``.  W emits no payload: its result is stage-local
+    (``PipelineSpec.message_successor`` is None for W, so no envelope is
+    ever sent and no TP admission gate applies).
+
+    The running loss is accumulated as a device array — reading
+    ``loss_sum`` materializes it (one sync), so the F hot path never blocks
+    on the device.
     """
 
-    def __init__(self, fns: StageFns, stage: int, sp_s, io, batch: dict):
+    def __init__(self, fns: StageFns, stage: int, sp_s, io, batch: dict,
+                 *, split_backward: bool = False):
         self.fns = fns
         self.stage = stage
         self.sp_s = sp_s
         self.io = io
         self.batch = batch
+        self.split_backward = split_backward
         self.residual: dict[int, Any] = {}  # mb -> stage input
+        #: BFW: mb -> (x, g_in) held from B-time until the W task fires
+        self.w_pending: dict[int, tuple[Any, Any]] = {}
+        self.w_high_water = 0  # max outstanding W stashes (memory bound)
         self.d_stage = jax.tree.map(jnp.zeros_like, sp_s)
         self.d_io = jax.tree.map(jnp.zeros_like, io)
-        self.loss_sum = 0.0
+        self.loss_acc = jnp.zeros((), jnp.float32)
         self._g_dummy = None
+
+    @property
+    def loss_sum(self) -> float:
+        """Materialized loss total (forces one device sync per read)."""
+        return float(self.loss_acc)
+
+    def w_outstanding(self) -> int:
+        """Un-executed W tasks currently holding activation memory."""
+        return len(self.w_pending)
 
     def __call__(self, task: Task, payload: Any) -> Any:
         bm = microbatch(self.batch, task.mb, self.fns.opts.mb_rows)
@@ -201,15 +265,34 @@ class ActorStageProgram:
             y, loss = self.fns.forward(self.stage)(
                 self.sp_s, self.io, x, bm)
             self.residual[task.mb] = x
-            self.loss_sum += float(loss)
+            self.loss_acc = self.loss_acc + loss
             self._g_dummy = jnp.zeros_like(y)
             return y
         if task.kind == Kind.B:
             x = self.residual.pop(task.mb)
             g_in = payload if payload is not None else self._g_dummy
+            if self.split_backward:
+                self.w_pending[task.mb] = (x, g_in)
+                self.w_high_water = max(self.w_high_water,
+                                        len(self.w_pending))
+                if self.stage == 0:
+                    return None  # nobody consumes stage 0's input gradient
+                return self.fns.backward_dx(self.stage)(
+                    self.sp_s, self.io, x, g_in, bm)
             dx, dsp, dio = self.fns.backward(self.stage)(
                 self.sp_s, self.io, x, g_in, bm)
             self.d_stage = jax.tree.map(jnp.add, self.d_stage, dsp)
             self.d_io = jax.tree.map(jnp.add, self.d_io, dio)
             return dx
+        if task.kind == Kind.W:
+            if not self.split_backward:
+                raise ValueError(
+                    f"{task!r} dispatched to a fused-backward stage program "
+                    f"(construct ActorStageProgram with split_backward=True)")
+            x, g_in = self.w_pending.pop(task.mb)
+            dsp, dio = self.fns.weight_grad(self.stage)(
+                self.sp_s, self.io, x, g_in, bm)
+            self.d_stage = jax.tree.map(jnp.add, self.d_stage, dsp)
+            self.d_io = jax.tree.map(jnp.add, self.d_io, dio)
+            return None  # stage-local: no outgoing envelope
         raise ValueError(f"actor stage program cannot run {task!r}")

@@ -26,7 +26,7 @@ import time as _time
 from typing import Any, Callable
 
 from repro.core.engine import DeadlockError, StageStats
-from repro.core.hints import HintArbiter, HintKind, backpressure_drain
+from repro.core.hints import HintArbiter, HintKind, backpressure_drain, pick
 from repro.core.taskgraph import Kind, PipelineSpec, Task
 
 from repro.runtime.rrfp.mailbox import Mailbox
@@ -55,6 +55,7 @@ class StageActor:
         hint: HintKind = HintKind.BF,
         order: list[Task] | None = None,
         buffer_limit: int = 32,
+        w_defer_cap: int = 0,
     ):
         if mode not in ("hint", "precommitted"):
             raise ValueError(f"unknown mode {mode!r}")
@@ -68,11 +69,13 @@ class StageActor:
         self.order = order
         self.order_pos = 0
         self.buffer_limit = buffer_limit
+        self.w_defer_cap = w_defer_cap
         self.arrived: set[Task] = set()
         self.ready: set[Task] = set()
         self.done: set[Task] = set()
         self.n_f = 0
         self.n_b = 0
+        self.n_w = 0
         self.drain_focus = 0
         self.stats = StageStats()
         self.traces: list[TaskTrace] = []
@@ -102,6 +105,19 @@ class StageActor:
     def backpressured(self) -> bool:
         return self.mode == "hint" and self.n_f - self.n_b >= self.buffer_limit
 
+    def w_backlog(self) -> int:
+        """Completed-B microbatches whose W has not executed yet.  Each holds
+        a stashed (x, g_in) pair, so this is the stage's deferred-W
+        activation-memory footprint."""
+        return self.n_b - self.n_w
+
+    def w_overcap(self) -> bool:
+        """App. C-style memory backpressure on W deferral: at the cap the
+        stage must retire a weight-gradient task before any further B."""
+        return (self.mode == "hint" and self.spec.split_backward
+                and self.w_defer_cap > 0
+                and self.w_backlog() >= self.w_defer_cap)
+
     def select(self) -> Task | None:
         """Pick the next task to dispatch from the *currently* ready set."""
         if self.mode == "precommitted":
@@ -109,6 +125,12 @@ class StageActor:
                 return None
             nxt = self.order[self.order_pos]
             return nxt if nxt in self.ready else None
+        if self.w_overcap():
+            # Every completed B locally enables its W, so a ready W exists
+            # whenever the backlog is nonzero; retiring it frees the stash.
+            task = pick(sorted(self.ready), Kind.W)
+            if task is not None:
+                return task
         if self.backpressured():
             task, self.drain_focus = backpressure_drain(
                 self.spec, self.idx, sorted(self.ready), self.done,
@@ -138,6 +160,10 @@ class StageActor:
             self.n_b += 1
             if self.spec.split_backward:
                 self._maybe_enqueue(Task(Kind.W, self.idx, task.mb, task.chunk))
+        elif task.kind == Kind.W:
+            self.n_w += 1
+        # W tasks are stage-local by construction: message_successor(W) is
+        # None, so no envelope is emitted and no TP admission gate applies.
         return self.spec.message_successor(task)
 
     def finished(self) -> bool:
@@ -205,6 +231,7 @@ class StageActor:
             self.stats.compute += end - start
             with self.mailbox.cond:
                 succ = self.complete(task)
+                self.mailbox.touch()
             self.traces.append(TaskTrace(task, start, end))
             idle_since = end
             if succ is not None:

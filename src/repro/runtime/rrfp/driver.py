@@ -49,6 +49,9 @@ class ActorConfig:
     fixed_order: str = "1f1b"  # precommitted mode: key into FIXED_ORDERS
     custom_orders: list[list[Task]] | None = None  # overrides fixed_order
     buffer_limit: int = 32  # App. C backpressure limit
+    #: BFW: max outstanding un-executed W tasks per stage (each holds one
+    #: stashed (x, g_in) activation pair); 0 = unbounded deferral
+    w_defer_cap: int = 0
     tp_degree: int = 1
     tp_coord_base: float = 75e-6  # scalar all-gather cost (Table 3)
     seed: int = 0
@@ -69,6 +72,11 @@ class ActorDriver:
                  config: ActorConfig):
         if costs is not None and costs.num_stages != spec.num_stages:
             raise ValueError("cost model / spec stage mismatch")
+        if (spec.split_backward and config.mode == "hint"
+                and config.hint != HintKind.BFW):
+            raise ValueError(
+                f"hint mode on a split-backward spec requires HintKind.BFW "
+                f"(got {config.hint}): only the BFW hint dispatches W tasks")
         self.spec = spec
         self.costs = costs
         self.config = config
@@ -88,7 +96,7 @@ class ActorDriver:
             mailboxes.append(mb)
             actors.append(StageActor(
                 s, spec, mb, mode=cfg.mode, hint=cfg.hint, order=order,
-                buffer_limit=cfg.buffer_limit))
+                buffer_limit=cfg.buffer_limit, w_defer_cap=cfg.w_defer_cap))
         return mailboxes, actors
 
     def _seed_inputs(self, mailboxes: list[Mailbox]) -> None:

@@ -66,6 +66,13 @@ class Mailbox:
             self.last_progress = _time.monotonic()
             self.cond.notify_all()
 
+    def touch(self) -> None:
+        """Record actor progress (call under ``cond``).  Task completions
+        count against starvation even when no message moved — e.g. a stage
+        draining locally-enabled W tasks never touches its buffers but is
+        anything but starved."""
+        self.last_progress = _time.monotonic()
+
     def stop(self) -> None:
         with self.cond:
             self.stopped = True
