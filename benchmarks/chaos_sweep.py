@@ -1,0 +1,114 @@
+"""Chaos sweep: correctness + makespan of both consumption modes under
+escalating fault injection (emits ``BENCH_chaos.json``).
+
+For each chaos level C0..C3 (none → heavy: per-edge latency, reorder,
+duplication, a straggler stage, transient stalls) and each consumption mode
+(hint BF vs precommitted 1F1B), runs seeded iterations through the actor
+runtime with trace recording and reports:
+
+* mean/std makespan (CRN-keyed: both modes see identical fault draws);
+* the count of runs on which *all* conformance invariants held
+  (``repro.runtime.rrfp.conformance`` — the same checkers the test suite
+  enforces) — the "robust under variability" claim as a measured quantity,
+  not an anecdote;
+* duplicate-suppression and rank-deferral counters from the traces.
+
+    PYTHONPATH=src python -m benchmarks.run --backend actor --chaos
+
+Set ``REPRO_SMOKE=1`` to shrink the sweep for CI smoke runs.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+
+import numpy as np
+
+from repro.core import CostModel, HintKind, PipelineSpec, multimodal_stage_flops
+from repro.runtime.rrfp import CHAOS_LEVELS, ActorConfig, ActorDriver
+from repro.runtime.rrfp.conformance import holds as invariants_hold
+
+S, M = 8, 32
+ITERS = 4
+
+
+def _base_costs(seed: int = 0) -> CostModel:
+    return CostModel.from_stage_flops(
+        multimodal_stage_flops(4e12, 2e12, S), comm_base=2e-3, seed=seed)
+
+
+def run_chaos_sweep() -> dict:
+    spec = PipelineSpec(S, M)
+    smoke = bool(os.environ.get("REPRO_SMOKE"))
+    iters = 1 if smoke else ITERS
+    levels = ["C0", "C2"] if smoke else list(CHAOS_LEVELS)
+    modes = {
+        "hint_bf": ActorConfig(mode="hint", hint=HintKind.BF,
+                               record_trace=True),
+        "precommitted_1f1b": ActorConfig(mode="precommitted",
+                                         fixed_order="1f1b",
+                                         record_trace=True),
+    }
+    rows = []
+    for level in levels:
+        base_chaos = CHAOS_LEVELS[level]
+        per_mode: dict[str, dict] = {}
+        for mode_name, base_cfg in modes.items():
+            spans, ok, dups, defers = [], 0, 0, 0
+            for i in range(iters):
+                chaos = (dataclasses.replace(base_chaos, seed=100 + i)
+                         if base_chaos.active() else None)
+                cfg = dataclasses.replace(base_cfg, seed=1000 * i,
+                                          chaos=chaos)
+                driver = ActorDriver(spec, _base_costs(), cfg)
+                result = driver.run()
+                spans.append(result.makespan)
+                trace = driver.trace
+                if invariants_hold(trace, spec, cfg):
+                    ok += 1
+                dups += sum(1 for ev in trace.events if ev.kind == "tp_dup")
+                defers += sum(s.deferrals for s in result.stage_stats)
+            xs = np.array(spans)
+            per_mode[mode_name] = {
+                "makespan_s": float(xs.mean()),
+                "makespan_std": float(xs.std()),
+                "invariants_ok": ok,
+                "runs": iters,
+                "tp_dups_suppressed": dups,
+                "rank_deferrals": defers,
+            }
+        rows.append({
+            "level": level,
+            "chaos": base_chaos.to_json(),
+            **{k: v for k, v in per_mode.items()},
+            "speedup": (per_mode["precommitted_1f1b"]["makespan_s"]
+                        / max(per_mode["hint_bf"]["makespan_s"], 1e-12)),
+        })
+    return {
+        "spec": {"stages": S, "microbatches": M, "iters": iters},
+        "rows": rows,
+    }
+
+
+def emit_json(path: str = "BENCH_chaos.json") -> dict:
+    report = run_chaos_sweep()
+    with open(path, "w") as f:
+        json.dump(report, f, indent=2)
+    return report
+
+
+def chaos_rows(json_path: str = "BENCH_chaos.json") -> list[tuple[str, float, str]]:
+    """CSV rows for ``benchmarks.run``."""
+    report = emit_json(json_path)
+    out = []
+    for r in report["rows"]:
+        for mode in ("precommitted_1f1b", "hint_bf"):
+            m = r[mode]
+            out.append((
+                f"chaos/{r['level']}/{mode}",
+                m["makespan_s"] * 1e6,
+                f"invariants={m['invariants_ok']}/{m['runs']},"
+                f"speedup={r['speedup']:.2f}x" if mode == "hint_bf"
+                else f"invariants={m['invariants_ok']}/{m['runs']}"))
+    return out

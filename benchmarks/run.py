@@ -4,6 +4,7 @@
     PYTHONPATH=src python -m benchmarks.run [table1 table6 ...]
     PYTHONPATH=src python -m benchmarks.run --backend actor
     PYTHONPATH=src python -m benchmarks.run --backend actor --hint bfw --split-backward
+    PYTHONPATH=src python -m benchmarks.run --backend actor --chaos
 
 ``--backend des`` (default) drives the discrete-event engine tables;
 ``--backend actor`` drives the host actor runtime (``repro.runtime.rrfp``)
@@ -11,7 +12,10 @@ and writes ``BENCH_actor_runtime.json`` comparing hint vs. precommitted
 makespan under injected jitter.  Adding ``--hint bfw --split-backward``
 switches to the BFW sweep (``benchmarks.bfw_compare``): split-backward W
 deferral across hints × jitter levels × workloads × backends, plus a
-real-jitted-callable threaded run, emitting ``BENCH_bfw.json``.
+real-jitted-callable threaded run, emitting ``BENCH_bfw.json``.  Adding
+``--chaos`` instead runs the fault-injection sweep (``benchmarks.
+chaos_sweep``): both consumption modes across chaos levels C0..C3 with
+per-run conformance-invariant checks, emitting ``BENCH_chaos.json``.
 """
 from __future__ import annotations
 
@@ -32,6 +36,9 @@ def main() -> None:
     ap.add_argument("--split-backward", action="store_true",
                     help="actor backend: run the BFW split-backward sweep "
                          "(emits BENCH_bfw.json)")
+    ap.add_argument("--chaos", action="store_true",
+                    help="actor backend: run the fault-injection sweep "
+                         "with conformance checks (emits BENCH_chaos.json)")
     ap.add_argument("--json-out", default=None,
                     help="actor backend: where to write the JSON report "
                          "(default BENCH_actor_runtime.json, or "
@@ -47,7 +54,15 @@ def main() -> None:
             raise SystemExit(
                 "--hint bfw and --split-backward go together: the BFW hint "
                 "needs W tasks, which only exist under split backward")
-        if bfw:
+        if args.chaos and bfw:
+            raise SystemExit("--chaos and the BFW sweep are separate "
+                             "reports; run them as two invocations")
+        if args.chaos:
+            from benchmarks.chaos_sweep import chaos_rows as rows_fn
+
+            json_out = args.json_out or "BENCH_chaos.json"
+            label = "chaos"
+        elif bfw:
             from benchmarks.bfw_compare import bfw_rows as rows_fn
 
             json_out = args.json_out or "BENCH_bfw.json"

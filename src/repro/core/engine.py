@@ -62,6 +62,8 @@ class RunResult:
     start: dict[Task, float]
     end: dict[Task, float]
     spec: PipelineSpec
+    #: structured event trace (actor runtime with record_trace=True)
+    trace: object | None = None
 
     # ---- derived ----------------------------------------------------------
     def durations(self, kind: Kind) -> np.ndarray:
@@ -106,6 +108,10 @@ class EngineConfig:
     #: posted ahead.  RRFP's message-driven comm never blocks the sender.
     sync_sends: bool = True
     send_queue: int = 1
+    #: replay a recorded actor-runtime trace: the realized per-stage dispatch
+    #: orders are consumed as a pre-committed schedule (order-exact replay;
+    #: timing is re-sampled — use the actor driver's replay for time-exact).
+    replay_trace: object | None = None
 
 
 # --------------------------------------------------------------------------
@@ -143,6 +149,12 @@ class Engine:
     def __init__(self, spec: PipelineSpec, costs: CostModel, config: EngineConfig):
         if costs.num_stages != spec.num_stages:
             raise ValueError("cost model / spec stage mismatch")
+        if config.replay_trace is not None:
+            # replay mode: the recorded dispatch orders ARE the schedule
+            config = dataclasses.replace(
+                config, mode="precommitted", sync_sends=False,
+                custom_orders=config.replay_trace.dispatch_orders(
+                    spec.num_stages))
         if (spec.split_backward and config.mode == "hint"
                 and config.hint != HintKind.BFW):
             raise ValueError(

@@ -54,11 +54,16 @@ class HintArbiter:
     hint: HintKind = HintKind.BF
     last_dir: Kind | None = None
 
-    def select(self, ready: Sequence[Task]) -> Task | None:
-        """Return the dispatched task for the current ready set (or None)."""
-        order: tuple[Kind, ...]
+    def try_order(self) -> tuple[Kind, ...]:
+        """The kind preference the *next* ``select`` will scan, in order.
+
+        Exposed so the runtime can record each dispatch's arbitration order
+        in the event trace: the conformance checker replays it against the
+        stage's remaining tasks to verify that the hint order is violated
+        only when the hinted task is unready.
+        """
         if self.hint == HintKind.B_PRIORITY:
-            order = (Kind.B, Kind.F)
+            order: tuple[Kind, ...] = (Kind.B, Kind.F)
         elif self.hint == HintKind.F_PRIORITY:
             order = (Kind.F, Kind.B)
         elif self.hint == HintKind.FB:
@@ -67,17 +72,22 @@ class HintArbiter:
             order = (Kind.F, Kind.B) if self.last_dir == Kind.B else (Kind.B, Kind.F)
         else:  # pragma: no cover
             raise ValueError(self.hint)
+        if self.hint == HintKind.BFW:
+            # Weight-update tasks fill rounds with no ready compute direction.
+            order += (Kind.W,)
+        return order
 
-        for k in order:
+    def select(self, ready: Sequence[Task]) -> Task | None:
+        """Return the dispatched task for the current ready set (or None)."""
+        for k in self.try_order():
             t = pick(ready, k)
             if t is not None:
-                if self.hint in (HintKind.BF, HintKind.FB, HintKind.BFW):
+                # A W dispatch fills an empty round without consuming it:
+                # round alternation tracks compute directions only.
+                if k != Kind.W and self.hint in (
+                        HintKind.BF, HintKind.FB, HintKind.BFW):
                     self.last_dir = t.kind
                 return t
-        # Neither compute direction ready: BFW dispatches an available
-        # weight-update task, then returns to the next arbitration round.
-        if self.hint == HintKind.BFW:
-            return pick(ready, Kind.W)
         return None
 
     def reset(self) -> None:

@@ -20,6 +20,7 @@ into the straggler monitor's EMA — the paper's runtime loop made executable:
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import os
 import time
 
@@ -97,7 +98,7 @@ def train_actor(args) -> list[float]:
     from repro.optim.adamw import _adamw_update, lr_at
     from repro.pipeline.stagefn import (
         ActorStageProgram, StageFnOptions, StageFns)
-    from repro.runtime.rrfp import ActorConfig, ActorDriver
+    from repro.runtime.rrfp import ActorConfig, ActorDriver, Trace, parse_chaos
 
     cfg = (registry.reduced_config(args.arch, num_layers=args.layers)
            if not args.full_size else registry.get_arch(args.arch))
@@ -107,6 +108,21 @@ def train_actor(args) -> list[float]:
     io_params = model.init_io_params(jax.random.fold_in(key, 1))
     split = args.split_backward or args.schedule == "zb"
     hint = HintKind(args.hint)
+    chaos = parse_chaos(args.chaos) if args.chaos else None
+    replay = None
+    if args.replay_trace:
+        if args.chaos:
+            raise SystemExit("--replay-trace replays the recorded arrival "
+                             "order; combining it with --chaos is undefined")
+        replay = Trace.load(args.replay_trace)
+        meta = replay.meta
+        for k, want in (("num_stages", args.stages),
+                        ("num_microbatches", args.microbatches),
+                        ("split_backward", split)):
+            if meta.get(k) is not None and meta[k] != want:
+                raise SystemExit(
+                    f"--replay-trace {args.replay_trace}: recorded {k}="
+                    f"{meta[k]} does not match this run's {want}")
     spec = PipelineSpec(args.stages, args.microbatches, split_backward=split)
     batch_size = args.microbatches * args.mb_rows
     tokens = batch_size * args.seq
@@ -133,7 +149,9 @@ def train_actor(args) -> list[float]:
             f"not {args.schedule!r}")
     acfg = ActorConfig(mode=mode, hint=hint, fixed_order=fixed,
                        w_defer_cap=args.w_defer_cap,
-                       deadlock_timeout=args.deadlock_timeout)
+                       deadlock_timeout=args.deadlock_timeout,
+                       chaos=chaos,
+                       replay=replay)
 
     opt_cfg = AdamWConfig(lr=args.lr, warmup_steps=min(20, args.steps),
                           total_steps=max(args.steps, 1))
@@ -179,7 +197,14 @@ def train_actor(args) -> list[float]:
             for s in range(args.stages)
         ]
         t0 = time.time()
-        result = ActorDriver(spec, None, acfg).run_threaded(list(programs))
+        # recording costs lock traffic on the dispatch path: enable it only
+        # for the step whose trace is actually saved
+        record_this = bool(args.record_trace) and step == 0
+        driver = ActorDriver(
+            spec, None,
+            dataclasses.replace(acfg, record_trace=True) if record_this
+            else acfg)
+        result = driver.run_threaded(list(programs))
         d_sp = jax.tree.map(lambda *xs: jnp.stack(xs),
                             *[p.d_stage for p in programs])
         d_io = jax.tree.map(lambda *xs: sum(xs[1:], xs[0]),
@@ -192,6 +217,13 @@ def train_actor(args) -> list[float]:
         # device array (no float() in the F hot path)
         loss = float(sum(p.loss_acc for p in programs)) / tokens
         losses.append(loss)
+        if record_this:
+            trace = driver.trace
+            trace.meta["step"] = step
+            trace.meta["final_loss"] = loss
+            trace.save(args.record_trace)
+            print(f"recorded step-0 trace ({len(trace.events)} events) "
+                  f"-> {args.record_trace}")
         bd = result.breakdown()
         new_table = monitor.observe_result(result)
         dt = time.time() - t0
@@ -233,6 +265,18 @@ def main() -> None:
     ap.add_argument("--deadlock-timeout", type=float, default=120.0,
                     help="actor runtime: seconds of stage starvation before "
                          "aborting with DeadlockError")
+    ap.add_argument("--chaos", default=None,
+                    help="actor runtime: fault-injection spec — a level "
+                         "(C0..C3) and/or key=value overrides, e.g. "
+                         "'C2' or 'C1,reorder_prob=0.5,straggler=1:2.0'")
+    ap.add_argument("--record-trace", default=None, metavar="PATH",
+                    help="actor runtime: record the step-0 event trace "
+                         "(mailbox/TP-gate/dispatch events with logical "
+                         "clocks) to PATH for replay and conformance checks")
+    ap.add_argument("--replay-trace", default=None, metavar="PATH",
+                    help="actor runtime: re-execute the per-stage dispatch "
+                         "order recorded in PATH (order-exact replay; "
+                         "reproduces the recorded loss bit pattern)")
     ap.add_argument("--full-size", action="store_true")
     ap.add_argument("--lr", type=float, default=1e-3)
     ap.add_argument("--ckpt-dir", default=None)

@@ -230,16 +230,27 @@ class ActorStageProgram:
     The running loss is accumulated as a device array — reading
     ``loss_sum`` materializes it (one sync), so the F hot path never blocks
     on the device.
+
+    With ``deterministic_reduction=True`` the per-microbatch loss and grad
+    contributions are *stashed* instead of folded in eagerly, and
+    :meth:`finalize` sums them in microbatch order.  Floating-point addition
+    is not associative, so the default eager accumulation is bit-sensitive
+    to the runtime's dispatch order; the deterministic mode makes the final
+    loss and gradients bitwise identical across any execution order of the
+    same task set — the property the conformance suite checks between
+    chaotic actor runs and the fixed-order reference executor.
     """
 
     def __init__(self, fns: StageFns, stage: int, sp_s, io, batch: dict,
-                 *, split_backward: bool = False):
+                 *, split_backward: bool = False,
+                 deterministic_reduction: bool = False):
         self.fns = fns
         self.stage = stage
         self.sp_s = sp_s
         self.io = io
         self.batch = batch
         self.split_backward = split_backward
+        self.deterministic_reduction = deterministic_reduction
         self.residual: dict[int, Any] = {}  # mb -> stage input
         #: BFW: mb -> (x, g_in) held from B-time until the W task fires
         self.w_pending: dict[int, tuple[Any, Any]] = {}
@@ -247,11 +258,57 @@ class ActorStageProgram:
         self.d_stage = jax.tree.map(jnp.zeros_like, sp_s)
         self.d_io = jax.tree.map(jnp.zeros_like, io)
         self.loss_acc = jnp.zeros((), jnp.float32)
+        #: deterministic mode: mb -> stashed contributions, folded by finalize
+        self._mb_loss: dict[int, Any] = {}
+        self._mb_grads: dict[int, tuple[Any, Any]] = {}
+        #: highest microbatch already folded — guards against mid-run folds
+        self._loss_folded: int | None = None
+        self._grads_folded: int | None = None
         self._g_dummy = None
+
+    def _add_grads(self, mb: int, dsp, dio) -> None:
+        if self.deterministic_reduction:
+            self._mb_grads[mb] = (dsp, dio)
+            return
+        self.d_stage = jax.tree.map(jnp.add, self.d_stage, dsp)
+        self.d_io = jax.tree.map(jnp.add, self.d_io, dio)
+
+    def finalize(self) -> "ActorStageProgram":
+        """Fold stashed per-microbatch contributions in microbatch order.
+
+        Idempotent; a no-op under eager accumulation.  Must run only after
+        all of the stage's work has executed: a *partial* fold would fix the
+        already-seen microbatches' position in the reduction order, making
+        the final bits depend on when the read happened — so folding a
+        microbatch below an already-folded one raises instead of silently
+        breaking the bitwise order-independence guarantee.
+        """
+        def fold_guard(kind: str, folded: int | None, keys) -> int | None:
+            if folded is not None and keys and min(keys) < folded:
+                raise RuntimeError(
+                    f"stage {self.stage}: deterministic {kind} fold of "
+                    f"microbatch {min(keys)} after microbatch {folded} was "
+                    f"already folded — finalize()/loss_sum was read mid-run")
+            return max(keys, default=folded) if keys else folded
+
+        self._loss_folded = fold_guard(
+            "loss", self._loss_folded, list(self._mb_loss))
+        for mb in sorted(self._mb_loss):
+            self.loss_acc = self.loss_acc + self._mb_loss[mb]
+        self._mb_loss.clear()
+        self._grads_folded = fold_guard(
+            "grad", self._grads_folded, list(self._mb_grads))
+        for mb in sorted(self._mb_grads):
+            dsp, dio = self._mb_grads[mb]
+            self.d_stage = jax.tree.map(jnp.add, self.d_stage, dsp)
+            self.d_io = jax.tree.map(jnp.add, self.d_io, dio)
+        self._mb_grads.clear()
+        return self
 
     @property
     def loss_sum(self) -> float:
         """Materialized loss total (forces one device sync per read)."""
+        self.finalize()
         return float(self.loss_acc)
 
     def w_outstanding(self) -> int:
@@ -265,7 +322,10 @@ class ActorStageProgram:
             y, loss = self.fns.forward(self.stage)(
                 self.sp_s, self.io, x, bm)
             self.residual[task.mb] = x
-            self.loss_acc = self.loss_acc + loss
+            if self.deterministic_reduction:
+                self._mb_loss[task.mb] = loss
+            else:
+                self.loss_acc = self.loss_acc + loss
             self._g_dummy = jnp.zeros_like(y)
             return y
         if task.kind == Kind.B:
@@ -281,8 +341,7 @@ class ActorStageProgram:
                     self.sp_s, self.io, x, g_in, bm)
             dx, dsp, dio = self.fns.backward(self.stage)(
                 self.sp_s, self.io, x, g_in, bm)
-            self.d_stage = jax.tree.map(jnp.add, self.d_stage, dsp)
-            self.d_io = jax.tree.map(jnp.add, self.d_io, dio)
+            self._add_grads(task.mb, dsp, dio)
             return dx
         if task.kind == Kind.W:
             if not self.split_backward:
@@ -292,7 +351,6 @@ class ActorStageProgram:
             x, g_in = self.w_pending.pop(task.mb)
             dsp, dio = self.fns.weight_grad(self.stage)(
                 self.sp_s, self.io, x, g_in, bm)
-            self.d_stage = jax.tree.map(jnp.add, self.d_stage, dsp)
-            self.d_io = jax.tree.map(jnp.add, self.d_io, dio)
+            self._add_grads(task.mb, dsp, dio)
             return None  # stage-local: no outgoing envelope
         raise ValueError(f"actor stage program cannot run {task!r}")

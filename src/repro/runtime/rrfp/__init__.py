@@ -6,15 +6,29 @@ transport, dispatching work by *arrival* under hint-order arbitration — not
 by schedule-table tick.  See ``docs/runtime.md`` for the architecture.
 
 Layering (bottom-up):
+  trace     -- logical-clock event log: record / save / load / replay oracles
   messages  -- envelopes + per-TP-rank fan-out
-  tp_group  -- §4.2 all-ranks admission barrier
+  tp_group  -- §4.2 all-ranks admission barrier (duplicate-idempotent)
   mailbox   -- thread-safe per-kind arrival buffers
   transport -- SimTransport (virtual clock, injectable heavy-tailed latency)
                / ThreadTransport (thread-per-stage, real callables)
+  chaos     -- CRN-keyed fault injection: per-edge latency, reorder,
+               duplication, stragglers, transient stalls (both substrates)
   actor     -- ready-set arbitration + App. C backpressure + thread loop
-  driver    -- builds/wires everything; emits core.engine.RunResult traces
+  driver    -- builds/wires everything; emits core.engine.RunResult traces,
+               records event traces, replays recorded runs
+
+See ``docs/testing.md`` for the conformance invariants checked against
+recorded traces and how to record/replay a run.
 """
 from repro.runtime.rrfp.actor import StageActor, TaskTrace
+from repro.runtime.rrfp.chaos import (
+    CHAOS_LEVELS,
+    ChaosConfig,
+    ChaosEngine,
+    ChaosThreadTransport,
+    parse_chaos,
+)
 from repro.runtime.rrfp.driver import (
     ActorConfig,
     ActorDriver,
@@ -24,20 +38,37 @@ from repro.runtime.rrfp.driver import (
 from repro.runtime.rrfp.mailbox import Mailbox
 from repro.runtime.rrfp.messages import Envelope, envelopes_for
 from repro.runtime.rrfp.tp_group import Admission, TPGroup
+from repro.runtime.rrfp.trace import (
+    ReplayOracle,
+    Trace,
+    TraceEvent,
+    TraceRecorder,
+    engine_replay_config,
+)
 from repro.runtime.rrfp.transport import SimTransport, ThreadTransport
 
 __all__ = [
     "ActorConfig",
     "ActorDriver",
     "Admission",
+    "CHAOS_LEVELS",
+    "ChaosConfig",
+    "ChaosEngine",
+    "ChaosThreadTransport",
     "Envelope",
     "Mailbox",
+    "ReplayOracle",
     "SimTransport",
     "StageActor",
     "TaskTrace",
     "ThreadTransport",
     "TPGroup",
+    "Trace",
+    "TraceEvent",
+    "TraceRecorder",
     "average_makespan_actor",
+    "engine_replay_config",
     "envelopes_for",
+    "parse_chaos",
     "run_actor_iteration",
 ]

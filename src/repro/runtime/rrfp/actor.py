@@ -29,6 +29,7 @@ from repro.core.engine import DeadlockError, StageStats
 from repro.core.hints import HintArbiter, HintKind, backpressure_drain, pick
 from repro.core.taskgraph import Kind, PipelineSpec, Task
 
+from repro.runtime.rrfp import trace as _tr
 from repro.runtime.rrfp.mailbox import Mailbox
 from repro.runtime.rrfp.messages import envelopes_for
 
@@ -64,6 +65,7 @@ class StageActor:
         self.idx = idx
         self.spec = spec
         self.mailbox = mailbox
+        self.recorder = mailbox.recorder
         self.mode = mode
         self.arbiter = HintArbiter(hint)
         self.order = order
@@ -120,36 +122,59 @@ class StageActor:
 
     def select(self) -> Task | None:
         """Pick the next task to dispatch from the *currently* ready set."""
+        return self.select_traced()[0]
+
+    def select_traced(self) -> tuple[Task | None, dict | None]:
+        """Like ``select``, plus the arbitration path taken — recorded into
+        the dispatch event so the conformance checker can verify, offline,
+        that each decision followed the hint (or deviated only because the
+        hinted task was unready).  The info dict is only materialized when a
+        recorder is attached: this runs on the dispatch hot path of every
+        arbitration attempt."""
+        rec = self.recorder is not None
         if self.mode == "precommitted":
             if self.order_pos >= len(self.order):
-                return None
+                return None, None
             nxt = self.order[self.order_pos]
-            return nxt if nxt in self.ready else None
+            task = nxt if nxt in self.ready else None
+            return task, ({"path": "precommitted"} if rec else None)
         if self.w_overcap():
             # Every completed B locally enables its W, so a ready W exists
             # whenever the backlog is nonzero; retiring it frees the stash.
             task = pick(sorted(self.ready), Kind.W)
             if task is not None:
-                return task
+                return task, ({"path": "wcap", "backlog": self.w_backlog()}
+                              if rec else None)
         if self.backpressured():
             task, self.drain_focus = backpressure_drain(
                 self.spec, self.idx, sorted(self.ready), self.done,
                 self.drain_focus)
-            return task
-        return self.arbiter.select(sorted(self.ready))
+            return task, ({"path": "backpressure"} if rec else None)
+        order = self.arbiter.try_order() if rec else None
+        task = self.arbiter.select(sorted(self.ready))
+        if not rec:
+            return task, None
+        return task, {"path": "hint", "order": [int(k) for k in order]}
 
-    def begin(self, task: Task) -> Any:
+    def begin(self, task: Task, now: float = 0.0,
+              info: dict | None = None) -> Any:
         """Commit to a dispatch: consume the task's buffered message (if any)
         and return its payload."""
+        if self.recorder is not None:
+            self.recorder.record(
+                _tr.DISPATCH, self.idx, task, t=now,
+                ready=[_tr.task_key(t) for t in sorted(self.ready)],
+                **(info or {}))
         self.ready.discard(task)
         if self.mode == "precommitted":
             self.order_pos += 1
         payload = None
         if task in self.mailbox.buffers[task.kind]:
-            payload = self.mailbox.consume(task)
+            payload = self.mailbox.consume(task, now=now)
         return payload
 
-    def complete(self, task: Task) -> Task | None:
+    def complete(self, task: Task, now: float = 0.0,
+                 dur: float | None = None) -> Task | None:
         """Mark done, enable local successors; return the remote successor
         whose message must now be sent (or None)."""
         self.done.add(task)
@@ -162,6 +187,13 @@ class StageActor:
                 self._maybe_enqueue(Task(Kind.W, self.idx, task.mb, task.chunk))
         elif task.kind == Kind.W:
             self.n_w += 1
+        if self.recorder is not None:
+            info: dict[str, Any] = {"nf": self.n_f, "nb": self.n_b}
+            if dur is not None:
+                info["dur"] = dur
+            if self.spec.split_backward:
+                info["w_backlog"] = self.w_backlog()
+            self.recorder.record(_tr.COMPLETE, self.idx, task, t=now, **info)
         # W tasks are stage-local by construction: message_successor(W) is
         # None, so no envelope is emitted and no TP admission gate applies.
         return self.spec.message_successor(task)
@@ -207,7 +239,7 @@ class StageActor:
                 task = None
                 while True:
                     self.sync_mailbox()
-                    task = self.select()
+                    task, sel_info = self.select_traced()
                     if task is not None or self.finished():
                         break
                     if self.mailbox.stopped or (
@@ -223,14 +255,14 @@ class StageActor:
                             f"waiting on messages for {self.waiting_on()[:4]}")
                 if task is None:  # finished() flipped
                     return
-                payload = self.begin(task)
+                payload = self.begin(task, now=clock(), info=sel_info)
             start = clock()
             self.stats.blocking += max(0.0, start - idle_since)
             out_payload = work_fn(task, payload)
             end = clock()
             self.stats.compute += end - start
             with self.mailbox.cond:
-                succ = self.complete(task)
+                succ = self.complete(task, now=end, dur=end - start)
                 self.mailbox.touch()
             self.traces.append(TaskTrace(task, start, end))
             idle_since = end

@@ -1,0 +1,247 @@
+"""Fault injection for the actor runtime: make variability a test input.
+
+The paper's claim is that readiness-driven consumption stays correct *under
+runtime variability*; this module turns variability into a controlled,
+deterministic input instead of an accident of the host.  A
+:class:`ChaosConfig` describes the perturbations, a :class:`ChaosEngine`
+samples them with CRN keying (every draw is keyed by (seed, task, rank), not
+pulled from a shared stream), so:
+
+* the *same* chaos realization hits a hint-mode run and a precommitted run
+  on the same seed — apples-to-apples correctness and makespan comparisons;
+* a re-run with the same config is bit-identical, independent of thread
+  interleaving — chaos scenarios are reproducible by (config, seed) alone.
+
+Perturbations (all off by default):
+
+* **per-edge latency** — extra heavy-tailed delay per pipeline edge
+  (``latency_base`` scaled by ``edge_scale[(src, dst)]``), applied to every
+  envelope on both substrates;
+* **message reorder** — with ``reorder_prob``, an envelope is additionally
+  delayed by up to ``reorder_window`` seconds, letting later sends overtake
+  it in the mailbox;
+* **message duplication** — with ``duplicate_prob``, up to
+  ``max_duplicates`` extra copies of an envelope are delivered at their own
+  sampled delays (the TP gate and mailbox must stay idempotent);
+* **stragglers** — per-stage compute slowdown factors: multiplicative on
+  the sim substrate's sampled durations, an extra keyed sleep on the thread
+  substrate;
+* **transient stalls** — with ``stall_prob`` per task, the stage blocks for
+  an Exp(``stall_scale``) pause before executing (a GC pause / preemption
+  analog).
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+import zlib
+
+import numpy as np
+
+from repro.core.taskgraph import Task
+
+from repro.runtime.rrfp.mailbox import Mailbox
+from repro.runtime.rrfp.messages import Envelope
+
+
+@dataclasses.dataclass(frozen=True)
+class ChaosConfig:
+    """One fault-injection scenario (deterministic given ``seed``)."""
+
+    seed: int = 0
+    #: extra per-envelope latency: base seconds (0 disables)
+    latency_base: float = 0.0
+    #: lognormal sigma on the extra latency
+    latency_sigma: float = 0.5
+    #: per-(src_stage, dst_stage) multiplier on latency_base
+    edge_scale: tuple[tuple[tuple[int, int], float], ...] = ()
+    #: probability an envelope is held back by an extra uniform delay
+    reorder_prob: float = 0.0
+    reorder_window: float = 0.0
+    #: probability an envelope is duplicated (each copy re-delayed)
+    duplicate_prob: float = 0.0
+    max_duplicates: int = 1
+    #: per-stage compute slowdown: ((stage, factor), ...), factor >= 1
+    straggler: tuple[tuple[int, float], ...] = ()
+    #: thread substrate: seconds of extra sleep per unit of (factor - 1)
+    straggler_unit: float = 1e-3
+    #: per-task transient stage stall
+    stall_prob: float = 0.0
+    stall_scale: float = 0.0  # Exp() scale, seconds
+
+    def active(self) -> bool:
+        return (self.latency_base > 0 or self.reorder_prob > 0
+                or self.duplicate_prob > 0 or bool(self.straggler)
+                or self.stall_prob > 0)
+
+    def to_json(self) -> dict:
+        d = dataclasses.asdict(self)
+        d["edge_scale"] = [[list(k), v] for k, v in self.edge_scale]
+        d["straggler"] = [list(kv) for kv in self.straggler]
+        return d
+
+
+#: Named intensity levels for sweeps and the CLI (C0 = control).
+CHAOS_LEVELS = {
+    "C0": ChaosConfig(),
+    "C1": ChaosConfig(latency_base=5e-4, reorder_prob=0.1,
+                      reorder_window=2e-3, duplicate_prob=0.05),
+    "C2": ChaosConfig(latency_base=2e-3, reorder_prob=0.3, reorder_window=1e-2,
+                      duplicate_prob=0.15, straggler=((1, 2.0),),
+                      stall_prob=0.05, stall_scale=5e-3),
+    "C3": ChaosConfig(latency_base=5e-3, latency_sigma=1.0, reorder_prob=0.5,
+                      reorder_window=5e-2, duplicate_prob=0.3,
+                      max_duplicates=2, straggler=((1, 3.0), (2, 2.0)),
+                      stall_prob=0.15, stall_scale=2e-2),
+}
+
+
+def parse_chaos(spec: str) -> ChaosConfig:
+    """CLI syntax: a level name and/or comma-separated key=value overrides.
+
+        --chaos C2
+        --chaos C1,reorder_prob=0.5,seed=7
+        --chaos latency_base=1e-3,straggler=1:2.5+3:4.0
+
+    The level (at most one) is the base config regardless of where it
+    appears; key=value parts override it in order.
+    """
+    parts = list(filter(None, (p.strip() for p in spec.split(","))))
+    levels = [p for p in parts if p in CHAOS_LEVELS]
+    if len(levels) > 1:
+        raise ValueError(f"at most one chaos level, got {levels}")
+    cfg = CHAOS_LEVELS[levels[0]] if levels else ChaosConfig()
+    for part in parts:
+        if part in CHAOS_LEVELS:
+            continue
+        if "=" not in part:
+            raise ValueError(
+                f"bad chaos spec {part!r}: expected a level in "
+                f"{sorted(CHAOS_LEVELS)} or key=value")
+        key, val = part.split("=", 1)
+        if key == "straggler":
+            pairs = tuple(
+                (int(s), float(f))
+                for s, f in (kv.split(":") for kv in val.split("+")))
+            cfg = dataclasses.replace(cfg, straggler=pairs)
+        elif key in ("seed", "max_duplicates"):
+            cfg = dataclasses.replace(cfg, **{key: int(val)})
+        else:
+            cfg = dataclasses.replace(cfg, **{key: float(val)})
+    return cfg
+
+
+class ChaosEngine:
+    """CRN-keyed sampler for one ChaosConfig.
+
+    Stateless across calls: every sample is drawn from a generator keyed by
+    (seed, purpose, task, rank), so results do not depend on call order,
+    thread interleaving, or how many other samples were drawn — the property
+    that makes chaotic runs replayable and mode comparisons fair.
+    """
+
+    def __init__(self, cfg: ChaosConfig):
+        self.cfg = cfg
+        self._edge = dict(cfg.edge_scale)
+        self._straggler = dict(cfg.straggler)
+
+    def _rng(self, purpose: str, task: Task, rank: int = 0,
+             copy: int = 0) -> np.random.Generator:
+        return np.random.default_rng(
+            [self.cfg.seed & 0x7FFFFFFF, zlib.crc32(purpose.encode()),
+             int(task.kind), task.stage, task.mb, task.chunk, rank, copy])
+
+    # ---- communication -----------------------------------------------------
+    def comm_delay(self, env: Envelope, copy: int = 0) -> float:
+        """Extra delivery delay for one envelope copy (0 when inactive)."""
+        cfg, delay = self.cfg, 0.0
+        if cfg.latency_base > 0:
+            rng = self._rng("lat", env.task, env.rank, copy)
+            scale = self._edge.get((env.src_stage, env.dst_stage), 1.0)
+            delay += cfg.latency_base * scale * float(rng.lognormal(
+                mean=-0.5 * cfg.latency_sigma**2, sigma=cfg.latency_sigma))
+        if cfg.reorder_prob > 0:
+            rng = self._rng("reorder", env.task, env.rank, copy)
+            if rng.random() < cfg.reorder_prob:
+                delay += cfg.reorder_window * float(rng.random())
+        return delay
+
+    def copies(self, env: Envelope) -> int:
+        """Total deliveries for this envelope (>= 1)."""
+        if self.cfg.duplicate_prob <= 0:
+            return 1
+        rng = self._rng("dup", env.task, env.rank)
+        extra = 0
+        while (extra < self.cfg.max_duplicates
+               and rng.random() < self.cfg.duplicate_prob):
+            extra += 1
+        return 1 + extra
+
+    # ---- compute -----------------------------------------------------------
+    def compute_scale(self, stage: int) -> float:
+        return self._straggler.get(stage, 1.0)
+
+    def stall(self, task: Task) -> float:
+        """Transient stage stall before executing ``task`` (seconds)."""
+        if self.cfg.stall_prob <= 0:
+            return 0.0
+        rng = self._rng("stall", task)
+        if rng.random() >= self.cfg.stall_prob:
+            return 0.0
+        return self.cfg.stall_scale * float(rng.exponential())
+
+    def thread_delay(self, task: Task) -> float:
+        """Thread substrate: total injected sleep before executing ``task``
+        (stall + straggler emulation; compute itself cannot be scaled)."""
+        factor = self.compute_scale(task.stage)
+        return self.stall(task) + (factor - 1.0) * self.cfg.straggler_unit
+
+
+class ChaosThreadTransport:
+    """Thread-substrate transport applying chaos on the delivery path.
+
+    Delayed or duplicated envelopes are delivered from daemon timer threads;
+    an undelayed, unduplicated envelope takes the direct path (no timer).
+    ``drain`` blocks until every outstanding delayed delivery has landed, so
+    a driver can guarantee no timer outlives the run.
+    """
+
+    def __init__(self, mailboxes: dict[int, Mailbox], chaos: ChaosEngine,
+                 on_send=None):
+        self.mailboxes = mailboxes
+        self.chaos = chaos
+        self.on_send = on_send
+        self.sent = 0
+        self._pending = 0
+        self._lock = threading.Lock()
+        self._idle = threading.Condition(self._lock)
+
+    def send(self, env: Envelope, now: float = 0.0) -> None:
+        self.sent += 1
+        if self.on_send is not None:
+            self.on_send(env, now)
+        n = self.chaos.copies(env)
+        for copy in range(n):
+            delay = self.chaos.comm_delay(env, copy)
+            if copy == 0 and delay <= 0:
+                self.mailboxes[env.dst_stage].deliver(env, now=now)
+                continue
+            with self._lock:
+                self._pending += 1
+            timer = threading.Timer(
+                max(delay, 1e-6), self._deliver_late, args=(env, now + delay))
+            timer.daemon = True
+            timer.start()
+
+    def _deliver_late(self, env: Envelope, at: float) -> None:
+        try:
+            self.mailboxes[env.dst_stage].deliver(env, now=at)
+        finally:
+            with self._lock:
+                self._pending -= 1
+                if self._pending == 0:
+                    self._idle.notify_all()
+
+    def drain(self, timeout: float = 30.0) -> bool:
+        with self._lock:
+            return self._idle.wait_for(lambda: self._pending == 0, timeout)

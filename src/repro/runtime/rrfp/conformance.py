@@ -1,0 +1,154 @@
+"""Runtime-conformance invariants, checked against recorded event traces.
+
+The single source of truth for what "the runtime behaved correctly" means —
+shared by the conformance test suite (``tests/conformance``) and the chaos
+benchmark (``benchmarks.chaos_sweep``), so the invariants CI enforces and
+the invariants the committed ``BENCH_chaos.json`` reports are the same
+code.
+
+Each checker raises :class:`AssertionError` with a diagnostic message on
+violation; :func:`holds` wraps a full check into a bool for reporting.
+
+The invariants (schedule-independent — they hold for *any* consumption
+mode under *any* variability, which is the paper's §3 correctness claim):
+
+* **exactly-once** — every task in the spec is dispatched and completed
+  exactly once, even when chaos duplicates every envelope;
+* **dependency order** — by logical clock, all of a task's predecessors
+  complete before the task is dispatched;
+* **w_defer_cap** — the backlog of un-executed W tasks (each holding a
+  stashed activation pair) never exceeds the cap (hint mode);
+* **backpressure** — the App. C F/B imbalance never exceeds
+  ``buffer_limit`` + 1 (Thm C.1; non-interleaved hint mode);
+* **hint faithfulness** — a hint-path dispatch deviates from the hint
+  order only when the hinted task is unready: no ready task of a preferred
+  direction is skipped, and within a direction the App. A minimum ready
+  candidate is picked;
+* **wcap path** — dispatches forced by the W cap actually retire a W.
+
+Deadlock-freedom is checked by construction: a run either completes or
+raises :class:`~repro.core.engine.DeadlockError`.
+"""
+from __future__ import annotations
+
+from collections import Counter
+
+from repro.core.hints import pick
+from repro.core.taskgraph import Kind, PipelineSpec
+
+from repro.runtime.rrfp import trace as tr
+
+
+def check_exactly_once(trace: tr.Trace, spec: PipelineSpec) -> None:
+    """Every task dispatched and completed exactly once (dup-proof)."""
+    want = set(spec.tasks())
+    dispatched = Counter(ev.task for ev in trace.select(tr.DISPATCH))
+    completed = Counter(ev.task for ev in trace.select(tr.COMPLETE))
+    assert set(dispatched) == want, (
+        f"dispatch set mismatch: missing={want - set(dispatched)} "
+        f"extra={set(dispatched) - want}")
+    assert set(completed) == want, (
+        f"complete set mismatch: missing={want - set(completed)}")
+    multi = {t: n for t, n in dispatched.items() if n != 1}
+    assert not multi, f"tasks dispatched != once: {multi}"
+    multi = {t: n for t, n in completed.items() if n != 1}
+    assert not multi, f"tasks completed != once: {multi}"
+
+
+def check_dependency_order(trace: tr.Trace, spec: PipelineSpec) -> None:
+    """By logical clock, predecessors complete before a task dispatches."""
+    dispatch_lc = {ev.task: ev.lc for ev in trace.select(tr.DISPATCH)}
+    complete_lc = {ev.task: ev.lc for ev in trace.select(tr.COMPLETE)}
+    for t in spec.tasks():
+        for p in spec.predecessors(t):
+            assert complete_lc[p] < dispatch_lc[t], (
+                f"{t} dispatched (lc={dispatch_lc[t]}) before predecessor "
+                f"{p} completed (lc={complete_lc[p]})")
+
+
+def check_w_cap(trace: tr.Trace, cap: int, mode: str) -> None:
+    """Deferred-W backlog (stashed activation pairs) never exceeds the cap."""
+    if mode != "hint" or cap <= 0:
+        return
+    for ev in trace.select(tr.COMPLETE):
+        backlog = ev.info.get("w_backlog")
+        if backlog is not None:
+            assert backlog <= cap, (
+                f"w_defer_cap={cap} exceeded: backlog={backlog} after "
+                f"{ev.task} (lc={ev.lc})")
+
+
+def check_backpressure(trace: tr.Trace, spec: PipelineSpec, limit: int,
+                       mode: str) -> None:
+    """App. C: per-stage F/B imbalance bounded by buffer_limit (+1 in
+    flight) — non-interleaved hint mode (Thm C.1)."""
+    if mode != "hint" or spec.num_chunks != 1:
+        return
+    depth: Counter = Counter()
+    for ev in trace.select(tr.COMPLETE):
+        if ev.task.kind == Kind.F:
+            depth[ev.stage] += 1
+        elif ev.task.kind == Kind.B:
+            depth[ev.stage] -= 1
+        assert depth[ev.stage] <= limit + 1, (
+            f"stage {ev.stage} F/B imbalance {depth[ev.stage]} > "
+            f"limit+1={limit + 1} at lc={ev.lc}")
+
+
+def check_hint_faithful(trace: tr.Trace, spec: PipelineSpec) -> None:
+    """Hint-path dispatches deviate from the hint only through unreadiness.
+
+    For each dispatch on the ``hint`` arbitration path, with the recorded
+    kind-preference order (k1, k2, ...): no task of a kind preferred over
+    the dispatched kind may be in the recorded ready snapshot, and the
+    dispatched task must be the App. A minimum among ready tasks of its own
+    kind.  Together these imply the paper-level property: whenever the
+    dispatch differs from the hint's global preference over the stage's
+    remaining tasks, that preferred task was unready.
+    """
+    for ev in trace.select(tr.DISPATCH):
+        if ev.info.get("path") != "hint":
+            continue
+        order = [Kind(k) for k in ev.info["order"]]
+        ready = [tr.task_from_key(k) for k in ev.info["ready"]]
+        kind = ev.task.kind
+        assert kind in order, (ev.task, order)
+        for k in order[:order.index(kind)]:
+            skipped = pick(ready, k)
+            assert skipped is None, (
+                f"lc={ev.lc}: dispatched {ev.task} while preferred-direction "
+                f"task {skipped} was ready (order={order})")
+        best = pick(ready, kind)
+        assert best == ev.task, (
+            f"lc={ev.lc}: dispatched {ev.task} but within-direction "
+            f"priority prefers ready {best}")
+
+
+def check_wcap_path(trace: tr.Trace) -> None:
+    """Dispatches forced by the W cap must actually retire a W task."""
+    for ev in trace.select(tr.DISPATCH):
+        if ev.info.get("path") == "wcap":
+            assert ev.task.kind == Kind.W, (
+                f"lc={ev.lc}: wcap path dispatched non-W task {ev.task}")
+
+
+def check_all(trace: tr.Trace, spec: PipelineSpec, config) -> None:
+    """Every invariant, against one run's trace.  ``config`` is any object
+    with ``mode`` / ``w_defer_cap`` / ``buffer_limit`` attributes
+    (``ActorConfig`` in practice; kept duck-typed to avoid a driver
+    dependency)."""
+    check_exactly_once(trace, spec)
+    check_dependency_order(trace, spec)
+    check_w_cap(trace, config.w_defer_cap, config.mode)
+    check_backpressure(trace, spec, config.buffer_limit, config.mode)
+    check_hint_faithful(trace, spec)
+    check_wcap_path(trace)
+
+
+def holds(trace: tr.Trace, spec: PipelineSpec, config) -> bool:
+    """Bool wrapper over :func:`check_all` for reporting/benchmarks."""
+    try:
+        check_all(trace, spec, config)
+    except AssertionError:
+        return False
+    return True

@@ -18,6 +18,25 @@ Two execution substrates behind one configuration:
 Both return the DES engine's :class:`~repro.core.engine.RunResult`, so
 ``benchmarks/``, the Theorem 6.1 bound checker and
 ``runtime.straggler`` consume actor traces unchanged.
+
+Record / chaos / replay (the conformance machinery):
+
+* ``ActorConfig.record_trace`` threads a
+  :class:`~repro.runtime.rrfp.trace.TraceRecorder` through every mailbox,
+  TP gate, transport and actor; after a run the full event log is on
+  ``driver.trace`` (and ``RunResult.trace``).
+* ``ActorConfig.chaos`` plugs a :class:`~repro.runtime.rrfp.chaos.ChaosEngine`
+  into the delivery and compute paths of both substrates: per-edge latency,
+  message reorder/duplication, stage stragglers and transient stalls, all
+  CRN-keyed so the same scenario hits every consumption mode identically.
+* ``ActorConfig.replay`` re-executes a recorded trace.  On the sim
+  substrate replay is *time-exact*: a
+  :class:`~repro.runtime.rrfp.trace.ReplayOracle` substitutes the recorded
+  delivery times and task durations for every sample, so the event heap
+  evolves identically and the replayed trace is bit-for-bit the recorded
+  one.  On the thread substrate replay is *order-exact*: the recorded
+  per-stage dispatch orders are consumed as a pre-committed schedule, which
+  pins the floating-point reduction order and therefore the loss/grad bits.
 """
 from __future__ import annotations
 
@@ -34,9 +53,12 @@ from repro.core.engine import DeadlockError, RunResult, StageStats
 from repro.core.hints import FIXED_ORDERS, HintKind
 from repro.core.taskgraph import Kind, PipelineSpec, Task
 
+from repro.runtime.rrfp import trace as _tr
 from repro.runtime.rrfp.actor import StageActor
+from repro.runtime.rrfp.chaos import ChaosConfig, ChaosEngine, ChaosThreadTransport
 from repro.runtime.rrfp.mailbox import Mailbox
 from repro.runtime.rrfp.messages import Envelope, envelopes_for
+from repro.runtime.rrfp.trace import ReplayOracle, Trace, TraceRecorder
 from repro.runtime.rrfp.transport import SimTransport, ThreadTransport
 
 
@@ -57,6 +79,12 @@ class ActorConfig:
     seed: int = 0
     #: thread mode: seconds of mailbox starvation before DeadlockError
     deadlock_timeout: float = 30.0
+    #: fault injection scenario (None = no chaos)
+    chaos: ChaosConfig | None = None
+    #: record a structured event trace (driver.trace / RunResult.trace)
+    record_trace: bool = False
+    #: re-execute a recorded trace (time-exact on sim, order-exact threaded)
+    replay: Trace | None = None
 
 
 def _compute_rng(seed: int, task: Task) -> np.random.Generator:
@@ -73,6 +101,7 @@ class ActorDriver:
         if costs is not None and costs.num_stages != spec.num_stages:
             raise ValueError("cost model / spec stage mismatch")
         if (spec.split_backward and config.mode == "hint"
+                and config.replay is None
                 and config.hint != HintKind.BFW):
             raise ValueError(
                 f"hint mode on a split-backward spec requires HintKind.BFW "
@@ -80,10 +109,59 @@ class ActorDriver:
         self.spec = spec
         self.costs = costs
         self.config = config
+        #: event log of the last run (when record_trace was set)
+        self.trace: Trace | None = None
 
     # ------------------------------------------------------------------
-    def _build_actors(self) -> tuple[list[Mailbox], list[StageActor]]:
-        spec, cfg = self.spec, self.config
+    def _meta(self, cfg: ActorConfig, substrate: str) -> dict:
+        spec = self.spec
+        return {
+            "substrate": substrate,
+            "mode": cfg.mode,
+            "hint": cfg.hint.value,
+            "fixed_order": cfg.fixed_order,
+            "buffer_limit": cfg.buffer_limit,
+            "w_defer_cap": cfg.w_defer_cap,
+            "tp_degree": cfg.tp_degree,
+            "seed": cfg.seed,
+            "num_stages": spec.num_stages,
+            "num_microbatches": spec.num_microbatches,
+            "num_chunks": spec.num_chunks,
+            "split_backward": spec.split_backward,
+            "chaos": cfg.chaos.to_json() if cfg.chaos is not None else None,
+        }
+
+    def _effective_config(self, substrate: str) -> ActorConfig:
+        """Resolve replay: adopt the recorded run's scheduling parameters.
+
+        Sim replays keep the recorded consumption mode (decisions re-derive
+        identically from the replayed arrivals); thread replays consume the
+        realized dispatch orders as a pre-committed schedule.
+        """
+        cfg = self.config
+        if cfg.replay is None:
+            return cfg
+        meta = cfg.replay.meta
+        cfg = dataclasses.replace(
+            cfg,
+            mode=meta.get("mode", cfg.mode),
+            hint=HintKind(meta.get("hint", cfg.hint.value)),
+            buffer_limit=meta.get("buffer_limit", cfg.buffer_limit),
+            w_defer_cap=meta.get("w_defer_cap", cfg.w_defer_cap),
+            tp_degree=meta.get("tp_degree", cfg.tp_degree),
+            chaos=None,  # realized durations/arrivals already include chaos
+        )
+        if substrate == "thread" or cfg.mode == "precommitted":
+            # order-exact replay: realized orders become the schedule
+            cfg = dataclasses.replace(
+                cfg, mode="precommitted",
+                custom_orders=cfg.replay.dispatch_orders(self.spec.num_stages))
+        return cfg
+
+    def _build_actors(
+        self, cfg: ActorConfig, recorder: TraceRecorder | None,
+    ) -> tuple[list[Mailbox], list[StageActor]]:
+        spec = self.spec
         mailboxes, actors = [], []
         for s in range(spec.num_stages):
             order = None
@@ -92,7 +170,7 @@ class ActorDriver:
                     order = cfg.custom_orders[s]
                 else:
                     order = FIXED_ORDERS[cfg.fixed_order](spec, s)
-            mb = Mailbox(s, cfg.tp_degree)
+            mb = Mailbox(s, cfg.tp_degree, recorder=recorder)
             mailboxes.append(mb)
             actors.append(StageActor(
                 s, spec, mb, mode=cfg.mode, hint=cfg.hint, order=order,
@@ -106,10 +184,17 @@ class ActorDriver:
 
     # ---- simulation substrate -----------------------------------------
     def run(self) -> RunResult:
-        if self.costs is None:
+        spec = self.spec
+        cfg = self._effective_config("sim")
+        oracle = ReplayOracle(cfg.replay) if cfg.replay is not None else None
+        if self.costs is None and oracle is None:
             raise ValueError("simulation mode requires a CostModel")
-        spec, cfg, costs = self.spec, self.config, self.costs
-        mailboxes, actors = self._build_actors()
+        costs = self.costs
+        recorder = (TraceRecorder(self._meta(cfg, "sim"))
+                    if cfg.record_trace else None)
+        chaos = (ChaosEngine(cfg.chaos)
+                 if cfg.chaos is not None and cfg.chaos.active() else None)
+        mailboxes, actors = self._build_actors(cfg, recorder)
 
         events: list = []  # (time, seq, kind, payload)
         seq = 0
@@ -119,10 +204,35 @@ class ActorDriver:
             heapq.heappush(events, (t, seq, ekind, payload))
             seq += 1
 
+        def schedule_delivery(t: float, env: Envelope) -> None:
+            """Transport hook; the chaos layer perturbs the arrival here."""
+            if chaos is None:
+                push(t, "deliver", env)
+                return
+            for copy in range(chaos.copies(env)):
+                push(t + chaos.comm_delay(env, copy), "deliver", env)
+
+        def record_send(env: Envelope, _lat: float) -> None:
+            if recorder is not None:
+                recorder.record(_tr.SEND, env.src_stage, env.task,
+                                rank=env.rank, t=env.send_time, seq=env.seq)
+
         transport = SimTransport(
-            costs, schedule=lambda t, env: push(t, "deliver", env),
-            seed=cfg.seed)
-        inj_states = [costs.injection.make_state() for _ in range(spec.num_stages)]
+            costs, schedule=schedule_delivery, seed=cfg.seed,
+            on_send=record_send) if oracle is None else None
+
+        def send_messages(succ: Task, src: int, now: float) -> None:
+            for env in envelopes_for(succ, src, cfg.tp_degree, send_time=now):
+                if oracle is None:
+                    transport.send(env, now=now)
+                else:
+                    record_send(env, 0.0)
+                    for at in oracle.delivery_times(env.task, env.rank):
+                        push(at, "deliver", env)
+
+        inj_states = [
+            costs.injection.make_state() if costs is not None else None
+            for _ in range(spec.num_stages)]
         busy_until = [0.0] * spec.num_stages
         idle_since = [0.0] * spec.num_stages
         start: dict[Task, float] = {}
@@ -134,19 +244,29 @@ class ActorDriver:
         for a in actors:
             a.sync_mailbox()
 
-        def try_dispatch(s: int, now: float) -> None:
-            actor = actors[s]
-            if busy_until[s] > now:
-                return
-            task = actor.select()
-            if task is None:
-                return
-            actor.begin(task)
-            coord = mailboxes[s].group.coordination_cost(task, cfg.tp_coord_base)
+        def task_duration(s: int, task: Task) -> float:
+            if oracle is not None:
+                return oracle.duration(task)
             rng = _compute_rng(cfg.seed, task)
             dur = costs.sample_compute(task.kind, s, task.mb, rng)
             if task.kind != Kind.W:
                 dur += costs.injection.sample_delay(inj_states[s], dur, rng)
+            if chaos is not None:
+                # straggler slowdown + transient stall, folded into the
+                # realized duration (and therefore into recorded traces)
+                dur = dur * chaos.compute_scale(s) + chaos.stall(task)
+            return dur
+
+        def try_dispatch(s: int, now: float) -> None:
+            actor = actors[s]
+            if busy_until[s] > now:
+                return
+            task, sel_info = actor.select_traced()
+            if task is None:
+                return
+            actor.begin(task, now=now, info=sel_info)
+            coord = mailboxes[s].group.coordination_cost(task, cfg.tp_coord_base)
+            dur = task_duration(s, task)
             actor.stats.blocking += max(0.0, now - idle_since[s])
             actor.stats.tp_coord += coord
             actor.stats.compute += dur
@@ -165,11 +285,9 @@ class ActorDriver:
                 s = task.stage
                 end[task] = now
                 n_done += 1
-                succ = actors[s].complete(task)
+                succ = actors[s].complete(task, now=now, dur=now - start[task])
                 if succ is not None:
-                    for env in envelopes_for(succ, s, cfg.tp_degree,
-                                             send_time=now):
-                        transport.send(env, now=now)
+                    send_messages(succ, s, now)
                 idle_since[s] = now
                 try_dispatch(s, now)
             else:  # deliver
@@ -180,6 +298,8 @@ class ActorDriver:
                     actors[s].sync_mailbox()
                     try_dispatch(s, now)
 
+        if recorder is not None:
+            self.trace = recorder.trace()
         if n_done != total:
             starved = {
                 a.idx: a.waiting_on()[:4] for a in actors if not a.finished()
@@ -192,12 +312,16 @@ class ActorDriver:
         for s, a in enumerate(actors):
             a.stats.blocking += max(0.0, makespan - busy_until[s])
             a.stats.deferrals = mailboxes[s].group.deferrals
+        if recorder is not None:
+            recorder.meta["makespan"] = makespan
+            self.trace = recorder.trace()
         return RunResult(
             makespan=makespan,
             stage_stats=[a.stats for a in actors],
             start=start,
             end=end,
             spec=spec,
+            trace=self.trace,
         )
 
     # ---- thread-per-stage substrate ------------------------------------
@@ -212,13 +336,42 @@ class ActorDriver:
         """
         import time as _time
 
-        spec, cfg = self.spec, self.config
-        mailboxes, actors = self._build_actors()
-        transport = ThreadTransport({m.stage: m for m in mailboxes})
-        work_fns = (work_fn if isinstance(work_fn, list)
-                    else [work_fn] * spec.num_stages)
+        spec = self.spec
+        cfg = self._effective_config("thread")
+        recorder = (TraceRecorder(self._meta(cfg, "thread"))
+                    if cfg.record_trace else None)
+        chaos = (ChaosEngine(cfg.chaos)
+                 if cfg.chaos is not None and cfg.chaos.active() else None)
+        mailboxes, actors = self._build_actors(cfg, recorder)
         t0 = _time.perf_counter()
         clock = lambda: _time.perf_counter() - t0  # noqa: E731
+
+        def record_send(env: Envelope, now: float) -> None:
+            if recorder is not None:
+                recorder.record(_tr.SEND, env.src_stage, env.task,
+                                rank=env.rank, t=now, seq=env.seq)
+
+        mb_map = {m.stage: m for m in mailboxes}
+        if chaos is not None:
+            transport = ChaosThreadTransport(mb_map, chaos,
+                                             on_send=record_send)
+        else:
+            transport = ThreadTransport(mb_map, on_send=record_send)
+        work_fns = (work_fn if isinstance(work_fn, list)
+                    else [work_fn] * spec.num_stages)
+        if chaos is not None:
+            def chaotic(fn):
+                def wrapped(task, payload):
+                    d = chaos.thread_delay(task)
+                    if d > 0:
+                        if recorder is not None:
+                            recorder.record(_tr.STALL, task.stage, task,
+                                            t=clock(), dur=d)
+                        _time.sleep(d)
+                    return fn(task, payload)
+                return wrapped
+
+            work_fns = [chaotic(fn) for fn in work_fns]
         abort = threading.Event()
         errors: list[BaseException] = []
 
@@ -245,8 +398,14 @@ class ActorDriver:
             th.start()
         for th in threads:
             th.join()
+        if isinstance(transport, ChaosThreadTransport):
+            # chaos duplicates may still be in flight; land them before
+            # stopping so no timer outlives the run
+            transport.drain(timeout=cfg.deadlock_timeout)
         for m in mailboxes:
             m.stop()
+        if recorder is not None:
+            self.trace = recorder.trace()
         if errors:
             raise errors[0]
         start = {tr.task: tr.start for a in actors for tr in a.traces}
@@ -259,12 +418,16 @@ class ActorDriver:
             a.stats.blocking += max(
                 0.0, makespan - max(tr.end for tr in a.traces))
             a.stats.deferrals = a.mailbox.group.deferrals
+        if recorder is not None:
+            recorder.meta["makespan"] = makespan
+            self.trace = recorder.trace()
         return RunResult(
             makespan=makespan,
             stage_stats=[a.stats for a in actors],
             start=start,
             end=end,
             spec=spec,
+            trace=self.trace,
         )
 
 

@@ -10,6 +10,10 @@ same lock when it arbitrates.
 In simulation mode the driver calls ``deliver`` from the virtual-clock pump
 (single thread, the lock is uncontended); in thread mode each sender's actor
 thread calls it concurrently.
+
+With a :class:`~repro.runtime.rrfp.trace.TraceRecorder` attached, every
+delivery, admission (enqueue) and consumption (dequeue) is logged with the
+logical clock — the record side of record/replay.
 """
 from __future__ import annotations
 
@@ -18,6 +22,7 @@ import time as _time
 
 from repro.core.taskgraph import Kind, Task
 
+from repro.runtime.rrfp import trace as _tr
 from repro.runtime.rrfp.messages import Envelope
 from repro.runtime.rrfp.tp_group import Admission, TPGroup
 
@@ -25,9 +30,10 @@ from repro.runtime.rrfp.tp_group import Admission, TPGroup
 class Mailbox:
     """Arrival buffers for one stage actor."""
 
-    def __init__(self, stage: int, tp_degree: int = 1):
+    def __init__(self, stage: int, tp_degree: int = 1, recorder=None):
         self.stage = stage
-        self.group = TPGroup(stage, tp_degree)
+        self.recorder = recorder
+        self.group = TPGroup(stage, tp_degree, recorder=recorder)
         self.cond = threading.Condition()
         #: admitted-but-unconsumed arrivals, FIFO per kind
         self.buffers: dict[Kind, list[Task]] = {k: [] for k in Kind}
@@ -43,8 +49,14 @@ class Mailbox:
     def deliver(self, env: Envelope, now: float = 0.0) -> Admission | None:
         """Offer one envelope; buffer the task if its TP rank set completes."""
         with self.cond:
+            if self.recorder is not None:
+                self.recorder.record(_tr.DELIVER, self.stage, env.task,
+                                     rank=env.rank, t=now, seq=env.seq)
             adm = self.group.offer(env, now)
-            if env.payload is not None:
+            # Late duplicates of an already-admitted message must not re-stash
+            # a payload the consumer has already popped (or never will pop).
+            fresh = adm is not None or not self.group.was_admitted(env.task)
+            if env.payload is not None and fresh:
                 self.payloads[env.task] = env.payload
             if adm is not None:
                 buf = self.buffers[adm.task.kind]
@@ -52,10 +64,13 @@ class Mailbox:
                 self.high_water[adm.task.kind] = max(
                     self.high_water[adm.task.kind], len(buf))
                 self.last_progress = _time.monotonic()
+                if self.recorder is not None:
+                    self.recorder.record(_tr.ENQUEUE, self.stage, adm.task,
+                                         t=now, src="message")
                 self.cond.notify_all()
             return adm
 
-    def deliver_local(self, task: Task) -> None:
+    def deliver_local(self, task: Task, now: float = 0.0) -> None:
         """Buffer a task whose input is locally produced (no message needed):
         stage-0/chunk-0 forwards at iteration start, and the last stage's
         loss gradient."""
@@ -64,6 +79,9 @@ class Mailbox:
             self.high_water[task.kind] = max(
                 self.high_water[task.kind], len(self.buffers[task.kind]))
             self.last_progress = _time.monotonic()
+            if self.recorder is not None:
+                self.recorder.record(_tr.ENQUEUE, self.stage, task, t=now,
+                                     src="local")
             self.cond.notify_all()
 
     def touch(self) -> None:
@@ -86,10 +104,12 @@ class Mailbox:
             out.extend(self.buffers[k])
         return out
 
-    def consume(self, task: Task) -> object:
+    def consume(self, task: Task, now: float = 0.0) -> object:
         """Remove a dispatched task from its buffer; return its payload."""
         self.buffers[task.kind].remove(task)
         self.last_progress = _time.monotonic()
+        if self.recorder is not None:
+            self.recorder.record(_tr.DEQUEUE, self.stage, task, t=now)
         return self.payloads.pop(task, None)
 
     def wait_for_work(self, timeout: float | None = None) -> bool:

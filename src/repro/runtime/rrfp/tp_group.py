@@ -16,6 +16,7 @@ import math
 
 from repro.core.taskgraph import Kind, Task
 
+from repro.runtime.rrfp import trace as _tr
 from repro.runtime.rrfp.messages import Envelope
 
 
@@ -35,18 +36,27 @@ class Admission:
 class TPGroup:
     """All-ranks readiness gate for one pipeline stage."""
 
-    def __init__(self, stage: int, tp_degree: int = 1):
+    def __init__(self, stage: int, tp_degree: int = 1, recorder=None):
         self.stage = stage
         self.tp_degree = max(1, tp_degree)
+        self.recorder = recorder
         self._held: dict[Task, dict[int, float]] = {}
+        self._admitted_tasks: set[Task] = set()
         self.deferrals = 0
         self.admitted = 0
+        self.duplicates = 0
+
+    def was_admitted(self, task: Task) -> bool:
+        return task in self._admitted_tasks
 
     def offer(self, env: Envelope, now: float) -> Admission | None:
         """Record one rank's copy; return an Admission when the set completes.
 
-        Duplicate deliveries for a rank are idempotent (first arrival wins,
-        matching a receive-side buffer that holds the message).
+        Duplicate deliveries are idempotent at two levels: a repeated rank
+        copy is ignored (first arrival wins, matching a receive-side buffer
+        that holds the message), and a task whose rank set already completed
+        is never re-admitted — a full set of chaos-duplicated envelopes must
+        not re-enqueue an already-buffered task.
         """
         if env.dst_stage != self.stage:
             raise ValueError(
@@ -54,17 +64,34 @@ class TPGroup:
                 f"{self.stage}")
         if not 0 <= env.rank < self.tp_degree:
             raise ValueError(f"rank {env.rank} out of range for K={self.tp_degree}")
+        if env.task in self._admitted_tasks:
+            self.duplicates += 1
+            self._record(_tr.TP_DUP, env, now, reason="post_admission")
+            return None
         holds = self._held.setdefault(env.task, {})
-        holds.setdefault(env.rank, now)
+        if env.rank in holds:
+            self.duplicates += 1
+            self._record(_tr.TP_DUP, env, now, reason="rank_held")
+            return None
+        holds[env.rank] = now
         if len(holds) < self.tp_degree:
+            self._record(_tr.TP_HOLD, env, now,
+                         missing=self.tp_degree - len(holds))
             return None
         del self._held[env.task]
+        self._admitted_tasks.add(env.task)
         times = sorted(holds.values())
         spread = times[-1] - times[0]
         if spread > 0:
             self.deferrals += 1
         self.admitted += 1
+        self._record(_tr.TP_ADMIT, env, now, spread=spread)
         return Admission(task=env.task, admit_time=now, spread=spread)
+
+    def _record(self, kind: str, env: Envelope, now: float, **info) -> None:
+        if self.recorder is not None:
+            self.recorder.record(kind, self.stage, env.task, rank=env.rank,
+                                 t=now, **info)
 
     def pending(self) -> dict[Task, int]:
         """Tasks with an incomplete rank set -> number of ranks still missing."""

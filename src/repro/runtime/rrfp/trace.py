@@ -1,0 +1,231 @@
+"""Deterministic event traces for the actor runtime (record / replay).
+
+Every observable scheduling decision in the runtime — mailbox enqueue and
+dequeue, TP-gate hold/admit/duplicate, dispatch (with the ready-set snapshot
+and the arbitration path taken), completion (with the realized duration and
+the W-deferral backlog), and every transport send/delivery — is recorded as a
+structured :class:`TraceEvent` stamped with a *logical clock*: a process-wide
+monotone counter assigned under one lock, giving a total order over events
+that is meaningful on both substrates (the sim driver's virtual clock and the
+thread runtime's wall clock).
+
+A :class:`Trace` is the recorded sequence plus run metadata.  It serializes
+to JSON lines, diffs against another trace (:meth:`signature`), and projects
+out the two replay artifacts:
+
+* :meth:`delivery_schedule` — for the sim substrate, the exact virtual time
+  of every envelope delivery (including chaos-injected duplicates), letting
+  :meth:`~repro.runtime.rrfp.driver.ActorDriver.run` re-execute a recorded
+  arrival order *exactly* — same heap evolution, same event sequence, same
+  makespan — without touching a random stream;
+* :meth:`dispatch_orders` — the realized per-stage execution order, which
+  the thread substrate (and the DES engine via
+  :func:`engine_replay_config`) re-executes as a pre-committed order, pinning
+  the floating-point reduction order and therefore the loss bit pattern.
+
+The conformance suite (``tests/conformance``) checks runtime invariants —
+exactly-once execution, w_defer_cap, hint faithfulness — directly against
+recorded traces, so "robust under variability" is a property of the event
+log, not of any particular end-to-end metric.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import threading
+from typing import Any, Iterable
+
+from repro.core.taskgraph import Kind, PipelineSpec, Task
+
+# Event kinds (strings, not an enum: traces are a serialization format first).
+SEND = "send"          # envelope handed to a transport
+DELIVER = "deliver"    # envelope arrived at the destination mailbox
+TP_HOLD = "tp_hold"    # TP gate holds a rank copy (rank set incomplete)
+TP_ADMIT = "tp_admit"  # TP gate admitted: all ranks hold the message
+TP_DUP = "tp_dup"      # duplicate / post-admission copy ignored
+ENQUEUE = "enqueue"    # task appended to a per-kind arrival buffer
+DEQUEUE = "dequeue"    # task consumed from its arrival buffer at dispatch
+DISPATCH = "dispatch"  # actor committed to execute a task
+COMPLETE = "complete"  # task finished executing
+STALL = "stall"        # chaos: transient stage stall injected
+EVENT_KINDS = (SEND, DELIVER, TP_HOLD, TP_ADMIT, TP_DUP, ENQUEUE, DEQUEUE,
+               DISPATCH, COMPLETE, STALL)
+
+
+def task_key(t: Task) -> list[int]:
+    """JSON-stable task identity: [kind, stage, mb, chunk]."""
+    return [int(t.kind), t.stage, t.mb, t.chunk]
+
+
+def task_from_key(k: Iterable[int]) -> Task:
+    kind, stage, mb, chunk = k
+    return Task(Kind(kind), stage, mb, chunk)
+
+
+@dataclasses.dataclass(frozen=True)
+class TraceEvent:
+    """One recorded runtime event, totally ordered by logical clock ``lc``."""
+
+    lc: int
+    kind: str
+    stage: int
+    task: Task | None = None
+    rank: int = 0
+    t: float = 0.0  # substrate time: virtual (sim) or wall (thread)
+    info: dict = dataclasses.field(default_factory=dict)
+
+    def to_json(self) -> dict:
+        d: dict[str, Any] = {"lc": self.lc, "kind": self.kind,
+                             "stage": self.stage, "rank": self.rank,
+                             "t": self.t}
+        if self.task is not None:
+            d["task"] = task_key(self.task)
+        if self.info:
+            d["info"] = self.info
+        return d
+
+    @staticmethod
+    def from_json(d: dict) -> "TraceEvent":
+        return TraceEvent(
+            lc=d["lc"], kind=d["kind"], stage=d["stage"],
+            task=task_from_key(d["task"]) if "task" in d else None,
+            rank=d.get("rank", 0), t=d.get("t", 0.0),
+            info=d.get("info", {}))
+
+
+class TraceRecorder:
+    """Thread-safe event sink assigning the logical clock.
+
+    One recorder instance is threaded through the mailboxes, TP groups,
+    transports and actors of a single run; ``record`` is called under
+    whatever lock the caller already holds (or none), and serializes event
+    ordering itself.
+    """
+
+    def __init__(self, meta: dict | None = None):
+        self._lock = threading.Lock()
+        self._events: list[TraceEvent] = []
+        self.meta = dict(meta or {})
+
+    def record(self, kind: str, stage: int, task: Task | None = None,
+               rank: int = 0, t: float = 0.0, **info) -> None:
+        with self._lock:
+            self._events.append(TraceEvent(
+                lc=len(self._events), kind=kind, stage=stage, task=task,
+                rank=rank, t=t, info=info))
+
+    def trace(self) -> "Trace":
+        with self._lock:
+            return Trace(meta=dict(self.meta), events=list(self._events))
+
+
+@dataclasses.dataclass
+class Trace:
+    """A completed run's event log + metadata."""
+
+    meta: dict
+    events: list[TraceEvent]
+
+    # ---- persistence -------------------------------------------------------
+    def save(self, path: str) -> None:
+        """JSON-lines: first line metadata, one event per following line."""
+        with open(path, "w") as f:
+            f.write(json.dumps({"meta": self.meta}) + "\n")
+            for ev in self.events:
+                f.write(json.dumps(ev.to_json()) + "\n")
+
+    @staticmethod
+    def load(path: str) -> "Trace":
+        with open(path) as f:
+            head = json.loads(f.readline())
+            events = [TraceEvent.from_json(json.loads(line))
+                      for line in f if line.strip()]
+        return Trace(meta=head.get("meta", {}), events=events)
+
+    # ---- comparison --------------------------------------------------------
+    def signature(self, include_time: bool = True) -> list[tuple]:
+        """Hashable per-event identity for replay-equivalence checks.
+
+        With ``include_time`` the virtual-clock timestamps must match too
+        (sim replays are exact); without it only the event sequence is
+        compared (thread replays reproduce order, not wall time).
+        """
+        out = []
+        for ev in self.events:
+            tk = tuple(task_key(ev.task)) if ev.task is not None else None
+            key = (ev.kind, ev.stage, tk, ev.rank)
+            if include_time:
+                key += (round(ev.t, 12),)
+            out.append(key)
+        return out
+
+    def select(self, *kinds: str) -> list[TraceEvent]:
+        want = set(kinds)
+        return [ev for ev in self.events if ev.kind in want]
+
+    # ---- replay projections ------------------------------------------------
+    def dispatch_orders(self, num_stages: int | None = None) -> list[list[Task]]:
+        """Realized per-stage execution order (logical-clock order)."""
+        if num_stages is None:
+            num_stages = int(self.meta.get("num_stages", 0)) or 1 + max(
+                ev.stage for ev in self.events)
+        orders: list[list[Task]] = [[] for _ in range(num_stages)]
+        for ev in self.select(DISPATCH):
+            orders[ev.stage].append(ev.task)
+        return orders
+
+    def delivery_schedule(self) -> dict[tuple[tuple, int], list[float]]:
+        """(task, rank) -> recorded delivery times, in logical-clock order.
+
+        Chaos-duplicated envelopes appear as extra entries; the sim replay
+        re-schedules every one of them at its recorded virtual time.
+        """
+        sched: dict[tuple[tuple, int], list[float]] = {}
+        for ev in self.select(DELIVER):
+            sched.setdefault(
+                (tuple(task_key(ev.task)), ev.rank), []).append(ev.t)
+        return sched
+
+    def durations(self) -> dict[tuple, float]:
+        """task -> realized compute duration (chaos effects included)."""
+        return {tuple(task_key(ev.task)): ev.info["dur"]
+                for ev in self.select(COMPLETE) if "dur" in ev.info}
+
+    def final_loss(self) -> float | None:
+        return self.meta.get("final_loss")
+
+
+def engine_replay_config(trace: Trace, base=None):
+    """DES-engine replay: consume a recorded trace as a pre-committed order.
+
+    Returns an :class:`~repro.core.engine.EngineConfig` with
+    ``replay_trace`` set; the engine resolves it into the trace's realized
+    per-stage dispatch orders (order-exact; timing is re-sampled by the
+    engine's own cost model — use the actor driver's replay for time-exact
+    reproduction).
+    """
+    import dataclasses as _dc
+
+    from repro.core.engine import EngineConfig
+
+    base = base if base is not None else EngineConfig()
+    return _dc.replace(base, replay_trace=trace)
+
+
+class ReplayOracle:
+    """Answers the sim driver's two questions from a recorded trace:
+    when does each envelope arrive, and how long does each task run.
+
+    Delivery times are consumed per (task, rank) in recorded order, so a
+    chaos duplicate's second copy replays at its own recorded time.
+    """
+
+    def __init__(self, trace: Trace):
+        self._sched = {k: list(v) for k, v in trace.delivery_schedule().items()}
+        self._dur = trace.durations()
+
+    def delivery_times(self, task: Task, rank: int) -> list[float]:
+        return self._sched.pop((tuple(task_key(task)), rank), [])
+
+    def duration(self, task: Task) -> float:
+        return self._dur[tuple(task_key(task))]

@@ -71,10 +71,14 @@ class SimTransport:
 class ThreadTransport:
     """Direct mailbox-to-mailbox delivery between actor threads."""
 
-    def __init__(self, mailboxes: dict[int, Mailbox]):
+    def __init__(self, mailboxes: dict[int, Mailbox],
+                 on_send: Callable[[Envelope, float], None] | None = None):
         self.mailboxes = mailboxes
+        self.on_send = on_send
         self.sent = 0
 
     def send(self, env: Envelope, now: float = 0.0) -> None:
         self.sent += 1
+        if self.on_send is not None:
+            self.on_send(env, now)
         self.mailboxes[env.dst_stage].deliver(env, now=now)

@@ -1,0 +1,241 @@
+"""Shared machinery for the runtime-conformance suite.
+
+A *scenario* is a seed-derived (pipeline spec, runtime config, chaos config)
+triple; the suite runs each one through the actor runtime and checks the
+schedule-independent invariants of the paper's correctness argument against
+the recorded event trace.  The invariant checkers themselves live in
+``repro.runtime.rrfp.conformance`` (one source of truth, shared with the
+chaos benchmark); this module re-exports them and adds scenario generation,
+the fixed-order reference executor, and the failing-trace artifact dump.
+
+Any failing check saves the run's trace under ``_artifacts/`` (uploaded by
+the CI job) so the exact event sequence can be replayed.
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import sys
+from pathlib import Path
+
+import numpy as np
+
+from repro.core import CostModel, PipelineSpec
+from repro.core.hints import HintKind
+from repro.core.taskgraph import Kind, Task
+from repro.runtime.rrfp import ActorConfig, ChaosConfig
+from repro.runtime.rrfp.conformance import (  # noqa: F401  (re-exported)
+    check_all,
+    check_backpressure,
+    check_dependency_order,
+    check_exactly_once,
+    check_hint_faithful,
+    check_w_cap,
+    check_wcap_path,
+)
+
+ARTIFACT_DIR = Path(__file__).parent / "_artifacts"
+
+
+# ---------------------------------------------------------------------------
+# scenario generation
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class Scenario:
+    seed: int
+    spec: PipelineSpec
+    config: ActorConfig
+
+    def name(self) -> str:
+        s = self.spec
+        return (f"seed{self.seed}_S{s.num_stages}M{s.num_microbatches}"
+                f"C{s.num_chunks}{'W' if s.split_backward else ''}"
+                f"_{self.config.mode}")
+
+
+def make_scenario(seed: int, *, substrate: str = "sim") -> Scenario:
+    """Deterministic seed -> randomized scenario (spec + mode + chaos).
+
+    Chaos delays are kept at millisecond scale so the same scenarios are
+    cheap on the thread substrate; the sim substrate only cares about their
+    relative magnitude.
+    """
+    rng = np.random.default_rng([0xC0FFEE, seed])
+    S = int(rng.integers(2, 7))
+    M = int(rng.integers(2, 13))
+    split = bool(rng.integers(2))
+    chunks = 1
+    mode = "hint" if rng.random() < 0.75 else "precommitted"
+    hint, fixed = HintKind.BF, "1f1b"
+    if mode == "hint":
+        if split:
+            hint = HintKind.BFW
+        else:
+            hint = HintKind(rng.choice(["bf", "fb", "b_priority", "f_priority"]))
+            if rng.random() < 0.25:
+                chunks = 2  # interleaved (fused backward only)
+    else:
+        fixed = "zb" if split else str(rng.choice(["1f1b", "gpipe"]))
+    buffer_limit = int(rng.choice([2, 4, 32]))
+    w_defer_cap = int(rng.choice([0, 1, 2, 4])) if split else 0
+    tp_degree = int(rng.choice([1, 1, 2]))
+    spec = PipelineSpec(S, M, num_chunks=chunks, split_backward=split)
+    chaos = ChaosConfig(
+        seed=seed,
+        latency_base=float(rng.choice([2e-4, 5e-4, 2e-3])),
+        latency_sigma=float(rng.uniform(0.2, 1.0)),
+        reorder_prob=float(rng.choice([0.0, 0.2, 0.5])),
+        reorder_window=float(rng.uniform(1e-3, 6e-3)),
+        duplicate_prob=float(rng.choice([0.0, 0.1, 0.3])),
+        max_duplicates=int(rng.integers(1, 3)),
+        straggler=(
+            ((int(rng.integers(S)), float(rng.uniform(1.5, 3.0))),)
+            if rng.random() < 0.5 else ()),
+        stall_prob=float(rng.choice([0.0, 0.1])),
+        stall_scale=float(rng.uniform(1e-3, 4e-3)),
+    )
+    config = ActorConfig(
+        mode=mode, hint=hint, fixed_order=fixed, buffer_limit=buffer_limit,
+        w_defer_cap=w_defer_cap, tp_degree=tp_degree, seed=seed,
+        chaos=chaos, record_trace=True,
+        deadlock_timeout=15.0 if substrate == "thread" else 30.0)
+    return Scenario(seed=seed, spec=spec, config=config)
+
+
+def sim_costs(spec: PipelineSpec, seed: int) -> CostModel:
+    cm = CostModel.uniform(spec.num_stages, f=1.0, b=2.0,
+                           w=1.0 if spec.split_backward else 0.0,
+                           comm_base=1e-3, seed=seed)
+    return cm
+
+
+@contextlib.contextmanager
+def artifact_on_failure(get_trace, name: str):
+    """Save the run's trace under _artifacts/ when a check fails (the CI
+    conformance job uploads that directory on failure)."""
+    try:
+        yield
+    except BaseException:
+        trace = get_trace() if callable(get_trace) else get_trace
+        if trace is not None:
+            ARTIFACT_DIR.mkdir(exist_ok=True)
+            path = ARTIFACT_DIR / f"{name}.jsonl"
+            trace.save(str(path))
+            print(f"conformance failure: trace saved -> {path}",
+                  file=sys.stderr)
+        raise
+
+
+# ---------------------------------------------------------------------------
+# numpy stage programs: bitwise loss/grad parity without a device
+# ---------------------------------------------------------------------------
+class NumpyStageProgram:
+    """Float32 ``work_fn`` mimicking ``ActorStageProgram`` semantics.
+
+    Forward multiplies by a per-stage weight vector; the last stage scores
+    a quadratic loss per microbatch; backward propagates exact gradients.
+    All arithmetic is float32, so *accumulation order changes the bits* —
+    which is exactly what the parity check needs: with deterministic
+    (stash-then-sorted-sum) reduction, a chaotic execution order must
+    reproduce the fixed-order reference executor's loss and weight-gradient
+    bit patterns exactly.
+    """
+
+    def __init__(self, stage: int, spec: PipelineSpec, seed: int, d: int = 16,
+                 deterministic: bool = True):
+        self.stage = stage
+        self.spec = spec
+        self.d = d
+        #: False = eager (order-sensitive) accumulation, for replay parity
+        self.deterministic = deterministic
+        rng = np.random.default_rng([seed, 7, stage])
+        self.w = rng.standard_normal(d).astype(np.float32)
+        self.residual: dict[tuple, np.ndarray] = {}
+        self.fwd_out: dict[tuple, np.ndarray] = {}
+        self.w_pending: dict[tuple, tuple[np.ndarray, np.ndarray]] = {}
+        self.w_high_water = 0
+        self._mb_loss: dict[tuple, np.float32] = {}
+        self._mb_grads: dict[tuple, np.ndarray] = {}
+        self.loss = np.float32(0.0)
+        self.d_w = np.zeros(d, np.float32)
+
+    def _x0(self, mb: int) -> np.ndarray:
+        rng = np.random.default_rng([0xDA7A, mb, self.d])
+        return rng.standard_normal(self.d).astype(np.float32)
+
+    def __call__(self, task: Task, payload):
+        kc = (task.mb, task.chunk)
+        last = (self.stage == self.spec.num_stages - 1
+                and task.chunk == self.spec.num_chunks - 1)
+        if task.kind == Kind.F:
+            if self.stage == 0 and task.chunk == 0:
+                x = self._x0(task.mb)
+            else:
+                x = np.asarray(payload)
+            y = (x * self.w).astype(np.float32)
+            self.residual[kc] = x
+            self.fwd_out[kc] = y
+            if last:
+                part = np.float32(np.sum(y * y, dtype=np.float32))
+                if self.deterministic:
+                    self._mb_loss[kc] = part
+                else:
+                    self.loss = np.float32(self.loss + part)
+            return y
+        if task.kind == Kind.B:
+            x = self.residual.pop(kc)
+            if last:  # loss gradient is local: d(loss)/dy = 2 y
+                g_in = (2.0 * self.fwd_out[kc]).astype(np.float32)
+            else:
+                g_in = np.asarray(payload)
+            self.fwd_out.pop(kc, None)
+            dx = (g_in * self.w).astype(np.float32)
+            if self.spec.split_backward:
+                self.w_pending[kc] = (x, g_in)
+                self.w_high_water = max(self.w_high_water, len(self.w_pending))
+            else:
+                self._grad(kc, (g_in * x).astype(np.float32))
+            return dx
+        if task.kind == Kind.W:
+            x, g_in = self.w_pending.pop(kc)
+            self._grad(kc, (g_in * x).astype(np.float32))
+            return None
+        raise ValueError(task)
+
+    def _grad(self, kc: tuple, g: np.ndarray) -> None:
+        if self.deterministic:
+            self._mb_grads[kc] = g
+        else:
+            self.d_w = (self.d_w + g).astype(np.float32)
+
+    def finalize(self) -> "NumpyStageProgram":
+        """Sorted-microbatch fold: bitwise order-independent totals."""
+        for mb in sorted(self._mb_loss):
+            self.loss = np.float32(self.loss + self._mb_loss[mb])
+        self._mb_loss.clear()
+        for mb in sorted(self._mb_grads):
+            self.d_w = (self.d_w + self._mb_grads[mb]).astype(np.float32)
+        self._mb_grads.clear()
+        return self
+
+
+def reference_execute(spec: PipelineSpec,
+                      programs: list[NumpyStageProgram]) -> None:
+    """Fixed-order reference executor: run every task sequentially in a
+    canonical topological order (deterministic scan of the task graph)."""
+    done: set[Task] = set()
+    outputs: dict[Task, object] = {}
+    tasks = list(spec.tasks())
+    while len(done) < len(tasks):
+        progressed = False
+        for t in tasks:
+            if t in done:
+                continue
+            if any(p not in done for p in spec.predecessors(t)):
+                continue
+            mp = spec.message_predecessor(t)
+            payload = outputs.get(mp) if mp is not None else None
+            outputs[t] = programs[t.stage](t, payload)
+            done.add(t)
+            progressed = True
+        assert progressed, "reference executor wedged (cyclic spec?)"

@@ -1,0 +1,76 @@
+"""Randomized chaos scenarios on the thread substrate + bitwise parity.
+
+Each seed runs real thread-per-stage actors under fault injection (delayed,
+reordered and duplicated deliveries from timer threads; keyed stalls before
+task execution) driving float32 numpy stage programs, then checks:
+
+* deadlock-freedom (the run completes within the starvation timeout),
+* every trace invariant from ``harness.check_all``,
+* the w_defer memory bound actually held in the work layer
+  (``w_high_water <= cap``), and
+* **bitwise** loss and weight-gradient parity against the fixed-order
+  reference executor — float32 addition is order-sensitive, so this only
+  passes because chaotic execution + deterministic (stash-then-sorted-sum)
+  reduction reproduces the reference's reduction order exactly.
+"""
+import numpy as np
+import pytest
+
+from harness import (
+    NumpyStageProgram,
+    artifact_on_failure,
+    check_all,
+    make_scenario,
+    reference_execute,
+)
+
+from repro.runtime.rrfp import ActorDriver
+
+THREAD_SEEDS_FAST = list(range(100, 132))
+THREAD_SEEDS_SLOW = list(range(132, 196))
+
+
+def _run_scenario(seed: int) -> None:
+    sc = make_scenario(seed, substrate="thread")
+    spec = sc.spec
+    S = spec.num_stages
+
+    reference = [NumpyStageProgram(s, spec, seed) for s in range(S)]
+    reference_execute(spec, reference)
+    for p in reference:
+        p.finalize()
+
+    chaotic = [NumpyStageProgram(s, spec, seed) for s in range(S)]
+    driver = ActorDriver(spec, None, sc.config)
+    with artifact_on_failure(lambda: driver.trace, f"thread_{sc.name()}"):
+        result = driver.run_threaded(list(chaotic))
+        trace = driver.trace
+        assert len(result.end) == spec.total_tasks()
+        check_all(trace, spec, sc.config)
+        cap = sc.config.w_defer_cap
+        for chaos_p, ref_p in zip(chaotic, reference):
+            chaos_p.finalize()
+            if (spec.split_backward and cap > 0
+                    and sc.config.mode == "hint"):
+                assert chaos_p.w_high_water <= cap, (
+                    f"stage {chaos_p.stage} stashed {chaos_p.w_high_water} "
+                    f"activation pairs > w_defer_cap={cap}")
+            # bitwise: same bytes, not approximately-equal floats
+            assert chaos_p.loss.tobytes() == ref_p.loss.tobytes(), (
+                f"stage {chaos_p.stage} loss bits diverged: "
+                f"{chaos_p.loss!r} != {ref_p.loss!r}")
+            assert chaos_p.d_w.tobytes() == ref_p.d_w.tobytes(), (
+                f"stage {chaos_p.stage} weight-grad bits diverged "
+                f"(max abs diff "
+                f"{np.max(np.abs(chaos_p.d_w - ref_p.d_w))})")
+
+
+@pytest.mark.parametrize("seed", THREAD_SEEDS_FAST)
+def test_threaded_chaos_scenario(seed):
+    _run_scenario(seed)
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("seed", THREAD_SEEDS_SLOW)
+def test_threaded_chaos_scenario_full_matrix(seed):
+    _run_scenario(seed)

@@ -1,0 +1,135 @@
+"""Chaotic actor runs over real jitted stage callables: bitwise loss/grad
+parity with the fixed-order reference executor.
+
+The numpy suite (test_chaos_threaded) covers the reduction-order argument at
+scale; these tests close the loop on the actual training path: the same
+``ActorStageProgram`` that ``launch/train.py --runtime actor`` drives, with
+``deterministic_reduction=True``, executed chaotically, must reproduce the
+sequential fixed-order reference's loss and per-stage parameter-gradient
+bits exactly (same jitted kernels + same per-microbatch inputs + pinned
+reduction order => identical floats).
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from harness import artifact_on_failure, check_all, reference_execute
+
+from repro.configs import registry
+from repro.core import PipelineSpec
+from repro.core.hints import HintKind
+from repro.models.build import build
+from repro.pipeline.stagefn import ActorStageProgram, StageFnOptions, StageFns
+from repro.runtime.rrfp import ActorConfig, ActorDriver, ChaosConfig
+
+
+def _setup(S, M, mb_rows, seq, layers, split):
+    cfg = registry.reduced_config("deepseek-7b", num_layers=layers)
+    model = build(cfg, num_stages=S)
+    key = jax.random.key(0)
+    sp = model.init_stage_params(key)
+    io = model.init_io_params(jax.random.fold_in(key, 1))
+    rows = M * mb_rows
+    batch = {
+        "tokens": jax.random.randint(
+            jax.random.key(2), (rows, seq), 0, cfg.vocab_size),
+        "labels": jax.random.randint(
+            jax.random.key(3), (rows, seq), 0, cfg.vocab_size),
+    }
+    fns = StageFns(model, StageFnOptions(
+        mb_rows=mb_rows, seq_len=seq, loss_scale=1.0 / (rows * seq)))
+
+    def programs():
+        return [
+            ActorStageProgram(
+                fns, s, jax.tree.map(lambda x, s=s: x[s], sp), io, batch,
+                split_backward=split, deterministic_reduction=True)
+            for s in range(S)
+        ]
+
+    return programs
+
+
+def _assert_bitwise_parity(chaotic, reference):
+    for cp, rp in zip(chaotic, reference):
+        cp.finalize()
+        rp.finalize()
+        assert float(cp.loss_acc) == float(rp.loss_acc), (
+            f"stage {cp.stage} loss diverged: "
+            f"{float(cp.loss_acc)!r} != {float(rp.loss_acc)!r}")
+        for cg, rg in zip(jax.tree.leaves(cp.d_stage),
+                          jax.tree.leaves(rp.d_stage)):
+            assert np.asarray(cg).tobytes() == np.asarray(rg).tobytes()
+        for cg, rg in zip(jax.tree.leaves(cp.d_io),
+                          jax.tree.leaves(rp.d_io)):
+            assert np.asarray(cg).tobytes() == np.asarray(rg).tobytes()
+
+
+def _run_parity(S, M, mb_rows, seq, layers, *, split, chaos, acfg):
+    spec = PipelineSpec(S, M, split_backward=split)
+    make_programs = _setup(S, M, mb_rows, seq, layers, split)
+
+    reference = make_programs()
+    reference_execute(spec, reference)
+
+    chaotic = make_programs()
+    driver = ActorDriver(spec, None, acfg)
+    with artifact_on_failure(lambda: driver.trace, f"realmodel_S{S}M{M}"):
+        result = driver.run_threaded(list(chaotic))
+        assert len(result.end) == spec.total_tasks()
+        check_all(driver.trace, spec, acfg)
+        _assert_bitwise_parity(chaotic, reference)
+
+
+def test_real_model_chaotic_fused_parity():
+    chaos = ChaosConfig(seed=1, latency_base=2e-3, reorder_prob=0.4,
+                        reorder_window=1e-2, duplicate_prob=0.2,
+                        straggler=((1, 2.0),), stall_prob=0.1,
+                        stall_scale=5e-3)
+    acfg = ActorConfig(mode="hint", chaos=chaos, record_trace=True,
+                       deadlock_timeout=300.0)
+    _run_parity(2, 3, 1, 8, 2, split=False, chaos=chaos, acfg=acfg)
+
+
+def test_mid_run_finalize_raises_instead_of_corrupting_order():
+    """A partial fold (e.g. a progress-logging ``loss_sum`` read mid-run)
+    would silently pin early microbatches' reduction position; the program
+    must raise on the next out-of-order fold instead."""
+    from repro.core.taskgraph import Kind, Task
+
+    cfg = registry.reduced_config("deepseek-7b", num_layers=2)
+    model = build(cfg, num_stages=1)
+    key = jax.random.key(0)
+    sp = model.init_stage_params(key)
+    io = model.init_io_params(jax.random.fold_in(key, 1))
+    batch = {
+        "tokens": jax.random.randint(
+            jax.random.key(2), (3, 8), 0, cfg.vocab_size),
+        "labels": jax.random.randint(
+            jax.random.key(3), (3, 8), 0, cfg.vocab_size),
+    }
+    fns = StageFns(model, StageFnOptions(mb_rows=1, seq_len=8))
+    p = ActorStageProgram(fns, 0, jax.tree.map(lambda x: x[0], sp), io,
+                          batch, deterministic_reduction=True)
+    p(Task(Kind.F, 0, 0), None)
+    p(Task(Kind.F, 0, 2), None)
+    p.loss_sum  # mid-run read: folds microbatches {0, 2} early
+    p(Task(Kind.F, 0, 1), None)
+    with pytest.raises(RuntimeError, match="mid-run"):
+        p.finalize()
+
+
+@pytest.mark.slow
+def test_real_model_chaotic_bfw_parity():
+    """Split backward (B = dX, deferrable W) under chaos with a W cap."""
+    chaos = ChaosConfig(seed=2, latency_base=2e-3, reorder_prob=0.5,
+                        reorder_window=2e-2, duplicate_prob=0.3,
+                        straggler=((0, 2.0),), stall_prob=0.15,
+                        stall_scale=1e-2)
+    acfg = ActorConfig(mode="hint", hint=HintKind.BFW, w_defer_cap=2,
+                       chaos=chaos, record_trace=True,
+                       deadlock_timeout=300.0)
+    _run_parity(2, 4, 2, 16, 4, split=True, chaos=chaos, acfg=acfg)

@@ -1,0 +1,109 @@
+"""Record/replay determinism: a recorded trace re-executes exactly.
+
+Three replay surfaces:
+
+* sim substrate (time-exact): the replayed run's trace is bit-for-bit the
+  recorded one, surviving a save/load roundtrip through the JSON-lines
+  format;
+* thread substrate (order-exact): replaying pins the per-stage dispatch
+  order, reproducing an *eager* (order-sensitive) float32 reduction's loss
+  and gradient bits;
+* DES engine: ``EngineConfig.replay_trace`` re-executes the recorded
+  arrival order as a pre-committed schedule.
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from harness import NumpyStageProgram, make_scenario, sim_costs
+
+from repro.core.engine import Engine, EngineConfig
+from repro.runtime.rrfp import ActorConfig, ActorDriver, Trace
+
+REPLAY_SEEDS = [7, 19, 42]
+
+
+@pytest.mark.parametrize("seed", REPLAY_SEEDS)
+def test_sim_replay_survives_file_roundtrip(tmp_path, seed):
+    sc = make_scenario(seed)
+    driver = ActorDriver(sc.spec, sim_costs(sc.spec, seed), sc.config)
+    result = driver.run()
+    path = tmp_path / "trace.jsonl"
+    driver.trace.save(str(path))
+    loaded = Trace.load(str(path))
+    assert loaded.signature() == driver.trace.signature()
+    assert loaded.meta["mode"] == sc.config.mode
+
+    rdriver = ActorDriver(
+        sc.spec, None, ActorConfig(record_trace=True, replay=loaded))
+    replayed = rdriver.run()
+    assert replayed.makespan == result.makespan
+    assert rdriver.trace.signature() == driver.trace.signature()
+
+
+@pytest.mark.parametrize("seed", REPLAY_SEEDS)
+def test_threaded_replay_reproduces_eager_loss_bits(seed):
+    """Order-exact replay pins an order-*sensitive* reduction's bits."""
+    sc = make_scenario(seed, substrate="thread")
+    spec = sc.spec
+    S = spec.num_stages
+
+    first = [NumpyStageProgram(s, spec, seed, deterministic=False)
+             for s in range(S)]
+    driver = ActorDriver(spec, None, sc.config)
+    driver.run_threaded(list(first))
+    trace = driver.trace
+
+    second = [NumpyStageProgram(s, spec, seed, deterministic=False)
+              for s in range(S)]
+    rdriver = ActorDriver(
+        spec, None,
+        ActorConfig(record_trace=True, replay=trace,
+                    deadlock_timeout=sc.config.deadlock_timeout))
+    rdriver.run_threaded(list(second))
+
+    assert (rdriver.trace.dispatch_orders(S)
+            == trace.dispatch_orders(S))
+    for a, b in zip(first, second):
+        assert a.loss.tobytes() == b.loss.tobytes()
+        assert a.d_w.tobytes() == b.d_w.tobytes()
+
+
+@pytest.mark.parametrize("seed", REPLAY_SEEDS)
+def test_engine_replays_recorded_arrival_order(seed):
+    sc = make_scenario(seed)
+    costs = sim_costs(sc.spec, seed)
+    driver = ActorDriver(sc.spec, costs, sc.config)
+    driver.run()
+    trace = driver.trace
+
+    engine = Engine(sc.spec, costs, EngineConfig(replay_trace=trace))
+    result = engine.run()
+    assert result.stage_orders() == trace.dispatch_orders(sc.spec.num_stages)
+
+
+def test_replay_adopts_recorded_configuration():
+    """Replay must not depend on the caller re-supplying mode/hint/caps."""
+    sc = make_scenario(11)
+    driver = ActorDriver(sc.spec, sim_costs(sc.spec, 11), sc.config)
+    result = driver.run()
+    # deliberately wrong defaults in the replay config
+    rdriver = ActorDriver(
+        sc.spec, None,
+        ActorConfig(mode="precommitted", fixed_order="gpipe",
+                    record_trace=True, replay=driver.trace))
+    replayed = rdriver.run()
+    assert replayed.makespan == result.makespan
+    assert rdriver.trace.signature() == driver.trace.signature()
+
+
+def test_replay_disables_chaos_resampling():
+    """A replayed run must not re-inject faults on top of recorded ones."""
+    sc = make_scenario(23)
+    driver = ActorDriver(sc.spec, sim_costs(sc.spec, 23), sc.config)
+    result = driver.run()
+    rdriver = ActorDriver(
+        sc.spec, None,
+        dataclasses.replace(sc.config, replay=driver.trace))
+    assert rdriver.run().makespan == result.makespan

@@ -1,0 +1,205 @@
+"""Property-based tests: hint arbitration is a total order; mailbox/TP-gate
+ordering is permutation-stable.
+
+Uses ``hypothesis`` when installed, the deterministic ``tests/_hyp_stub.py``
+fallback otherwise (same properties, fixed example budget).
+
+The central properties:
+
+* for any ready set, repeatedly extracting the arbiter's choice visits
+  *every* task exactly once — the hint ranking is a total order over the
+  ready set (no task is unrankable, no tie is unresolvable);
+* the extraction sequence is invariant under permutations of the ready
+  set's presentation order — arbitration depends on task identity only;
+* mailbox buffers are FIFO per kind regardless of kind interleaving, and
+  TP-group admission commits at the last-rank arrival independent of the
+  rank arrival permutation.
+"""
+import itertools
+
+import numpy as np
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ModuleNotFoundError:  # deterministic fallback (tests/_hyp_stub.py)
+    from _hyp_stub import given, settings, strategies as st
+
+from repro.core.hints import HintArbiter, HintKind, pick
+from repro.core.taskgraph import Kind, PipelineSpec, Task
+from repro.runtime.rrfp import Envelope, Mailbox, TPGroup, envelopes_for
+
+
+def _ready_set(seed: int, size: int, split: bool) -> list[Task]:
+    """Deterministic pseudo-random ready set (distinct tasks, one stage)."""
+    rng = np.random.default_rng([0x5EED, seed])
+    kinds = [Kind.F, Kind.B] + ([Kind.W] if split else [])
+    out = set()
+    while len(out) < size:
+        out.add(Task(kind=kinds[int(rng.integers(len(kinds)))],
+                     stage=0,
+                     mb=int(rng.integers(0, 8)),
+                     chunk=int(rng.integers(0, 3))))
+    return sorted(out)
+
+
+def _extraction_order(hint: HintKind, ready: list[Task],
+                      last_dir) -> list[Task]:
+    """Drain the ready set through a fresh arbiter; the visit sequence is
+    the arbitration ranking."""
+    arb = HintArbiter(hint, last_dir=last_dir)
+    pool = list(ready)
+    seq = []
+    while pool:
+        t = arb.select(pool)
+        assert t is not None, (
+            f"hint {hint} cannot rank nonempty ready set {pool}")
+        assert t in pool
+        seq.append(t)
+        pool.remove(t)
+    return seq
+
+
+HINTS_FUSED = [HintKind.BF, HintKind.FB, HintKind.B_PRIORITY,
+               HintKind.F_PRIORITY]
+
+
+# ---------------------------------------------------------------------------
+# hint arbitration: total order, permutation-stable
+# ---------------------------------------------------------------------------
+@settings(max_examples=60, deadline=None)
+@given(seed=st.integers(0, 10_000), size=st.integers(1, 12),
+       hint_i=st.integers(0, len(HINTS_FUSED) - 1),
+       last=st.integers(0, 2), perm_seed=st.integers(0, 10_000))
+def test_arbitration_total_order_and_permutation_stable(
+        seed, size, hint_i, last, perm_seed):
+    hint = HINTS_FUSED[hint_i]
+    last_dir = (None, Kind.F, Kind.B)[last]
+    ready = _ready_set(seed, size, split=False)
+    ranking = _extraction_order(hint, ready, last_dir)
+    # total order: a permutation of the ready set, nothing skipped/duplicated
+    assert sorted(ranking) == sorted(ready)
+    # stability: any presentation order yields the identical ranking
+    rng = np.random.default_rng([perm_seed, size])
+    shuffled = list(ready)
+    rng.shuffle(shuffled)
+    assert _extraction_order(hint, shuffled, last_dir) == ranking
+
+
+@settings(max_examples=40, deadline=None)
+@given(seed=st.integers(0, 10_000), size=st.integers(1, 12),
+       perm_seed=st.integers(0, 10_000))
+def test_bfw_total_order_and_permutation_stable(seed, size, perm_seed):
+    ready = _ready_set(seed, size, split=True)
+    ranking = _extraction_order(HintKind.BFW, ready, None)
+    assert sorted(ranking) == sorted(ready)
+    rng = np.random.default_rng([perm_seed, 1 + size])
+    shuffled = list(ready)
+    rng.shuffle(shuffled)
+    assert _extraction_order(HintKind.BFW, shuffled, None) == ranking
+
+
+@settings(max_examples=40, deadline=None)
+@given(seed=st.integers(0, 10_000), size=st.integers(1, 10))
+def test_pick_selects_unique_minimum(seed, size):
+    """`pick` resolves every direction to one unambiguous App. A minimum."""
+    ready = _ready_set(seed, size, split=True)
+    for kind in Kind:
+        cands = [t for t in ready if t.kind == kind]
+        chosen = pick(ready, kind)
+        if not cands:
+            assert chosen is None
+            continue
+        assert chosen in cands
+        key = ((lambda t: (t.chunk, t.mb)) if kind == Kind.F
+               else (lambda t: (-t.chunk, t.mb)))
+        assert all(key(chosen) <= key(t) for t in cands)
+        # ties are impossible: the key is injective over distinct tasks
+        assert sum(1 for t in cands if key(t) == key(chosen)) == 1
+
+
+@settings(max_examples=30, deadline=None)
+@given(seed=st.integers(0, 10_000), size=st.integers(2, 10))
+def test_bfw_w_only_fills_empty_rounds(seed, size):
+    """BFW never dispatches W while a compute direction is ready."""
+    ready = _ready_set(seed, size, split=True)
+    arb = HintArbiter(HintKind.BFW)
+    chosen = arb.select(ready)
+    if any(t.kind in (Kind.F, Kind.B) for t in ready):
+        assert chosen.kind != Kind.W
+
+
+# ---------------------------------------------------------------------------
+# mailbox: FIFO per kind, stable under interleaving
+# ---------------------------------------------------------------------------
+@settings(max_examples=40, deadline=None)
+@given(seed=st.integers(0, 10_000), n=st.integers(1, 16))
+def test_mailbox_fifo_per_kind(seed, n):
+    rng = np.random.default_rng([0xB0F, seed])
+    tasks = _ready_set(seed, n, split=True)
+    order = list(tasks)
+    rng.shuffle(order)
+    mb = Mailbox(stage=0)
+    for t in order:
+        mb.deliver(Envelope(task=t, src_stage=1, dst_stage=0))
+    # per-kind buffers preserve delivery order exactly
+    for kind in Kind:
+        assert mb.buffers[kind] == [t for t in order if t.kind == kind]
+    # arrived_tasks is the per-kind concatenation in Kind order
+    assert mb.arrived_tasks() == [t for kind in Kind
+                                  for t in order if t.kind == kind]
+
+
+@settings(max_examples=40, deadline=None)
+@given(seed=st.integers(0, 10_000), n=st.integers(2, 12),
+       k=st.integers(1, 8))
+def test_mailbox_consume_is_exact(seed, n, k):
+    """Consuming removes exactly the requested task, preserving the rest."""
+    rng = np.random.default_rng([0xC0, seed])
+    tasks = _ready_set(seed, n, split=False)
+    mb = Mailbox(stage=0)
+    for t in tasks:
+        mb.deliver(Envelope(task=t, src_stage=1, dst_stage=0,
+                            payload=("p", t)))
+    victim = tasks[k % len(tasks)]
+    assert mb.consume(victim) == ("p", victim)
+    remaining = mb.arrived_tasks()
+    assert victim not in remaining
+    assert sorted(remaining) == sorted(t for t in tasks if t != victim)
+
+
+# ---------------------------------------------------------------------------
+# TP gate: admission at last rank, any permutation
+# ---------------------------------------------------------------------------
+@settings(max_examples=30, deadline=None)
+@given(tp=st.integers(2, 5), perm_seed=st.integers(0, 10_000))
+def test_tp_admission_permutation_invariant(tp, perm_seed):
+    task = Task(Kind.F, 0, 3)
+    envs = envelopes_for(task, src_stage=1, tp_degree=tp)
+    rng = np.random.default_rng([perm_seed, tp])
+    order = list(range(tp))
+    rng.shuffle(order)
+    g = TPGroup(stage=0, tp_degree=tp)
+    for i, rank_i in enumerate(order):
+        adm = g.offer(envs[rank_i], now=float(i))
+        if i < tp - 1:
+            assert adm is None, "admitted before all ranks arrived"
+        else:
+            assert adm is not None and adm.task == task
+            assert adm.spread == float(tp - 1)  # first at 0, last at tp-1
+
+
+@settings(max_examples=30, deadline=None)
+@given(tp=st.integers(1, 4), dup=st.integers(1, 3))
+def test_tp_gate_duplicate_envelopes_never_readmit(tp, dup):
+    """Delivering every rank's envelope `dup`+1 times admits exactly once."""
+    task = Task(Kind.B, 0, 1)
+    envs = envelopes_for(task, src_stage=1, tp_degree=tp)
+    g = TPGroup(stage=0, tp_degree=tp)
+    admissions = 0
+    for _round in range(dup + 1):
+        for env in envs:
+            if g.offer(env, now=1.0) is not None:
+                admissions += 1
+    assert admissions == 1
+    assert g.admitted == 1
+    assert g.duplicates == (dup + 1) * tp - tp
