@@ -39,6 +39,11 @@ def main() -> None:
     ap.add_argument("--chaos", action="store_true",
                     help="actor backend: run the fault-injection sweep "
                          "with conformance checks (emits BENCH_chaos.json)")
+    ap.add_argument("--multimodal", action="store_true",
+                    help="actor backend: run the multimodal DAG sweep — "
+                         "readiness-driven vs pre-committed fixed order on "
+                         "skewed encoder/decoder branch+fusion pipelines "
+                         "(emits BENCH_multimodal.json)")
     ap.add_argument("--json-out", default=None,
                     help="actor backend: where to write the JSON report "
                          "(default BENCH_actor_runtime.json, or "
@@ -54,10 +59,17 @@ def main() -> None:
             raise SystemExit(
                 "--hint bfw and --split-backward go together: the BFW hint "
                 "needs W tasks, which only exist under split backward")
-        if args.chaos and bfw:
-            raise SystemExit("--chaos and the BFW sweep are separate "
-                             "reports; run them as two invocations")
-        if args.chaos:
+        if sum([args.chaos, bfw, args.multimodal]) > 1:
+            raise SystemExit("--chaos, the BFW sweep and --multimodal are "
+                             "separate reports; run them as separate "
+                             "invocations")
+        if args.multimodal:
+            from benchmarks.multimodal_compare import (
+                multimodal_rows as rows_fn)
+
+            json_out = args.json_out or "BENCH_multimodal.json"
+            label = "multimodal"
+        elif args.chaos:
             from benchmarks.chaos_sweep import chaos_rows as rows_fn
 
             json_out = args.json_out or "BENCH_chaos.json"

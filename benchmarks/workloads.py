@@ -11,6 +11,7 @@ from __future__ import annotations
 import numpy as np
 
 from repro.core.costs import CostModel, JitterModel, multimodal_stage_flops
+from repro.data.lengths import TEXT_SIGMA, VISION_SIGMA, length_skew
 
 GPU_FLOPS = 165e12 * 0.35
 TOKENS = 2048  # text tokens per sample
@@ -85,12 +86,14 @@ def stage_costs(lm: str, vit: str | None, pp: int, tp: int = 1,
     # Per-microbatch heterogeneity: multimodal samples vary strongly in
     # image content, and the variation is CORRELATED across the vision
     # stages that process the same microbatch (§2.1's workload dynamicity
-    # on top of runtime variability).
+    # on top of runtime variability).  The skew is the shared modality
+    # length sampler (``repro.data.lengths``): vision-stage cost scales
+    # with per-sample token count, LM-stage cost barely moves.
     skew = None
     if vit is not None:
         rng = np.random.default_rng(seed)
-        per_mb_vis = rng.lognormal(mean=-0.5 * 0.6**2, sigma=0.6, size=64)
-        per_mb_lm = rng.lognormal(mean=-0.5 * 0.1**2, sigma=0.1, size=64)
+        per_mb_vis = length_skew(64, VISION_SIGMA, rng)
+        per_mb_lm = length_skew(64, TEXT_SIGMA, rng)
         skew = np.ones((pp, 64))
         skew[:n_vis] = per_mb_vis[None, :]
         skew[n_vis:] = per_mb_lm[None, :]

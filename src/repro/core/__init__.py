@@ -25,12 +25,12 @@ from repro.core.engine import (
 )
 from repro.core.hints import HintArbiter, HintKind
 from repro.core.synthesis import SynthesisResult, ema_update_costs, synthesize
-from repro.core.taskgraph import Kind, PipelineSpec, Task
+from repro.core.taskgraph import Kind, PipelineSpec, StageGraph, Task
 
 __all__ = [
     "CostModel", "InjectionModel", "INJECTION_LEVELS", "JitterModel",
     "multimodal_stage_flops", "DeadlockError", "Engine", "EngineConfig",
     "RunResult", "average_makespan", "run_iteration", "HintArbiter",
     "HintKind", "SynthesisResult", "ema_update_costs", "synthesize",
-    "Kind", "PipelineSpec", "Task",
+    "Kind", "PipelineSpec", "StageGraph", "Task",
 ]

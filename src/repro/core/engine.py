@@ -127,7 +127,8 @@ class _Stage:
     def __init__(self, idx: int, arbiter: HintArbiter, order: list[Task] | None):
         self.idx = idx
         self.ready: set[Task] = set()
-        self.arrived: set[Task] = set()
+        #: per-task arrived source stages (DAG fan-in needs every edge)
+        self.arrived: dict[Task, set[int]] = {}
         self.done: set[Task] = set()
         self.busy_until = 0.0
         self.idle_since = 0.0
@@ -194,11 +195,11 @@ class Engine:
             heapq.heappush(events, (t, seq, kind, payload))
             seq += 1
 
-        # Stage 0 / chunk 0 forward data is locally available at t=0.
-        for j in range(spec.num_microbatches):
-            t0 = Task(Kind.F, 0, j, 0)
-            stages[0].arrived.add(t0)
-            stages[0].ready.add(t0)
+        # Source stages' chunk-0 forward data is locally available at t=0
+        # (stage 0 on a chain; every branch root on a DAG).
+        for s0 in spec.source_stages():
+            for j in range(spec.num_microbatches):
+                stages[s0].ready.add(Task(Kind.F, s0, j, 0))
 
         total = spec.total_tasks()
         n_done = 0
@@ -206,8 +207,8 @@ class Engine:
 
         # ---- helpers -------------------------------------------------------
         def is_ready(st: _Stage, t: Task) -> bool:
-            mp = spec.message_predecessor(t)
-            if mp is not None and t not in st.arrived:
+            mps = spec.message_predecessors(t)
+            if mps and len(st.arrived.get(t, ())) < len(mps):
                 return False
             lp = spec.local_predecessor(t)
             if lp is not None and lp not in st.done:
@@ -270,25 +271,16 @@ class Engine:
             samples = [self.costs.sample_comm(self.rng) for _ in range(k)]
             return t_now + max(samples), max(samples) - min(samples)
 
-        # rendezvous state (sync_sends / pre-committed): succ task ->
-        # (sender stage idx, completion time)
-        pending: dict[Task, tuple[int, float]] = {}
+        # rendezvous state (sync_sends / pre-committed): (succ task, sender
+        # stage) -> completion time.  Keyed per edge: DAG fan-in receivers
+        # rendezvous with each branch's send independently.
+        pending: dict[tuple[Task, int], float] = {}
         sync = cfg.mode == "precommitted" and cfg.sync_sends
-
-        def expected_next(st: _Stage) -> Task | None:
-            """Message the stage's next pre-committed task is waiting on."""
-            if st.order is None or st.order_pos >= len(st.order):
-                return None
-            nxt = st.order[st.order_pos]
-            mp = spec.message_predecessor(nxt)
-            if mp is not None and nxt not in st.arrived:
-                return nxt
-            return None
 
         def try_match(t_now: float) -> None:
             """Match pending sends whose receiver has posted the recv."""
             matched = []
-            for succ, (sender_idx, _done_at) in pending.items():
+            for (succ, sender_idx), _done_at in pending.items():
                 recv = stages[succ.stage]
                 # the receiver's recv window covers its next `send_queue`+1
                 # order entries (irecvs posted one step ahead)
@@ -301,11 +293,11 @@ class Engine:
                 if succ in window or recv.order is None:
                     matched.append((succ, sender_idx))
             for succ, sender_idx in matched:
-                del pending[succ]
+                del pending[(succ, sender_idx)]
                 at, spread = arrival_time(t_now)
                 if spread > 0:
                     stages[succ.stage].stats.deferrals += 1
-                push(at, "message", succ)
+                push(at, "message", (succ, sender_idx))
                 snd = stages[sender_idx]
                 snd.outstanding -= 1
                 if snd.send_blocked and snd.outstanding <= cfg.send_queue:
@@ -334,12 +326,11 @@ class Engine:
                     maybe_enqueue_local(st, Task(Kind.B, st.idx, task.mb, task.chunk))
                 if task.kind == Kind.B and spec.split_backward:
                     maybe_enqueue_local(st, Task(Kind.W, st.idx, task.mb, task.chunk))
-                # outgoing message: async (RRFP sender threads) or
-                # rendezvous (pre-committed paired p2p)
-                succ = self._message_successor(task)
-                if succ is not None:
+                # outgoing messages: async (RRFP sender threads) or
+                # rendezvous (pre-committed paired p2p); one per out-edge
+                for succ in spec.message_successors(task):
                     if sync:
-                        pending[succ] = (st.idx, now)
+                        pending[(succ, st.idx)] = now
                         st.outstanding += 1
                         if st.outstanding > cfg.send_queue:
                             st.send_blocked = True
@@ -348,16 +339,16 @@ class Engine:
                         at, spread = arrival_time(now)
                         if spread > 0:
                             stages[succ.stage].stats.deferrals += 1
-                        push(at, "message", succ)
+                        push(at, "message", (succ, st.idx))
                 st.idle_since = now
                 dispatch(st, now)
                 if sync:
                     # order pointers advanced: pending sends may now match
                     try_match(now)
-            else:  # message arrival enabling `payload`
-                tgt: Task = payload
+            else:  # message arrival enabling one edge of `payload`
+                tgt, src = payload
                 st = stages[tgt.stage]
-                st.arrived.add(tgt)
+                st.arrived.setdefault(tgt, set()).add(src)
                 if tgt not in st.done and is_ready(st, tgt):
                     st.ready.add(tgt)
                 dispatch(st, now)
@@ -382,10 +373,6 @@ class Engine:
             spec=spec,
         )
 
-    # ------------------------------------------------------------------
-    def _message_successor(self, t: Task) -> Task | None:
-        """The remote task whose readiness this task's completion message feeds."""
-        return self.spec.message_successor(t)
 
 
 # --------------------------------------------------------------------------

@@ -154,13 +154,14 @@ def gpipe_order(spec: PipelineSpec, stage: int) -> list[Task]:
 def one_f_one_b_order(spec: PipelineSpec, stage: int) -> list[Task]:
     """Standard non-interleaved 1F1B (PipeDream-flush / Megatron default).
 
-    Warmup: (S-1-s) forwards; steady state: alternate 1F/1B; cooldown: drain
-    backwards.  Only defined for num_chunks == 1.
+    Warmup: dist-to-sink forwards (S-1-s on a chain; the longest forward
+    path to a loss stage on a DAG); steady state: alternate 1F/1B;
+    cooldown: drain backwards.  Only defined for num_chunks == 1.
     """
     if spec.num_chunks != 1:
         raise NotImplementedError("interleaved 1F1B handled by synthesis")
-    S, M = spec.num_stages, spec.num_microbatches
-    warmup = min(S - 1 - stage, M)
+    M = spec.num_microbatches
+    warmup = min(spec.dist_to_sink(stage), M)
     order: list[Task] = [Task(Kind.F, stage, j) for j in range(warmup)]
     nf, nb = warmup, 0
     while nb < M:
@@ -186,8 +187,9 @@ def zero_bubble_order(spec: PipelineSpec, stage: int) -> list[Task]:
         raise NotImplementedError
     if not spec.split_backward:
         raise ValueError("zero_bubble_order requires split_backward=True")
-    S, M = spec.num_stages, spec.num_microbatches
-    warmup = min(S - 1 - stage, M)
+    M = spec.num_microbatches
+    depth = spec.dist_to_sink(stage)
+    warmup = min(depth, M)
     order: list[Task] = [Task(Kind.F, stage, j) for j in range(warmup)]
     nf, nb, nw = warmup, 0, 0
     while nb < M:
@@ -198,7 +200,7 @@ def zero_bubble_order(spec: PipelineSpec, stage: int) -> list[Task]:
         nb += 1
         # ZB: defer W unless we've run out of F's to issue (cooldown), in
         # which case W fills what would otherwise be a bubble slot.
-        if nf >= M and nw < nb - (S - 1 - stage):
+        if nf >= M and nw < nb - depth:
             order.append(Task(Kind.W, stage, nw))
             nw += 1
     while nw < M:
@@ -214,13 +216,35 @@ def modality_balanced_order(
 
     Uses per-stage relative cost to shift the warmup depth (heavier stages get
     fewer in-flight microbatches), emulating a modality-aware planner that
-    still commits to its order ahead of execution.
+    still commits to its order ahead of execution.  On a DAG the base depth
+    is the stage's longest forward path to the loss stage, so encoder-branch
+    stages (cheap, far from the sink) warm up deep while decoder stages stay
+    shallow — the planner's view of the modality imbalance.
+
+    Feasibility: with asynchronous sends, a set of per-stage 1F1B-style
+    orders is deadlock-free iff every forward edge (s -> u) satisfies
+    ``warmup(s) >= warmup(u) + 1`` (a stage must stay a microbatch ahead of
+    each consumer before it starts waiting on backwards).  The cost-aware
+    depths are therefore clamped by a reverse-topological pass; a stage
+    pinned at ``M`` (GPipe-like, all forwards first) releases its
+    predecessors from the constraint only if they are pinned at ``M`` too.
     """
     if spec.num_chunks != 1:
         raise NotImplementedError
     S, M = spec.num_stages, spec.num_microbatches
-    rel = stage_cost[stage] / max(max(stage_cost), 1e-12)
-    warmup = min(max(1, round((S - 1 - stage) * (1.5 - rel))), M, S)
+
+    def desired(s: int) -> int:
+        rel = stage_cost[s] / max(max(stage_cost), 1e-12)
+        return min(max(1, round(spec.dist_to_sink(s) * (1.5 - rel))), M, S)
+
+    warmups: dict[int, int] = {}
+    order_rev = (spec.graph.topological_order() if spec.graph is not None
+                 else tuple(range(S)))
+    for s in reversed(order_rev):
+        need = max((warmups[u] + 1 for u in spec.stage_successors(s)),
+                   default=0)
+        warmups[s] = min(M, max(desired(s), need))
+    warmup = warmups[stage]
     order: list[Task] = [Task(Kind.F, stage, j) for j in range(warmup)]
     nf, nb = warmup, 0
     while nb < M:
@@ -229,6 +253,8 @@ def modality_balanced_order(
             nf += 1
         order.append(Task(Kind.B, stage, nb))
         nb += 1
+    if spec.split_backward:
+        order += [Task(Kind.W, stage, j) for j in range(M)]
     return order
 
 

@@ -13,6 +13,7 @@ from typing import Iterator
 
 import numpy as np
 
+from repro.data.lengths import bucket_for, sample_token_lengths
 from repro.models.common import ArchConfig
 
 
@@ -24,13 +25,7 @@ def synth_batch(cfg: ArchConfig, batch: int, seq: int, *, seed: int = 0,
                 step: int = 0, enc_len: int = 0) -> dict:
     """One global batch for ``cfg``: tokens/labels (+ stub embeddings)."""
     rng = _rng(seed, step)
-    v = cfg.vocab_size
-    # zipf unigram with a deterministic bigram successor table: learnable
-    base = rng.zipf(1.3, size=(batch, seq + 1)).astype(np.int64) % v
-    succ = (np.arange(v) * 31 + 7) % v
-    follow = rng.random((batch, seq + 1)) < 0.5
-    toks = base.copy()
-    toks[:, 1:] = np.where(follow[:, 1:], succ[toks[:, :-1]], base[:, 1:])
+    toks = _token_stream(rng, cfg.vocab_size, batch, seq)
     out = {
         "tokens": toks[:, :seq].astype(np.int32),
         "labels": toks[:, 1 : seq + 1].astype(np.int32),
@@ -46,6 +41,57 @@ def synth_batch(cfg: ArchConfig, batch: int, seq: int, *, seed: int = 0,
             rng.standard_normal((batch, enc_len or seq, cfg.d_model)) * 0.02
         ).astype(np.float32)
     return out
+
+
+def _token_stream(rng: np.random.Generator, v: int, batch: int,
+                  seq: int) -> np.ndarray:
+    """Zipf unigram + deterministic bigram successors (learnable signal)."""
+    base = rng.zipf(1.3, size=(batch, seq + 1)).astype(np.int64) % v
+    succ = (np.arange(v) * 31 + 7) % v
+    follow = rng.random((batch, seq + 1)) < 0.5
+    toks = base.copy()
+    toks[:, 1:] = np.where(follow[:, 1:], succ[toks[:, :-1]], base[:, 1:])
+    return toks
+
+
+def multimodal_batch(mm_cfg, num_microbatches: int, mb_rows: int, *,
+                     seed: int = 0, step: int = 0,
+                     bucketing: bool = True) -> dict:
+    """One global batch for a branch+fusion multimodal pipeline.
+
+    Per-microbatch encoder-token counts come from the shared modality
+    length sampler (``repro.data.lengths`` — the same distribution the DES
+    cost models use for compute skew).  With ``bucketing`` each
+    microbatch's encoder embeddings are zero-padded up to the smallest
+    config bucket that fits (bounding jit retraces by the bucket count);
+    without it they stay at their exact length (one retrace per distinct
+    length — the reference the bitwise parity tests compare against).
+
+    Returns ``tokens``/``labels`` ([M*mb_rows, text_seq]), ``enc_embeds``
+    (list of M ``[mb_rows, padded_len, d_enc]`` float32 arrays) and
+    ``enc_lens`` ([M] valid token counts).
+    """
+    rng = _rng(seed, step)
+    batch = num_microbatches * mb_rows
+    toks = _token_stream(rng, mm_cfg.vocab_size, batch, mm_cfg.text_seq)
+    lens = sample_token_lengths(
+        num_microbatches, mm_cfg.mean_enc_tokens, mm_cfg.enc_sigma,
+        seed=seed, step=step, lo=mm_cfg.fusion_slots,
+        hi=max(mm_cfg.buckets))
+    enc_embeds = []
+    for j in range(num_microbatches):
+        n = int(lens[j])
+        pad = bucket_for(n, mm_cfg.buckets) if bucketing else n
+        x = np.zeros((mb_rows, pad, mm_cfg.d_enc), np.float32)
+        x[:, :n] = (rng.standard_normal((mb_rows, n, mm_cfg.d_enc))
+                    * 0.02).astype(np.float32)
+        enc_embeds.append(x)
+    return {
+        "tokens": toks[:, :mm_cfg.text_seq].astype(np.int32),
+        "labels": toks[:, 1:mm_cfg.text_seq + 1].astype(np.int32),
+        "enc_embeds": enc_embeds,
+        "enc_lens": lens.astype(np.int32),
+    }
 
 
 class PrefetchIterator:

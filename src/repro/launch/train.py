@@ -87,6 +87,173 @@ def build_trainer(arch: str, *, data: int, stages: int, layers: int | None,
 
 
 # ---------------------------------------------------------------------------
+# multimodal DAG workload (--workload multimodal)
+# ---------------------------------------------------------------------------
+def _multimodal_stage_split(stages: int) -> tuple[int, int]:
+    """Split a total stage budget into (encoder, LM) branch depths.
+
+    Total stages = encoder branch + 1 text frontend + LM chain; the LM
+    chain (fusion + decoder) gets at least as many stages as the encoder.
+    """
+    if stages < 3:
+        raise SystemExit(
+            "--workload multimodal needs --stages >= 3 "
+            "(encoder branch + text frontend + fusion/LM chain)")
+    enc = max(1, (stages - 1) // 2)
+    return enc, stages - 1 - enc
+
+
+def train_multimodal(args) -> list[float]:
+    """Train the branch+fusion multimodal DAG pipeline on the actor runtime.
+
+    ``--substrate thread`` (default) drives the real jitted encoder /
+    fusion / LM stage callables with thread-per-stage actors, including
+    variable-length vision/audio microbatches via shape bucketing and
+    (optionally) BFW split backward.  ``--substrate sim`` runs the same
+    DAG task graph through the virtual-clock actor substrate on the DES
+    cost model of the same topology (per-microbatch skew from the shared
+    modality length sampler) — useful for schedule experiments without a
+    device.  Returns the loss history (thread) or makespan history (sim).
+    """
+    from repro.multimodal import (
+        MultimodalStageFns, MultimodalStageProgram, multimodal_config,
+        multimodal_dag_costs, multimodal_model)
+    from repro.multimodal.model import MULTIMODAL_ARCHS
+    from repro.multimodal.stagefn import MultimodalStageOptions
+    from repro.optim.adamw import AdamWConfig, make_host_update
+    from repro.runtime.rrfp import ActorConfig, ActorDriver, parse_chaos
+
+    if args.arch is None:
+        args.arch = "qwen2-vl-2b"
+    if args.arch not in MULTIMODAL_ARCHS:
+        raise SystemExit(
+            f"--workload multimodal needs a multimodal arch, not "
+            f"{args.arch!r}; registered: {sorted(MULTIMODAL_ARCHS)}")
+    if args.replay_trace:
+        raise SystemExit("--replay-trace is not supported for the "
+                         "multimodal workload yet; record works")
+    enc_stages, lm_stages = _multimodal_stage_split(args.stages)
+    model = multimodal_model(
+        args.arch, enc_stages=enc_stages, lm_stages=lm_stages,
+        text_seq=args.seq, reduced=not args.full_size,
+        num_layers=args.layers)
+    cfg = model.cfg
+    split = args.split_backward or args.schedule == "zb"
+    hint = HintKind(args.hint)
+    chaos = parse_chaos(args.chaos) if args.chaos else None
+    spec = cfg.spec(args.microbatches, split_backward=split)
+    if args.schedule == "rrfp":
+        mode, fixed = "hint", "1f1b"
+        if split != (hint == HintKind.BFW):
+            raise SystemExit(
+                "--hint bfw and --split-backward go together (the BFW hint "
+                "needs W tasks, which only exist under split backward)")
+    elif args.schedule in ("1f1b", "gpipe", "zb"):
+        mode, fixed = "precommitted", args.schedule
+        if (args.schedule == "zb") != split:
+            raise SystemExit("--schedule zb is the split-backward baseline; "
+                             "1f1b/gpipe are fused-only")
+    else:
+        raise SystemExit(
+            f"--workload multimodal supports schedules rrfp/1f1b/gpipe/zb, "
+            f"not {args.schedule!r}")
+    acfg = ActorConfig(mode=mode, hint=hint, fixed_order=fixed,
+                       w_defer_cap=args.w_defer_cap,
+                       deadlock_timeout=args.deadlock_timeout,
+                       chaos=chaos, seed=args.seed)
+    print(f"arch={args.arch} workload=multimodal modality={cfg.modality}  "
+          f"substrate={args.substrate}  mode={mode}  hint={hint.value}  "
+          f"split_backward={split}\n"
+          f"  DAG: encoder x{enc_stages} | text | fusion + LM x"
+          f"{lm_stages - 1}  edges={cfg.stage_graph().edges}  "
+          f"buckets={cfg.buckets}")
+
+    if args.substrate == "sim":
+        # cost model from the FULL-SIZE arch (simulated timing should
+        # reflect the real widths even when the jit path runs reduced)
+        cost_cfg = multimodal_config(
+            args.arch, enc_stages=enc_stages, lm_stages=lm_stages,
+            text_seq=max(args.seq, 512), mean_enc_tokens=2048,
+            buckets=(1024, 2048, 4096), reduced=False)
+        costs = multimodal_dag_costs(cost_cfg, mb_rows=args.mb_rows,
+                                     seed=args.seed)
+        history = []
+        for step in range(args.steps):
+            record_this = bool(args.record_trace) and step == 0
+            cfg_i = dataclasses.replace(acfg, seed=args.seed + 1000 * step,
+                                        record_trace=record_this)
+            driver = ActorDriver(spec, costs, cfg_i)
+            res = driver.run()
+            if record_this:
+                driver.trace.meta["step"] = step
+                driver.trace.save(args.record_trace)
+                print(f"recorded step-0 trace "
+                      f"({len(driver.trace.events)} events) "
+                      f"-> {args.record_trace}")
+            bd = res.breakdown()
+            history.append(res.makespan)
+            print(f"step {step:4d}  makespan {res.makespan*1e3:8.2f} ms  "
+                  f"compute {bd['compute']*1e3:7.2f} ms  "
+                  f"blocking {bd['blocking']*1e3:7.2f} ms")
+        return history
+
+    # ---- thread substrate: real jitted DAG training -------------------
+    from repro.data.synthetic import multimodal_batch
+
+    params = model.init_stage_params(jax.random.key(args.seed))
+    tokens = args.microbatches * args.mb_rows * args.seq
+    fns = MultimodalStageFns(model, MultimodalStageOptions(
+        mb_rows=args.mb_rows, loss_scale=1.0 / tokens))
+    opt_cfg = AdamWConfig(lr=args.lr, warmup_steps=min(20, args.steps),
+                          total_steps=max(args.steps, 1))
+    mstate = jax.tree.map(lambda x: jnp.zeros(x.shape, jnp.float32), params)
+    vstate = jax.tree.map(lambda x: jnp.zeros(x.shape, jnp.float32), params)
+    apply_update = make_host_update(opt_cfg)
+
+    losses: list[float] = []
+    for step in range(args.steps):
+        batch = multimodal_batch(cfg, args.microbatches, args.mb_rows,
+                                 seed=args.seed, step=step)
+        programs = [
+            MultimodalStageProgram(fns, s, params[s], batch,
+                                   split_backward=split)
+            for s in range(cfg.num_stages)
+        ]
+        t0 = time.time()
+        record_this = bool(args.record_trace) and step == 0
+        driver = ActorDriver(
+            spec, None,
+            dataclasses.replace(acfg, record_trace=True) if record_this
+            else acfg)
+        result = driver.run_threaded(list(programs))
+        grads = [p.d_params for p in programs]
+        params, mstate, vstate, lr = apply_update(
+            params, grads, mstate, vstate, jnp.asarray(step, jnp.int32))
+        loss = float(sum(p.loss_acc for p in programs)) / tokens
+        losses.append(loss)
+        if record_this:
+            trace = driver.trace
+            trace.meta["step"] = step
+            trace.meta["final_loss"] = loss
+            trace.save(args.record_trace)
+            print(f"recorded step-0 trace ({len(trace.events)} events) "
+                  f"-> {args.record_trace}")
+        bd = result.breakdown()
+        dt = time.time() - t0
+        print(f"step {step:4d}  loss {loss:8.4f}  lr {float(lr):.2e}  "
+              f"{dt*1e3:7.1f} ms  makespan {result.makespan*1e3:7.1f} ms  "
+              f"blocking {bd['blocking']*1e3:6.1f} ms")
+    caches = fns.compile_cache_sizes()
+    enc_caches = {k: v for k, v in caches.items()
+                  if cfg.role_of(k[1]) == "encoder"}
+    if enc_caches:
+        print(f"jit retraces on encoder stages: "
+              f"max {max(enc_caches.values())} per op "
+              f"(bucket count {len(cfg.buckets)})")
+    return losses
+
+
+# ---------------------------------------------------------------------------
 # actor-runtime backend (opt-in via --runtime actor)
 # ---------------------------------------------------------------------------
 def train_actor(args) -> list[float]:
@@ -95,7 +262,7 @@ def train_actor(args) -> list[float]:
     Single-process: stage s's parameters live with stage s's actor; AdamW
     runs host-side over the accumulated per-stage grads.  Returns the loss
     history (for tests)."""
-    from repro.optim.adamw import _adamw_update, lr_at
+    from repro.optim.adamw import make_host_update
     from repro.pipeline.stagefn import (
         ActorStageProgram, StageFnOptions, StageFns)
     from repro.runtime.rrfp import ActorConfig, ActorDriver, Trace, parse_chaos
@@ -161,20 +328,7 @@ def train_actor(args) -> list[float]:
     vstate = jax.tree.map(
         lambda x: jnp.zeros(x.shape, jnp.float32), params)
 
-    @jax.jit
-    def apply_update(params, grads, m, v, step):
-        lr = lr_at(opt_cfg, step)
-
-        def upd(p, g, m_, v_):
-            p32, m2, v2 = _adamw_update(
-                opt_cfg, p.astype(jnp.float32), g, m_, v_, step, lr)
-            return p32.astype(p.dtype), m2, v2
-
-        out = jax.tree.map(upd, params, grads, m, v)
-        new_p = jax.tree.map(lambda o: o[0], out, is_leaf=lambda o: isinstance(o, tuple))
-        new_m = jax.tree.map(lambda o: o[1], out, is_leaf=lambda o: isinstance(o, tuple))
-        new_v = jax.tree.map(lambda o: o[2], out, is_leaf=lambda o: isinstance(o, tuple))
-        return new_p, new_m, new_v, lr
+    apply_update = make_host_update(opt_cfg)
 
     # The monitor re-synthesizes precommitted tables through the DES engine,
     # whose baseline orders model a fused backward — feed it the fused twin
@@ -238,7 +392,9 @@ def train_actor(args) -> list[float]:
 
 def main() -> None:
     ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", default="deepseek-7b")
+    ap.add_argument("--arch", default=None,
+                    help="architecture id (default: deepseek-7b, or "
+                         "qwen2-vl-2b for --workload multimodal)")
     ap.add_argument("--devices", type=int, default=8)
     ap.add_argument("--stages", type=int, default=4)
     ap.add_argument("--layers", type=int, default=8)
@@ -251,6 +407,18 @@ def main() -> None:
     ap.add_argument("--runtime", default="table", choices=("table", "actor"),
                     help="table: compiled schedule-table executor (default); "
                          "actor: thread-per-stage readiness-driven runtime")
+    ap.add_argument("--workload", default="language",
+                    choices=("language", "multimodal"),
+                    help="language: linear-chain LM pipeline (default); "
+                         "multimodal: branch+fusion DAG pipeline (encoder "
+                         "branch || text frontend -> fusion -> LM chain) on "
+                         "the actor runtime — archs qwen2-vl-2b / "
+                         "seamless-m4t-large-v2")
+    ap.add_argument("--substrate", default="thread",
+                    choices=("thread", "sim"),
+                    help="multimodal workload: thread = real jitted stage "
+                         "callables (default); sim = virtual-clock actor "
+                         "substrate on the DAG cost model")
     ap.add_argument("--hint", default="bf",
                     choices=[h.value for h in HintKind],
                     help="actor runtime, --schedule rrfp: hint order for "
@@ -285,6 +453,12 @@ def main() -> None:
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
+    if args.workload == "multimodal":
+        args.runtime = "actor"  # the DAG only runs on the actor runtime
+        train_multimodal(args)
+        return
+    if args.arch is None:
+        args.arch = "deepseek-7b"
     if args.runtime == "actor":
         train_actor(args)
         return

@@ -55,6 +55,35 @@ def _adamw_update(cfg: AdamWConfig, p, g, m, v, step, lr, scale=1.0):
 
 
 # ---------------------------------------------------------------------------
+def make_host_update(opt_cfg: AdamWConfig):
+    """Jitted single-pytree AdamW step for the host actor runtimes.
+
+    ``apply_update(params, grads, m, v, step) -> (params, m, v, lr)`` —
+    unsharded, any params/grads pytree (heterogeneous per-stage trees
+    included).  Master arithmetic in float32; params cast back to their
+    own dtype.
+    """
+
+    @jax.jit
+    def apply_update(params, grads, m, v, step):
+        lr = lr_at(opt_cfg, step)
+
+        def upd(p, g, m_, v_):
+            p32, m2, v2 = _adamw_update(
+                opt_cfg, p.astype(jnp.float32), g.astype(jnp.float32),
+                m_, v_, step, lr)
+            return p32.astype(p.dtype), m2, v2
+
+        out = jax.tree.map(upd, params, grads, m, v)
+        tup = lambda o: isinstance(o, tuple)  # noqa: E731
+        return (jax.tree.map(lambda o: o[0], out, is_leaf=tup),
+                jax.tree.map(lambda o: o[1], out, is_leaf=tup),
+                jax.tree.map(lambda o: o[2], out, is_leaf=tup), lr)
+
+    return apply_update
+
+
+# ---------------------------------------------------------------------------
 def make_optimizer(model, mesh, partition: ParamPartition, opt_cfg: AdamWConfig,
                    dp_axes: tuple = ("data",)):
     """Returns (init_fn, update_fn) for the per-leaf ZeRO-1 optimizer."""

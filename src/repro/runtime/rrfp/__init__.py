@@ -24,9 +24,11 @@ recorded traces and how to record/replay a run.
 from repro.runtime.rrfp.actor import StageActor, TaskTrace
 from repro.runtime.rrfp.chaos import (
     CHAOS_LEVELS,
+    MODALITY_PROFILE_NAMES,
     ChaosConfig,
     ChaosEngine,
     ChaosThreadTransport,
+    modality_profile,
     parse_chaos,
 )
 from repro.runtime.rrfp.driver import (
@@ -36,7 +38,12 @@ from repro.runtime.rrfp.driver import (
     run_actor_iteration,
 )
 from repro.runtime.rrfp.mailbox import Mailbox
-from repro.runtime.rrfp.messages import Envelope, envelopes_for
+from repro.runtime.rrfp.messages import (
+    EdgePayloads,
+    Envelope,
+    envelopes_for,
+    payload_for_edge,
+)
 from repro.runtime.rrfp.tp_group import Admission, TPGroup
 from repro.runtime.rrfp.trace import (
     ReplayOracle,
@@ -55,8 +62,12 @@ __all__ = [
     "ChaosConfig",
     "ChaosEngine",
     "ChaosThreadTransport",
+    "EdgePayloads",
     "Envelope",
+    "MODALITY_PROFILE_NAMES",
     "Mailbox",
+    "modality_profile",
+    "payload_for_edge",
     "ReplayOracle",
     "SimTransport",
     "StageActor",

@@ -31,7 +31,11 @@ from repro.core.taskgraph import Kind, PipelineSpec, Task
 
 from repro.runtime.rrfp import trace as _tr
 from repro.runtime.rrfp.mailbox import Mailbox
-from repro.runtime.rrfp.messages import envelopes_for
+from repro.runtime.rrfp.messages import (
+    EdgePayloads,
+    envelopes_for,
+    payload_for_edge,
+)
 
 
 @dataclasses.dataclass
@@ -85,8 +89,10 @@ class StageActor:
 
     # ---- readiness bookkeeping (call under the mailbox lock) ---------------
     def _is_ready(self, t: Task) -> bool:
-        mp = self.spec.message_predecessor(t)
-        if mp is not None and t not in self.arrived:
+        # the mailbox buffers a task only when its full message set (all TP
+        # ranks x all fan-in edges) has been admitted, so task-level arrival
+        # tracking stays correct on DAG specs
+        if self.spec.fan_in(t) > 0 and t not in self.arrived:
             return False
         lp = self.spec.local_predecessor(t)
         if lp is not None and lp not in self.done:
@@ -174,9 +180,9 @@ class StageActor:
         return payload
 
     def complete(self, task: Task, now: float = 0.0,
-                 dur: float | None = None) -> Task | None:
-        """Mark done, enable local successors; return the remote successor
-        whose message must now be sent (or None)."""
+                 dur: float | None = None) -> tuple[Task, ...]:
+        """Mark done, enable local successors; return the remote successors
+        whose messages must now be sent (empty for stage-local results)."""
         self.done.add(task)
         if task.kind == Kind.F:
             self.n_f += 1
@@ -194,21 +200,21 @@ class StageActor:
             if self.spec.split_backward:
                 info["w_backlog"] = self.w_backlog()
             self.recorder.record(_tr.COMPLETE, self.idx, task, t=now, **info)
-        # W tasks are stage-local by construction: message_successor(W) is
-        # None, so no envelope is emitted and no TP admission gate applies.
-        return self.spec.message_successor(task)
+        # W tasks are stage-local by construction: message_successors(W) is
+        # empty, so no envelope is emitted and no TP admission gate applies.
+        # DAG fan-out tasks feed one successor per outgoing edge.
+        return self.spec.message_successors(task)
 
     def finished(self) -> bool:
         return len(self.done) == self._total
 
     def waiting_on(self) -> list[Task]:
-        """Diagnostics: not-yet-done tasks whose message has not arrived."""
+        """Diagnostics: not-yet-done tasks whose message set is incomplete."""
         out = []
         for t in self.spec.tasks():
             if t.stage != self.idx or t in self.done:
                 continue
-            mp = self.spec.message_predecessor(t)
-            if mp is not None and t not in self.arrived:
+            if self.spec.fan_in(t) > 0 and t not in self.arrived:
                 out.append(t)
         return sorted(out)
 
@@ -262,12 +268,21 @@ class StageActor:
             end = clock()
             self.stats.compute += end - start
             with self.mailbox.cond:
-                succ = self.complete(task, now=end, dur=end - start)
+                succs = self.complete(task, now=end, dur=end - start)
                 self.mailbox.touch()
             self.traces.append(TaskTrace(task, start, end))
             idle_since = end
-            if succ is not None:
+            if isinstance(out_payload, EdgePayloads):
+                # a missing edge entry would silently deliver payload=None
+                # (downstream substitutes a zero gradient) — fail fast
+                missing = [t.stage for t in succs
+                           if t.stage not in out_payload]
+                if missing:
+                    raise ValueError(
+                        f"stage {self.idx}: {task!r} returned EdgePayloads "
+                        f"without entries for successor stage(s) {missing}")
+            for succ in succs:
                 for env in envelopes_for(
                         succ, self.idx, tp_degree, send_time=end,
-                        payload=out_payload):
+                        payload=payload_for_edge(out_payload, succ.stage)):
                     transport.send(env, now=end)

@@ -96,6 +96,63 @@ CHAOS_LEVELS = {
 }
 
 
+#: Modality-aware fault profiles for heterogeneous (DAG) pipelines.  Each
+#: profile targets one *branch* of a branch+fusion topology: which stages
+#: straggle and which edges get scaled latency depend on the stage roles,
+#: so the profile is a function of (encoder stages, decoder stages, fan-in
+#: edges) rather than a fixed config.  Compose with a base intensity level:
+#: ``modality_profile("slow_vision", ..., level="C2")``.
+MODALITY_PROFILE_NAMES = ("slow_vision", "slow_decoder", "flaky_fusion_link")
+
+
+def modality_profile(
+    name: str,
+    *,
+    encoder_stages: tuple[int, ...] | list[int],
+    decoder_stages: tuple[int, ...] | list[int],
+    fanin_edges: tuple[tuple[int, int], ...] | list[tuple[int, int]] = (),
+    level: str | ChaosConfig = "C1",
+    seed: int | None = None,
+) -> ChaosConfig:
+    """Per-branch fault profile on top of a chaos intensity level.
+
+    * ``slow_vision``      — the encoder branch straggles (3x on its slowest
+      stage, 2x elsewhere in the branch): the regime where fixed orders
+      tuned for balanced stages serialize on the cheap branch.
+    * ``slow_decoder``     — the LM/decoder chain straggles instead: the
+      encoder branch races ahead and fan-in buffering absorbs the skew.
+    * ``flaky_fusion_link``— the fan-in edges into the fusion stage carry
+      8x latency (and inherit the level's reorder/duplication): stresses
+      the multi-predecessor admission gate under partial arrival.
+    """
+    base = CHAOS_LEVELS[level] if isinstance(level, str) else level
+    if seed is not None:
+        base = dataclasses.replace(base, seed=seed)
+    enc = tuple(int(s) for s in encoder_stages)
+    dec = tuple(int(s) for s in decoder_stages)
+    if name == "slow_vision":
+        strag = tuple((s, 3.0 if i == len(enc) - 1 else 2.0)
+                      for i, s in enumerate(enc))
+        return dataclasses.replace(base, straggler=strag)
+    if name == "slow_decoder":
+        strag = tuple((s, 2.5 if i == 0 else 2.0)
+                      for i, s in enumerate(dec))
+        return dataclasses.replace(base, straggler=strag)
+    if name == "flaky_fusion_link":
+        if not fanin_edges:
+            raise ValueError(
+                "flaky_fusion_link targets the fan-in edges; pass "
+                "fanin_edges=((enc_last, fusion), (text, fusion), ...)")
+        scale = tuple(((int(a), int(b)), 8.0) for a, b in fanin_edges)
+        return dataclasses.replace(
+            base,
+            latency_base=max(base.latency_base, 5e-4),
+            edge_scale=scale)
+    raise ValueError(
+        f"unknown modality profile {name!r}; "
+        f"available: {MODALITY_PROFILE_NAMES}")
+
+
 def parse_chaos(spec: str) -> ChaosConfig:
     """CLI syntax: a level name and/or comma-separated key=value overrides.
 
@@ -146,22 +203,28 @@ class ChaosEngine:
         self._straggler = dict(cfg.straggler)
 
     def _rng(self, purpose: str, task: Task, rank: int = 0,
-             copy: int = 0) -> np.random.Generator:
+             copy: int = 0, src: int = -1) -> np.random.Generator:
         return np.random.default_rng(
             [self.cfg.seed & 0x7FFFFFFF, zlib.crc32(purpose.encode()),
-             int(task.kind), task.stage, task.mb, task.chunk, rank, copy])
+             int(task.kind), task.stage, task.mb, task.chunk, rank, copy,
+             src & 0x7FFFFFFF])
 
     # ---- communication -----------------------------------------------------
     def comm_delay(self, env: Envelope, copy: int = 0) -> float:
-        """Extra delivery delay for one envelope copy (0 when inactive)."""
+        """Extra delivery delay for one envelope copy (0 when inactive).
+
+        Keyed per (task, rank, copy, source edge): a DAG fan-in task's
+        branch messages draw independent delays.
+        """
         cfg, delay = self.cfg, 0.0
         if cfg.latency_base > 0:
-            rng = self._rng("lat", env.task, env.rank, copy)
+            rng = self._rng("lat", env.task, env.rank, copy, env.src_stage)
             scale = self._edge.get((env.src_stage, env.dst_stage), 1.0)
             delay += cfg.latency_base * scale * float(rng.lognormal(
                 mean=-0.5 * cfg.latency_sigma**2, sigma=cfg.latency_sigma))
         if cfg.reorder_prob > 0:
-            rng = self._rng("reorder", env.task, env.rank, copy)
+            rng = self._rng("reorder", env.task, env.rank, copy,
+                            env.src_stage)
             if rng.random() < cfg.reorder_prob:
                 delay += cfg.reorder_window * float(rng.random())
         return delay
@@ -170,7 +233,7 @@ class ChaosEngine:
         """Total deliveries for this envelope (>= 1)."""
         if self.cfg.duplicate_prob <= 0:
             return 1
-        rng = self._rng("dup", env.task, env.rank)
+        rng = self._rng("dup", env.task, env.rank, src=env.src_stage)
         extra = 0
         while (extra < self.cfg.max_duplicates
                and rng.random() < self.cfg.duplicate_prob):

@@ -15,7 +15,11 @@ mode under *any* variability, which is the paper's §3 correctness claim):
 * **exactly-once** — every task in the spec is dispatched and completed
   exactly once, even when chaos duplicates every envelope;
 * **dependency order** — by logical clock, all of a task's predecessors
-  complete before the task is dispatched;
+  (including every DAG fan-in predecessor) complete before the task is
+  dispatched;
+* **fan-in admission** — a multi-predecessor task is enqueued only after a
+  delivery from *every* incoming edge on *every* TP rank: the mailbox's
+  edge gate never admits a task on a partial branch set;
 * **w_defer_cap** — the backlog of un-executed W tasks (each holding a
   stashed activation pair) never exceeds the cap (hint mode);
 * **backpressure** — the App. C F/B imbalance never exceeds
@@ -64,6 +68,33 @@ def check_dependency_order(trace: tr.Trace, spec: PipelineSpec) -> None:
             assert complete_lc[p] < dispatch_lc[t], (
                 f"{t} dispatched (lc={dispatch_lc[t]}) before predecessor "
                 f"{p} completed (lc={complete_lc[p]})")
+
+
+def check_fanin_admission(trace: tr.Trace, spec: PipelineSpec,
+                          tp_degree: int = 1) -> None:
+    """DAG fan-in: enqueue strictly after every edge's (per-rank) delivery."""
+    enqueue_lc = {
+        ev.task: ev.lc for ev in trace.select(tr.ENQUEUE)
+        if ev.info.get("src") == "message"}
+    first_deliver: dict[tuple, int] = {}
+    for ev in trace.select(tr.DELIVER):
+        key = (ev.task, int(ev.info.get("src", -1)), ev.rank)
+        first_deliver.setdefault(key, ev.lc)
+    for t in spec.tasks():
+        mps = spec.message_predecessors(t)
+        if len(mps) < 2:
+            continue
+        assert t in enqueue_lc, f"fan-in task {t} never enqueued"
+        for p in mps:
+            for rank in range(max(1, tp_degree)):
+                key = (t, p.stage, rank)
+                assert key in first_deliver, (
+                    f"{t} enqueued with no delivery from edge "
+                    f"{p.stage}->{t.stage} rank {rank}")
+                assert first_deliver[key] < enqueue_lc[t], (
+                    f"{t} enqueued (lc={enqueue_lc[t]}) before edge "
+                    f"{p.stage}->{t.stage} rank {rank} delivered "
+                    f"(lc={first_deliver[key]})")
 
 
 def check_w_cap(trace: tr.Trace, cap: int, mode: str) -> None:
@@ -139,6 +170,7 @@ def check_all(trace: tr.Trace, spec: PipelineSpec, config) -> None:
     dependency)."""
     check_exactly_once(trace, spec)
     check_dependency_order(trace, spec)
+    check_fanin_admission(trace, spec, getattr(config, "tp_degree", 1))
     check_w_cap(trace, config.w_defer_cap, config.mode)
     check_backpressure(trace, spec, config.buffer_limit, config.mode)
     check_hint_faithful(trace, spec)

@@ -128,6 +128,8 @@ class ActorDriver:
             "num_microbatches": spec.num_microbatches,
             "num_chunks": spec.num_chunks,
             "split_backward": spec.split_backward,
+            "graph": ([list(e) for e in spec.graph.edges]
+                      if spec.graph is not None else None),
             "chaos": cfg.chaos.to_json() if cfg.chaos is not None else None,
         }
 
@@ -170,7 +172,8 @@ class ActorDriver:
                     order = cfg.custom_orders[s]
                 else:
                     order = FIXED_ORDERS[cfg.fixed_order](spec, s)
-            mb = Mailbox(s, cfg.tp_degree, recorder=recorder)
+            mb = Mailbox(s, cfg.tp_degree, recorder=recorder,
+                         fan_in=spec.fan_in)
             mailboxes.append(mb)
             actors.append(StageActor(
                 s, spec, mb, mode=cfg.mode, hint=cfg.hint, order=order,
@@ -178,9 +181,11 @@ class ActorDriver:
         return mailboxes, actors
 
     def _seed_inputs(self, mailboxes: list[Mailbox]) -> None:
-        """Stage 0 / chunk 0 forward inputs are locally available at t=0."""
-        for j in range(self.spec.num_microbatches):
-            mailboxes[0].deliver_local(Task(Kind.F, 0, j, 0))
+        """Source stages' chunk-0 forward inputs are locally available at
+        t=0 (stage 0 on a chain; every branch root on a DAG)."""
+        for s in self.spec.source_stages():
+            for j in range(self.spec.num_microbatches):
+                mailboxes[s].deliver_local(Task(Kind.F, s, j, 0))
 
     # ---- simulation substrate -----------------------------------------
     def run(self) -> RunResult:
@@ -227,7 +232,8 @@ class ActorDriver:
                     transport.send(env, now=now)
                 else:
                     record_send(env, 0.0)
-                    for at in oracle.delivery_times(env.task, env.rank):
+                    for at in oracle.delivery_times(env.task, env.rank,
+                                                    env.src_stage):
                         push(at, "deliver", env)
 
         inj_states = [
@@ -285,8 +291,8 @@ class ActorDriver:
                 s = task.stage
                 end[task] = now
                 n_done += 1
-                succ = actors[s].complete(task, now=now, dur=now - start[task])
-                if succ is not None:
+                succs = actors[s].complete(task, now=now, dur=now - start[task])
+                for succ in succs:
                     send_messages(succ, s, now)
                 idle_since[s] = now
                 try_dispatch(s, now)

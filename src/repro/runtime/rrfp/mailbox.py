@@ -28,17 +28,27 @@ from repro.runtime.rrfp.tp_group import Admission, TPGroup
 
 
 class Mailbox:
-    """Arrival buffers for one stage actor."""
+    """Arrival buffers for one stage actor.
 
-    def __init__(self, stage: int, tp_degree: int = 1, recorder=None):
+    ``fan_in`` (usually ``PipelineSpec.fan_in``) tells the mailbox how many
+    distinct source-stage messages a task needs before it is buffered.  On a
+    chain that is always 1; on a DAG a fan-in stage's task is buffered only
+    once *every* incoming edge has passed the TP admission gate.
+    """
+
+    def __init__(self, stage: int, tp_degree: int = 1, recorder=None,
+                 fan_in=None):
         self.stage = stage
         self.recorder = recorder
+        self.fan_in = fan_in or (lambda task: 1)
         self.group = TPGroup(stage, tp_degree, recorder=recorder)
         self.cond = threading.Condition()
         #: admitted-but-unconsumed arrivals, FIFO per kind
         self.buffers: dict[Kind, list[Task]] = {k: [] for k in Kind}
-        #: payload of the last admitted envelope per task (thread mode)
-        self.payloads: dict[Task, object] = {}
+        #: admitted payloads per task, keyed by source stage (thread mode)
+        self.payloads: dict[Task, dict[int, object]] = {}
+        #: source stages whose edge for a task has been TP-admitted
+        self._edges: dict[Task, set[int]] = {}
         self.stopped = False
         #: monotonic wall time of the last admission/consumption (thread-mode
         #: starvation detection)
@@ -47,18 +57,35 @@ class Mailbox:
 
     # ---- producer side ----------------------------------------------------
     def deliver(self, env: Envelope, now: float = 0.0) -> Admission | None:
-        """Offer one envelope; buffer the task if its TP rank set completes."""
+        """Offer one envelope; buffer the task once its full message set
+        (all TP ranks × all fan-in edges) is admitted.  Returns the *edge*
+        admission (or None), so callers poke the actor only on progress."""
         with self.cond:
             if self.recorder is not None:
                 self.recorder.record(_tr.DELIVER, self.stage, env.task,
-                                     rank=env.rank, t=now, seq=env.seq)
+                                     rank=env.rank, t=now, seq=env.seq,
+                                     src=env.src_stage)
             adm = self.group.offer(env, now)
             # Late duplicates of an already-admitted message must not re-stash
             # a payload the consumer has already popped (or never will pop).
-            fresh = adm is not None or not self.group.was_admitted(env.task)
+            fresh = adm is not None or not self.group.was_admitted(
+                env.task, env.src_stage)
             if env.payload is not None and fresh:
-                self.payloads[env.task] = env.payload
+                self.payloads.setdefault(env.task, {})[env.src_stage] = \
+                    env.payload
             if adm is not None:
+                srcs = self._edges.setdefault(env.task, set())
+                srcs.add(env.src_stage)
+                need = self.fan_in(env.task)
+                if len(srcs) < need:
+                    # fan-in edge admitted, task still waiting on a branch
+                    self.last_progress = _time.monotonic()
+                    if self.recorder is not None:
+                        self.recorder.record(
+                            _tr.FANIN_HOLD, self.stage, env.task, t=now,
+                            src=env.src_stage, missing=need - len(srcs))
+                    return adm
+                del self._edges[env.task]
                 buf = self.buffers[adm.task.kind]
                 buf.append(adm.task)
                 self.high_water[adm.task.kind] = max(
@@ -105,12 +132,22 @@ class Mailbox:
         return out
 
     def consume(self, task: Task, now: float = 0.0) -> object:
-        """Remove a dispatched task from its buffer; return its payload."""
+        """Remove a dispatched task from its buffer; return its payload.
+
+        Single-predecessor tasks get the raw payload (chain behavior);
+        fan-in tasks get a ``{src_stage: payload}`` dict — one entry per
+        incoming edge — which the stage program routes to its inputs.
+        """
         self.buffers[task.kind].remove(task)
         self.last_progress = _time.monotonic()
         if self.recorder is not None:
             self.recorder.record(_tr.DEQUEUE, self.stage, task, t=now)
-        return self.payloads.pop(task, None)
+        by_src = self.payloads.pop(task, None)
+        if by_src is None:
+            return None
+        if self.fan_in(task) <= 1:
+            return next(iter(by_src.values()))
+        return by_src
 
     def wait_for_work(self, timeout: float | None = None) -> bool:
         """Block until new work arrives or ``stop``; False on timeout."""

@@ -40,6 +40,25 @@ class Envelope:
     seq: int = dataclasses.field(default_factory=lambda: next(_seq))
 
 
+class EdgePayloads(dict):
+    """Per-destination-stage payloads for a fan-out completion.
+
+    A ``work_fn`` that feeds multiple successors (a DAG fan-out: e.g. the
+    fusion stage's backward producing one input gradient per incoming
+    branch) returns ``EdgePayloads({dst_stage: payload, ...})`` and each
+    outgoing envelope carries only its edge's entry.  Any other return type
+    (including a plain dict — batches are dicts) is broadcast unchanged to
+    every successor.
+    """
+
+
+def payload_for_edge(out_payload, dst_stage: int):
+    """Resolve one successor's payload from a work_fn return value."""
+    if isinstance(out_payload, EdgePayloads):
+        return out_payload.get(dst_stage)
+    return out_payload
+
+
 def envelopes_for(
     task: Task,
     src_stage: int,

@@ -40,21 +40,24 @@ class TPGroup:
         self.stage = stage
         self.tp_degree = max(1, tp_degree)
         self.recorder = recorder
-        self._held: dict[Task, dict[int, float]] = {}
-        self._admitted_tasks: set[Task] = set()
+        #: per-edge rank holds: (task, src_stage) -> {rank: arrival time}.
+        #: DAG fan-in stages receive one message per incoming edge for the
+        #: same task; each edge's rank set completes independently.
+        self._held: dict[tuple[Task, int], dict[int, float]] = {}
+        self._admitted: set[tuple[Task, int]] = set()
         self.deferrals = 0
         self.admitted = 0
         self.duplicates = 0
 
-    def was_admitted(self, task: Task) -> bool:
-        return task in self._admitted_tasks
+    def was_admitted(self, task: Task, src_stage: int) -> bool:
+        return (task, src_stage) in self._admitted
 
     def offer(self, env: Envelope, now: float) -> Admission | None:
         """Record one rank's copy; return an Admission when the set completes.
 
         Duplicate deliveries are idempotent at two levels: a repeated rank
         copy is ignored (first arrival wins, matching a receive-side buffer
-        that holds the message), and a task whose rank set already completed
+        that holds the message), and an edge whose rank set already completed
         is never re-admitted — a full set of chaos-duplicated envelopes must
         not re-enqueue an already-buffered task.
         """
@@ -64,11 +67,12 @@ class TPGroup:
                 f"{self.stage}")
         if not 0 <= env.rank < self.tp_degree:
             raise ValueError(f"rank {env.rank} out of range for K={self.tp_degree}")
-        if env.task in self._admitted_tasks:
+        key = (env.task, env.src_stage)
+        if key in self._admitted:
             self.duplicates += 1
             self._record(_tr.TP_DUP, env, now, reason="post_admission")
             return None
-        holds = self._held.setdefault(env.task, {})
+        holds = self._held.setdefault(key, {})
         if env.rank in holds:
             self.duplicates += 1
             self._record(_tr.TP_DUP, env, now, reason="rank_held")
@@ -78,8 +82,8 @@ class TPGroup:
             self._record(_tr.TP_HOLD, env, now,
                          missing=self.tp_degree - len(holds))
             return None
-        del self._held[env.task]
-        self._admitted_tasks.add(env.task)
+        del self._held[key]
+        self._admitted.add(key)
         times = sorted(holds.values())
         spread = times[-1] - times[0]
         if spread > 0:
@@ -91,12 +95,12 @@ class TPGroup:
     def _record(self, kind: str, env: Envelope, now: float, **info) -> None:
         if self.recorder is not None:
             self.recorder.record(kind, self.stage, env.task, rank=env.rank,
-                                 t=now, **info)
+                                 t=now, src=env.src_stage, **info)
 
-    def pending(self) -> dict[Task, int]:
-        """Tasks with an incomplete rank set -> number of ranks still missing."""
+    def pending(self) -> dict[tuple[Task, int], int]:
+        """Edges with an incomplete rank set -> number of ranks still missing."""
         return {
-            t: self.tp_degree - len(h) for t, h in self._held.items()
+            k: self.tp_degree - len(h) for k, h in self._held.items()
         }
 
     def coordination_cost(self, task: Task, base: float) -> float:

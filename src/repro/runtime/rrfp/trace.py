@@ -48,8 +48,9 @@ DEQUEUE = "dequeue"    # task consumed from its arrival buffer at dispatch
 DISPATCH = "dispatch"  # actor committed to execute a task
 COMPLETE = "complete"  # task finished executing
 STALL = "stall"        # chaos: transient stage stall injected
+FANIN_HOLD = "fanin_hold"  # DAG fan-in: edge admitted, other branch missing
 EVENT_KINDS = (SEND, DELIVER, TP_HOLD, TP_ADMIT, TP_DUP, ENQUEUE, DEQUEUE,
-               DISPATCH, COMPLETE, STALL)
+               DISPATCH, COMPLETE, STALL, FANIN_HOLD)
 
 
 def task_key(t: Task) -> list[int]:
@@ -153,7 +154,7 @@ class Trace:
         out = []
         for ev in self.events:
             tk = tuple(task_key(ev.task)) if ev.task is not None else None
-            key = (ev.kind, ev.stage, tk, ev.rank)
+            key = (ev.kind, ev.stage, tk, ev.rank, ev.info.get("src", -1))
             if include_time:
                 key += (round(ev.t, 12),)
             out.append(key)
@@ -174,16 +175,21 @@ class Trace:
             orders[ev.stage].append(ev.task)
         return orders
 
-    def delivery_schedule(self) -> dict[tuple[tuple, int], list[float]]:
-        """(task, rank) -> recorded delivery times, in logical-clock order.
+    def delivery_schedule(self) -> dict[tuple[tuple, int, int], list[float]]:
+        """(task, rank, src_stage) -> recorded delivery times, in
+        logical-clock order.
 
         Chaos-duplicated envelopes appear as extra entries; the sim replay
-        re-schedules every one of them at its recorded virtual time.
+        re-schedules every one of them at its recorded virtual time.  DAG
+        fan-in tasks receive one entry stream per source edge.  Traces
+        recorded before source stamping use src=-1 (single-edge chains only,
+        where the source is unambiguous).
         """
-        sched: dict[tuple[tuple, int], list[float]] = {}
+        sched: dict[tuple[tuple, int, int], list[float]] = {}
         for ev in self.select(DELIVER):
-            sched.setdefault(
-                (tuple(task_key(ev.task)), ev.rank), []).append(ev.t)
+            key = (tuple(task_key(ev.task)), ev.rank,
+                   int(ev.info.get("src", -1)))
+            sched.setdefault(key, []).append(ev.t)
         return sched
 
     def durations(self) -> dict[tuple, float]:
@@ -224,8 +230,13 @@ class ReplayOracle:
         self._sched = {k: list(v) for k, v in trace.delivery_schedule().items()}
         self._dur = trace.durations()
 
-    def delivery_times(self, task: Task, rank: int) -> list[float]:
-        return self._sched.pop((tuple(task_key(task)), rank), [])
+    def delivery_times(self, task: Task, rank: int,
+                       src_stage: int = -1) -> list[float]:
+        key = (tuple(task_key(task)), rank, src_stage)
+        if key not in self._sched and src_stage != -1:
+            # pre-source-stamp traces: single-edge chains recorded src=-1
+            key = (tuple(task_key(task)), rank, -1)
+        return self._sched.pop(key, [])
 
     def duration(self, task: Task) -> float:
         return self._dur[tuple(task_key(task))]

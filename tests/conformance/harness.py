@@ -20,19 +20,22 @@ from pathlib import Path
 
 import numpy as np
 
-from repro.core import CostModel, PipelineSpec
+from repro.core import CostModel, PipelineSpec, StageGraph
 from repro.core.hints import HintKind
 from repro.core.taskgraph import Kind, Task
-from repro.runtime.rrfp import ActorConfig, ChaosConfig
+from repro.runtime.rrfp import ActorConfig, ChaosConfig, EdgePayloads
+from repro.runtime.rrfp.chaos import modality_profile
 from repro.runtime.rrfp.conformance import (  # noqa: F401  (re-exported)
     check_all,
     check_backpressure,
     check_dependency_order,
     check_exactly_once,
+    check_fanin_admission,
     check_hint_faithful,
     check_w_cap,
     check_wcap_path,
 )
+from repro.runtime.rrfp.messages import payload_for_edge
 
 ARTIFACT_DIR = Path(__file__).parent / "_artifacts"
 
@@ -102,6 +105,56 @@ def make_scenario(seed: int, *, substrate: str = "sim") -> Scenario:
     return Scenario(seed=seed, spec=spec, config=config)
 
 
+def branch_fusion_graph(enc: int, lm: int) -> StageGraph:
+    """Encoder branch (enc stages) ∥ text frontend -> fusion -> LM chain."""
+    S = enc + 1 + lm
+    edges = [(s, s + 1) for s in range(enc - 1)]
+    edges += [(enc - 1, enc + 1), (enc, enc + 1)]
+    edges += [(s, s + 1) for s in range(enc + 1, S - 1)]
+    return StageGraph(S, tuple(edges))
+
+
+def make_dag_scenario(seed: int, *, profile: str | None = None,
+                      level: str = "C1",
+                      substrate: str = "sim") -> Scenario:
+    """Randomized branch+fusion DAG scenario, optionally with a
+    modality-aware fault profile layered on a chaos level."""
+    rng = np.random.default_rng([0xDA6, seed])
+    enc = int(rng.integers(1, 4))
+    lm = int(rng.integers(1, 4))
+    graph = branch_fusion_graph(enc, lm)
+    S = graph.num_stages
+    M = int(rng.integers(2, 11))
+    split = bool(rng.integers(2))
+    mode = "hint" if rng.random() < 0.75 else "precommitted"
+    hint, fixed = HintKind.BF, "1f1b"
+    if mode == "hint":
+        hint = HintKind.BFW if split else HintKind(
+            rng.choice(["bf", "fb", "b_priority", "f_priority"]))
+    else:
+        fixed = "zb" if split else str(rng.choice(["1f1b", "gpipe"]))
+    spec = PipelineSpec(S, M, split_backward=split, graph=graph)
+    if profile is None:
+        chaos = ChaosConfig(seed=seed, latency_base=5e-4,
+                            reorder_prob=0.2, reorder_window=3e-3,
+                            duplicate_prob=0.1)
+    else:
+        chaos = modality_profile(
+            profile,
+            encoder_stages=tuple(range(enc)),
+            decoder_stages=tuple(range(enc + 1, S)),
+            fanin_edges=((enc - 1, enc + 1), (enc, enc + 1)),
+            level=level, seed=seed)
+    config = ActorConfig(
+        mode=mode, hint=hint, fixed_order=fixed,
+        buffer_limit=int(rng.choice([2, 4, 32])),
+        w_defer_cap=int(rng.choice([0, 1, 2, 4])) if split else 0,
+        tp_degree=int(rng.choice([1, 1, 2])), seed=seed,
+        chaos=chaos, record_trace=True,
+        deadlock_timeout=15.0 if substrate == "thread" else 30.0)
+    return Scenario(seed=seed, spec=spec, config=config)
+
+
 def sim_costs(spec: PipelineSpec, seed: int) -> CostModel:
     cm = CostModel.uniform(spec.num_stages, f=1.0, b=2.0,
                            w=1.0 if spec.split_backward else 0.0,
@@ -132,13 +185,18 @@ def artifact_on_failure(get_trace, name: str):
 class NumpyStageProgram:
     """Float32 ``work_fn`` mimicking ``ActorStageProgram`` semantics.
 
-    Forward multiplies by a per-stage weight vector; the last stage scores
+    Forward multiplies by a per-stage weight vector; a sink stage scores
     a quadratic loss per microbatch; backward propagates exact gradients.
     All arithmetic is float32, so *accumulation order changes the bits* —
     which is exactly what the parity check needs: with deterministic
     (stash-then-sorted-sum) reduction, a chaotic execution order must
     reproduce the fixed-order reference executor's loss and weight-gradient
     bit patterns exactly.
+
+    DAG-aware: a fan-in stage's F sums its per-edge payloads in source
+    order before applying the weight; a fan-out stage's B returns
+    ``EdgePayloads`` (the same dx to every forward predecessor — the exact
+    adjoint of the fan-in sum); source stages generate their own input.
     """
 
     def __init__(self, stage: int, spec: PipelineSpec, seed: int, d: int = 16,
@@ -165,11 +223,15 @@ class NumpyStageProgram:
 
     def __call__(self, task: Task, payload):
         kc = (task.mb, task.chunk)
-        last = (self.stage == self.spec.num_stages - 1
+        last = (self.stage in self.spec.sink_stages()
                 and task.chunk == self.spec.num_chunks - 1)
         if task.kind == Kind.F:
-            if self.stage == 0 and task.chunk == 0:
+            if not self.spec.message_predecessors(task):
                 x = self._x0(task.mb)
+            elif isinstance(payload, dict):  # DAG fan-in: sum edge payloads
+                x = np.zeros(self.d, np.float32)
+                for src in sorted(payload):
+                    x = (x + np.asarray(payload[src])).astype(np.float32)
             else:
                 x = np.asarray(payload)
             y = (x * self.w).astype(np.float32)
@@ -195,6 +257,9 @@ class NumpyStageProgram:
                 self.w_high_water = max(self.w_high_water, len(self.w_pending))
             else:
                 self._grad(kc, (g_in * x).astype(np.float32))
+            succs = self.spec.message_successors(task)
+            if len(succs) > 1:  # DAG fan-out: adjoint of the fan-in sum
+                return EdgePayloads({t.stage: dx for t in succs})
             return dx
         if task.kind == Kind.W:
             x, g_in = self.w_pending.pop(kc)
@@ -219,10 +284,13 @@ class NumpyStageProgram:
         return self
 
 
-def reference_execute(spec: PipelineSpec,
-                      programs: list[NumpyStageProgram]) -> None:
+def reference_execute(spec: PipelineSpec, programs: list) -> None:
     """Fixed-order reference executor: run every task sequentially in a
-    canonical topological order (deterministic scan of the task graph)."""
+    canonical topological order (deterministic scan of the task graph).
+
+    Routes payloads exactly like the runtime: single-predecessor tasks get
+    the raw (per-edge-resolved) payload, DAG fan-in tasks a
+    ``{src_stage: payload}`` dict."""
     done: set[Task] = set()
     outputs: dict[Task, object] = {}
     tasks = list(spec.tasks())
@@ -233,8 +301,14 @@ def reference_execute(spec: PipelineSpec,
                 continue
             if any(p not in done for p in spec.predecessors(t)):
                 continue
-            mp = spec.message_predecessor(t)
-            payload = outputs.get(mp) if mp is not None else None
+            mps = spec.message_predecessors(t)
+            if not mps:
+                payload = None
+            elif len(mps) == 1:
+                payload = payload_for_edge(outputs.get(mps[0]), t.stage)
+            else:
+                payload = {p.stage: payload_for_edge(outputs[p], t.stage)
+                           for p in mps}
             outputs[t] = programs[t.stage](t, payload)
             done.add(t)
             progressed = True

@@ -1,0 +1,144 @@
+"""Conformance on DAG (branch+fusion) task graphs under modality-aware chaos.
+
+The schedule-independent invariants — exactly-once, dependency order
+including multi-predecessor fan-in, fan-in admission, w_defer_cap, hint
+faithfulness — must hold on heterogeneous multimodal topologies under
+every fault profile and chaos level, in both consumption modes.  The
+threaded tests additionally pin bitwise loss/grad parity between chaotic
+DAG executions and the fixed-order reference executor.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core import PipelineSpec
+from repro.core.hints import HintKind
+from repro.runtime.rrfp import ActorConfig, ActorDriver
+from repro.runtime.rrfp.chaos import MODALITY_PROFILE_NAMES
+
+from harness import (
+    NumpyStageProgram,
+    Scenario,
+    artifact_on_failure,
+    branch_fusion_graph,
+    check_all,
+    make_dag_scenario,
+    reference_execute,
+    sim_costs,
+)
+
+LEVELS = ("C0", "C1", "C2", "C3")
+
+
+def _run_sim(sc: Scenario):
+    driver = ActorDriver(sc.spec, sim_costs(sc.spec, sc.seed), sc.config)
+    result = driver.run()
+    return result, driver.trace
+
+
+# ---------------------------------------------------------------------------
+# sim substrate: one scenario per (profile, level) across C0-C3
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("profile", MODALITY_PROFILE_NAMES)
+@pytest.mark.parametrize("level", LEVELS)
+def test_dag_invariants_per_profile(profile, level):
+    for seed in range(3):
+        sc = make_dag_scenario(seed, profile=profile, level=level)
+        result, trace = _run_sim(sc)
+        with artifact_on_failure(trace, f"dag_{profile}_{level}_{sc.name()}"):
+            check_all(trace, sc.spec, sc.config)
+            assert len(result.end) == sc.spec.total_tasks()
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("profile", MODALITY_PROFILE_NAMES)
+@pytest.mark.parametrize("level", LEVELS)
+@pytest.mark.parametrize("seed", range(3, 11))
+def test_dag_invariants_per_profile_full(profile, level, seed):
+    sc = make_dag_scenario(seed, profile=profile, level=level)
+    result, trace = _run_sim(sc)
+    with artifact_on_failure(trace, f"dag_{profile}_{level}_{sc.name()}"):
+        check_all(trace, sc.spec, sc.config)
+        assert len(result.end) == sc.spec.total_tasks()
+
+
+def test_dag_hint_vs_precommitted_same_task_set():
+    """Both consumption modes execute the identical DAG task set."""
+    sc = make_dag_scenario(1, profile="slow_vision", level="C2")
+    cfg_hint = dataclasses.replace(
+        sc.config, mode="hint",
+        hint=HintKind.BFW if sc.spec.split_backward else HintKind.BF)
+    cfg_pre = dataclasses.replace(
+        sc.config, mode="precommitted",
+        fixed_order="zb" if sc.spec.split_backward else "1f1b")
+    r1 = ActorDriver(sc.spec, sim_costs(sc.spec, 1), cfg_hint).run()
+    r2 = ActorDriver(sc.spec, sim_costs(sc.spec, 1), cfg_pre).run()
+    assert set(r1.end) == set(r2.end) == set(sc.spec.tasks())
+
+
+# ---------------------------------------------------------------------------
+# thread substrate: chaotic DAG execution == fixed-order reference, bitwise
+# ---------------------------------------------------------------------------
+def _threaded_parity(seed: int, profile: str, level: str):
+    sc = make_dag_scenario(seed, profile=profile, level=level,
+                           substrate="thread")
+    spec = sc.spec
+    programs = [NumpyStageProgram(s, spec, seed) for s in
+                range(spec.num_stages)]
+    driver = ActorDriver(spec, None, sc.config)
+    result = driver.run_threaded(list(programs))
+    with artifact_on_failure(driver.trace,
+                             f"dagthread_{profile}_{level}_{sc.name()}"):
+        check_all(driver.trace, spec, sc.config)
+        assert len(result.end) == spec.total_tasks()
+    for p in programs:
+        p.finalize()
+    ref = [NumpyStageProgram(s, spec, seed) for s in range(spec.num_stages)]
+    reference_execute(spec, ref)
+    for p in ref:
+        p.finalize()
+    sink = spec.sink_stages()[0]
+    assert np.float32(programs[sink].loss).tobytes() == \
+        np.float32(ref[sink].loss).tobytes(), "loss bits diverged"
+    for s in range(spec.num_stages):
+        assert programs[s].d_w.tobytes() == ref[s].d_w.tobytes(), (
+            f"stage {s} weight-grad bits diverged")
+
+
+@pytest.mark.parametrize("profile", MODALITY_PROFILE_NAMES)
+def test_dag_threaded_bitwise_parity(profile):
+    _threaded_parity(seed=2, profile=profile, level="C2")
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("profile", MODALITY_PROFILE_NAMES)
+@pytest.mark.parametrize("level", LEVELS)
+@pytest.mark.parametrize("seed", range(4, 8))
+def test_dag_threaded_bitwise_parity_full(profile, level, seed):
+    _threaded_parity(seed=seed, profile=profile, level=level)
+
+
+# ---------------------------------------------------------------------------
+# replay: time-exact on the sim substrate for DAG graphs
+# ---------------------------------------------------------------------------
+def test_dag_replay_time_exact():
+    sc = make_dag_scenario(5, profile="flaky_fusion_link", level="C3")
+    result, trace = _run_sim(sc)
+    replay_cfg = ActorConfig(replay=trace, record_trace=True)
+    replayed = ActorDriver(sc.spec, sim_costs(sc.spec, sc.seed),
+                           replay_cfg).run()
+    assert replayed.makespan == result.makespan
+    assert replayed.trace.signature() == trace.signature()
+
+
+def test_branch_fusion_graph_shape():
+    g = branch_fusion_graph(2, 2)
+    assert g.sources() == (0, 2)
+    assert g.sinks() == (4,)
+    spec = PipelineSpec(5, 3, graph=g)
+    from repro.core.taskgraph import Kind, Task
+    assert spec.fan_in(Task(Kind.F, 3, 0)) == 2
+    assert len(spec.message_successors(Task(Kind.B, 3, 0))) == 2

@@ -86,7 +86,7 @@ class TestTPGroup:
         envs = envelopes_for(t, src_stage=1, tp_degree=3)
         assert g.offer(envs[0], now=1.0) is None
         assert g.offer(envs[1], now=1.5) is None
-        assert g.pending() == {t: 1}
+        assert g.pending() == {(t, 1): 1}
         adm = g.offer(envs[2], now=2.0)
         assert adm is not None and adm.task == t
         assert adm.spread == pytest.approx(1.0)

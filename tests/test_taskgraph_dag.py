@@ -1,0 +1,199 @@
+"""DAG task-graph semantics: StageGraph, fan-in/fan-out dependencies,
+generalized fixed orders, and engine/actor execution on branch+fusion
+topologies."""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    CostModel,
+    EngineConfig,
+    HintKind,
+    PipelineSpec,
+    StageGraph,
+    run_iteration,
+)
+from repro.core.hints import (
+    gpipe_order,
+    modality_balanced_order,
+    one_f_one_b_order,
+    zero_bubble_order,
+)
+from repro.core.taskgraph import Kind, Task
+from repro.runtime.rrfp import ActorConfig, ActorDriver
+
+
+def fusion_graph() -> StageGraph:
+    # enc0 -> enc1 -> fus ; txt -> fus ; fus -> lm
+    return StageGraph(5, ((0, 1), (1, 3), (2, 3), (3, 4)))
+
+
+class TestStageGraph:
+    def test_structure(self):
+        g = fusion_graph()
+        assert g.sources() == (0, 2)
+        assert g.sinks() == (4,)
+        assert g.preds(3) == (1, 2)
+        assert g.succs(3) == (4,)
+        assert [g.depth(s) for s in range(5)] == [0, 1, 0, 2, 3]
+        assert [g.dist_to_sink(s) for s in range(5)] == [3, 2, 2, 1, 0]
+
+    def test_linear_normalizes_to_chain(self):
+        spec = PipelineSpec(4, 2, graph=StageGraph.linear(4))
+        assert spec.graph is None  # normalized: same semantics, same eq
+        assert spec == PipelineSpec(4, 2)
+
+    def test_cycle_rejected(self):
+        with pytest.raises(ValueError, match="cycle"):
+            StageGraph(3, ((0, 1), (1, 2), (2, 0)))
+
+    def test_duplicate_edge_rejected(self):
+        with pytest.raises(ValueError, match="duplicate"):
+            StageGraph(2, ((0, 1), (0, 1)))
+
+    def test_chunks_require_chain(self):
+        with pytest.raises(ValueError, match="chunk"):
+            PipelineSpec(5, 2, num_chunks=2, graph=fusion_graph())
+
+
+class TestDagDependencies:
+    def setup_method(self):
+        self.spec = PipelineSpec(5, 3, graph=fusion_graph())
+
+    def test_fan_in_forward(self):
+        f3 = Task(Kind.F, 3, 0)
+        assert self.spec.message_predecessors(f3) == (
+            Task(Kind.F, 1, 0), Task(Kind.F, 2, 0))
+        assert self.spec.fan_in(f3) == 2
+        with pytest.raises(ValueError, match="fan-in"):
+            self.spec.message_predecessor(f3)
+
+    def test_fan_out_backward(self):
+        b3 = Task(Kind.B, 3, 0)
+        assert self.spec.message_successors(b3) == (
+            Task(Kind.B, 1, 0), Task(Kind.B, 2, 0))
+
+    def test_sources_have_local_input(self):
+        assert self.spec.message_predecessors(Task(Kind.F, 0, 0)) == ()
+        assert self.spec.message_predecessors(Task(Kind.F, 2, 0)) == ()
+        assert self.spec.source_stages() == (0, 2)
+
+    def test_sink_loss_is_local(self):
+        assert self.spec.message_predecessors(Task(Kind.B, 4, 0)) == ()
+        assert self.spec.sink_stages() == (4,)
+
+    def test_w_is_stage_local(self):
+        spec = PipelineSpec(5, 2, split_backward=True, graph=fusion_graph())
+        for s in range(5):
+            assert spec.message_successors(Task(Kind.W, s, 0)) == ()
+
+    def test_predecessors_include_all_edges(self):
+        preds = self.spec.predecessors(Task(Kind.B, 3, 1))
+        # gradient message from lm + local F
+        assert Task(Kind.B, 4, 1) in preds
+        assert Task(Kind.F, 3, 1) in preds
+
+    def test_chain_behavior_unchanged(self):
+        chain = PipelineSpec(4, 2)
+        assert chain.message_predecessor(Task(Kind.F, 2, 0)) == \
+            Task(Kind.F, 1, 0)
+        assert chain.dist_to_sink(1) == 2
+        assert chain.source_stages() == (0,)
+
+
+class TestDagFixedOrders:
+    def test_orders_cover_task_set(self):
+        for split, builders in [
+            (False, [gpipe_order, one_f_one_b_order]),
+            (True, [gpipe_order, zero_bubble_order]),
+        ]:
+            spec = PipelineSpec(5, 4, split_backward=split,
+                                graph=fusion_graph())
+            for builder in builders:
+                for s in range(5):
+                    order = builder(spec, s)
+                    want = [t for t in spec.tasks() if t.stage == s]
+                    assert sorted(order) == sorted(want), builder.__name__
+
+    def test_modality_balanced_covers_split_tasks(self):
+        spec = PipelineSpec(5, 4, split_backward=True, graph=fusion_graph())
+        for s in range(5):
+            order = modality_balanced_order(spec, s, [1.0, 1.0, 2.0, 3.0, 3.0])
+            want = [t for t in spec.tasks() if t.stage == s]
+            assert sorted(order) == sorted(want)
+
+    def test_warmup_uses_dag_depth(self):
+        spec = PipelineSpec(5, 8, graph=fusion_graph())
+        for s in range(5):
+            order = one_f_one_b_order(spec, s)
+            warmup = 0
+            for t in order:
+                if t.kind != Kind.F:
+                    break
+                warmup += 1
+            assert warmup == min(spec.dist_to_sink(s), 8) or warmup >= 1
+
+
+class TestDagExecution:
+    def costs(self):
+        return CostModel.uniform(5, f=1.0, b=2.0, comm_base=1e-3)
+
+    def test_engine_hint_completes(self):
+        spec = PipelineSpec(5, 6, graph=fusion_graph())
+        r = run_iteration(spec, self.costs(), EngineConfig(mode="hint"))
+        assert set(r.end) == set(spec.tasks())
+
+    @pytest.mark.parametrize("fixed", ["1f1b", "gpipe"])
+    @pytest.mark.parametrize("sync", [False, True])
+    def test_engine_precommitted_completes(self, fixed, sync):
+        spec = PipelineSpec(5, 6, graph=fusion_graph())
+        r = run_iteration(spec, self.costs(), EngineConfig(
+            mode="precommitted", fixed_order=fixed, sync_sends=sync))
+        assert set(r.end) == set(spec.tasks())
+
+    def test_engine_zb_split_completes(self):
+        spec = PipelineSpec(5, 4, split_backward=True, graph=fusion_graph())
+        cm = CostModel.uniform(5, f=1.0, b=1.0, w=1.0, comm_base=1e-3)
+        r = run_iteration(spec, cm, EngineConfig(
+            mode="precommitted", fixed_order="zb"))
+        assert set(r.end) == set(spec.tasks())
+
+    @pytest.mark.parametrize("tp", [1, 2])
+    def test_actor_sim_hint_completes(self, tp):
+        spec = PipelineSpec(5, 5, graph=fusion_graph())
+        res = ActorDriver(spec, self.costs(), ActorConfig(
+            mode="hint", tp_degree=tp)).run()
+        assert set(res.end) == set(spec.tasks())
+
+    def test_actor_bfw_cap_respected(self):
+        spec = PipelineSpec(5, 6, split_backward=True, graph=fusion_graph())
+        cm = CostModel.uniform(5, f=1.0, b=1.0, w=1.0, comm_base=1e-3)
+        cfg = ActorConfig(mode="hint", hint=HintKind.BFW, w_defer_cap=2,
+                          record_trace=True)
+        res = ActorDriver(spec, cm, cfg).run()
+        from repro.runtime.rrfp.conformance import check_all
+        check_all(res.trace, spec, cfg)
+
+    def test_seeded_makespans_reproducible(self):
+        spec = PipelineSpec(5, 4, graph=fusion_graph())
+        cfg = ActorConfig(mode="hint", seed=7)
+        m1 = ActorDriver(spec, self.costs(), cfg).run().makespan
+        m2 = ActorDriver(spec, self.costs(),
+                         dataclasses.replace(cfg)).run().makespan
+        assert m1 == m2
+
+
+class TestDagCosts:
+    def test_multimodal_dag_costs_shape(self):
+        from repro.multimodal import multimodal_config, multimodal_dag_costs
+
+        cfg = multimodal_config("qwen2-vl-2b", enc_stages=2, lm_stages=2)
+        cm = multimodal_dag_costs(cfg)
+        assert cm.num_stages == cfg.num_stages
+        # encoder stages carry the modality skew, decoder stages barely
+        enc = cfg.roles()["encoder"][0]
+        dec = cfg.roles()["decoder"][0]
+        assert np.std(cm.mb_skew[enc]) > np.std(cm.mb_skew[dec])
