@@ -44,6 +44,12 @@ def main() -> None:
                          "readiness-driven vs pre-committed fixed order on "
                          "skewed encoder/decoder branch+fusion pipelines "
                          "(emits BENCH_multimodal.json)")
+    ap.add_argument("--dispatch", action="store_true",
+                    help="actor backend: dispatch-overhead microbenchmark — "
+                         "per-decision arbitration cost, DES events/sec, and "
+                         "the fast-vs-reference trace-identity check "
+                         "(emits BENCH_dispatch.json; exits nonzero on a "
+                         "dispatch-cost regression)")
     ap.add_argument("--json-out", default=None,
                     help="actor backend: where to write the JSON report "
                          "(default BENCH_actor_runtime.json, or "
@@ -59,11 +65,16 @@ def main() -> None:
             raise SystemExit(
                 "--hint bfw and --split-backward go together: the BFW hint "
                 "needs W tasks, which only exist under split backward")
-        if sum([args.chaos, bfw, args.multimodal]) > 1:
-            raise SystemExit("--chaos, the BFW sweep and --multimodal are "
-                             "separate reports; run them as separate "
-                             "invocations")
-        if args.multimodal:
+        if sum([args.chaos, bfw, args.multimodal, args.dispatch]) > 1:
+            raise SystemExit("--chaos, the BFW sweep, --multimodal and "
+                             "--dispatch are separate reports; run them as "
+                             "separate invocations")
+        if args.dispatch:
+            from benchmarks.dispatch_overhead import dispatch_rows as rows_fn
+
+            json_out = args.json_out or "BENCH_dispatch.json"
+            label = "dispatch"
+        elif args.multimodal:
             from benchmarks.multimodal_compare import (
                 multimodal_rows as rows_fn)
 

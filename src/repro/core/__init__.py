@@ -23,7 +23,7 @@ from repro.core.engine import (
     average_makespan,
     run_iteration,
 )
-from repro.core.hints import HintArbiter, HintKind
+from repro.core.hints import HintArbiter, HintKind, ReadySet
 from repro.core.synthesis import SynthesisResult, ema_update_costs, synthesize
 from repro.core.taskgraph import Kind, PipelineSpec, StageGraph, Task
 
@@ -31,6 +31,7 @@ __all__ = [
     "CostModel", "InjectionModel", "INJECTION_LEVELS", "JitterModel",
     "multimodal_stage_flops", "DeadlockError", "Engine", "EngineConfig",
     "RunResult", "average_makespan", "run_iteration", "HintArbiter",
-    "HintKind", "SynthesisResult", "ema_update_costs", "synthesize",
+    "HintKind", "ReadySet", "SynthesisResult", "ema_update_costs",
+    "synthesize",
     "Kind", "PipelineSpec", "StageGraph", "Task",
 ]

@@ -37,6 +37,7 @@ from repro.core.hints import (
     FIXED_ORDERS,
     HintArbiter,
     HintKind,
+    ReadySet,
     backpressure_drain,
 )
 from repro.core.taskgraph import Kind, PipelineSpec, Task
@@ -85,11 +86,20 @@ class RunResult:
         }
 
     def stage_orders(self) -> list[list[Task]]:
-        """Per-stage realized execution order (for schedule synthesis)."""
+        """Per-stage realized execution order (for schedule synthesis).
+
+        Cached after the first call: the result is immutable post-run and
+        this sits on diagnostic/synthesis paths that may poll it
+        repeatedly, so the full re-sort of ``start`` must not recur.
+        """
+        cached = self.__dict__.get("_stage_orders")
+        if cached is not None:
+            return cached
         S = self.spec.num_stages
         orders: list[list[Task]] = [[] for _ in range(S)]
         for t in sorted(self.start, key=lambda t: self.start[t]):
             orders[t.stage].append(t)
+        self.__dict__["_stage_orders"] = orders
         return orders
 
 
@@ -112,6 +122,12 @@ class EngineConfig:
     #: orders are consumed as a pre-committed schedule (order-exact replay;
     #: timing is re-sampled — use the actor driver's replay for time-exact).
     replay_trace: object | None = None
+    #: verification/benchmark knob: arbitrate via the reference
+    #: sort-then-rank path instead of the incremental ReadySet index.
+    #: Decisions are identical by construction (the dispatch-overhead
+    #: benchmark and the property suite check this); only the per-decision
+    #: cost differs.
+    reference_arbitration: bool = False
 
 
 # --------------------------------------------------------------------------
@@ -126,7 +142,7 @@ class _Stage:
 
     def __init__(self, idx: int, arbiter: HintArbiter, order: list[Task] | None):
         self.idx = idx
-        self.ready: set[Task] = set()
+        self.ready = ReadySet()
         #: per-task arrived source stages (DAG fan-in needs every edge)
         self.arrived: dict[Task, set[int]] = {}
         self.done: set[Task] = set()
@@ -225,10 +241,13 @@ class Engine:
                 and st.n_f - st.n_b >= cfg.buffer_limit
             )
 
+        ref = cfg.reference_arbitration
+
         def select_backpressure(st: _Stage) -> Task | None:
             """App. C drain orders (shared impl in core.hints)."""
             task, st.drain_focus = backpressure_drain(
-                spec, st.idx, sorted(st.ready), st.done, st.drain_focus
+                spec, st.idx, sorted(st.ready) if ref else st.ready,
+                st.done, st.drain_focus
             )
             return task
 
@@ -240,7 +259,7 @@ class Engine:
                 return nxt if nxt in st.ready else None
             if backpressured(st):
                 return select_backpressure(st)
-            return st.arbiter.select(sorted(st.ready))
+            return st.arbiter.select(sorted(st.ready) if ref else st.ready)
 
         def dispatch(st: _Stage, t_now: float) -> None:
             """If the stage is idle, pick and start the next task."""

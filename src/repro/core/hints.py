@@ -11,7 +11,8 @@ from __future__ import annotations
 
 import dataclasses
 import enum
-from typing import Sequence
+import heapq
+from typing import Iterable, Iterator, Sequence
 
 from repro.core.taskgraph import Kind, PipelineSpec, Task
 
@@ -35,12 +36,89 @@ def _within_direction_key(t: Task):
     return (-t.chunk, t.mb)
 
 
-def pick(ready: Sequence[Task], kind: Kind) -> Task | None:
-    """NextByPriority(L_r, Pi) restricted to one direction."""
+def pick(ready: "Sequence[Task] | ReadySet", kind: Kind) -> Task | None:
+    """NextByPriority(L_r, Pi) restricted to one direction.
+
+    Accepts either a plain task sequence (the reference sort-then-rank
+    path) or a :class:`ReadySet` (O(1) peek at the precomputed per-kind
+    minimum).  Both resolve ties identically: the within-direction key is
+    injective over distinct tasks of one stage, and the ReadySet heap
+    falls back to the Task total order on the (cross-stage-only) ties the
+    reference resolves via the callers' sorted presentation order.
+    """
+    if isinstance(ready, ReadySet):
+        return ready.peek(kind)
     cands = [t for t in ready if t.kind == kind]
     if not cands:
         return None
     return min(cands, key=_within_direction_key)
+
+
+class ReadySet:
+    """Incremental ready-set index: lazy-deletion heap per task kind.
+
+    The sort-then-rank dispatch path cost O(n log n) per decision:
+    ``arbiter.select(sorted(ready))`` re-sorted and re-scanned the whole
+    ready set on *every* arbitration attempt.  This index keeps one binary
+    heap per kind, keyed by the precomputed Appendix A within-direction
+    priority, so the hot path becomes O(log n) insert / amortized-O(1)
+    peek — with the exact same tie-break total order (heap entries carry
+    ``(key, task)``; the key is injective over distinct tasks of one
+    stage, and `Task`'s own total order resolves anything beyond that,
+    matching ``min`` over a sorted presentation).
+
+    Removals are lazy: ``discard`` only drops the task from the live set;
+    stale heap heads are popped at the next ``peek``.  Each task is pushed
+    at most once per ``add``, and the runtime dispatches each task exactly
+    once, so heap garbage is bounded by the number of dispatches.
+
+    Set-like surface (``in``, ``len``, iteration, ``add``/``discard``)
+    keeps every cold-path consumer (trace snapshots, drains, diagnostics)
+    working unchanged.
+    """
+
+    __slots__ = ("_live", "_heaps")
+
+    def __init__(self, tasks: Iterable[Task] = ()):
+        self._live: set[Task] = set()
+        self._heaps: dict[Kind, list[tuple[tuple[int, int], Task]]] = {
+            k: [] for k in Kind}
+        for t in tasks:
+            self.add(t)
+
+    # ---- mutation ---------------------------------------------------------
+    def add(self, t: Task) -> None:
+        if t in self._live:
+            return
+        self._live.add(t)
+        heapq.heappush(self._heaps[t.kind], (_within_direction_key(t), t))
+
+    def discard(self, t: Task) -> None:
+        # Lazy: the heap entry stays until it surfaces at a peek.
+        self._live.discard(t)
+
+    # ---- queries ----------------------------------------------------------
+    def peek(self, kind: Kind) -> Task | None:
+        """The within-direction minimum ready task of ``kind`` (or None)."""
+        heap = self._heaps[kind]
+        while heap and heap[0][1] not in self._live:
+            heapq.heappop(heap)
+        return heap[0][1] if heap else None
+
+    def __contains__(self, t: Task) -> bool:
+        return t in self._live
+
+    def __len__(self) -> int:
+        return len(self._live)
+
+    def __bool__(self) -> bool:
+        return bool(self._live)
+
+    def __iter__(self) -> Iterator[Task]:
+        return iter(self._live)
+
+    def __repr__(self) -> str:  # diagnostics only
+        return f"ReadySet({sorted(self._live)!r})"
 
 
 @dataclasses.dataclass
@@ -77,8 +155,13 @@ class HintArbiter:
             order += (Kind.W,)
         return order
 
-    def select(self, ready: Sequence[Task]) -> Task | None:
-        """Return the dispatched task for the current ready set (or None)."""
+    def select(self, ready: Sequence[Task] | ReadySet) -> Task | None:
+        """Return the dispatched task for the current ready set (or None).
+
+        With a :class:`ReadySet` each direction probe is an O(1) heap peek
+        (the production hot path); with a plain sequence it is the
+        reference linear scan.  Decisions are identical either way.
+        """
         for k in self.try_order():
             t = pick(ready, k)
             if t is not None:
@@ -97,7 +180,7 @@ class HintArbiter:
 def backpressure_drain(
     spec: PipelineSpec,
     stage: int,
-    ready: Sequence[Task],
+    ready: Sequence[Task] | ReadySet,
     done: set[Task],
     drain_focus: int,
 ) -> tuple[Task | None, int]:
@@ -106,12 +189,14 @@ def backpressure_drain(
     Non-interleaved pipelines drain backward-only; interleaved pipelines
     follow the deterministic per-microbatch completion order
     F_0..F_{C-1}, B_{C-1}..B_0 focused on microbatches in index order.
-    Returns (task-or-None, updated drain focus).
+    Returns (task-or-None, updated drain focus).  A :class:`ReadySet`
+    serves the backward-only pick in O(1) and the interleaved membership
+    probes in O(1); a plain sequence takes the reference linear path.
     """
     if spec.num_chunks == 1:
-        return pick(sorted(ready), Kind.B), drain_focus
+        return pick(ready, Kind.B), drain_focus
     C = spec.num_chunks
-    ready_set = set(ready)
+    ready_set = ready if isinstance(ready, ReadySet) else set(ready)
     j = drain_focus
     while j < spec.num_microbatches:
         seq_order = [Task(Kind.F, stage, j, c) for c in range(C)] + [

@@ -26,7 +26,13 @@ import time as _time
 from typing import Any, Callable
 
 from repro.core.engine import DeadlockError, StageStats
-from repro.core.hints import HintArbiter, HintKind, backpressure_drain, pick
+from repro.core.hints import (
+    HintArbiter,
+    HintKind,
+    ReadySet,
+    backpressure_drain,
+    pick,
+)
 from repro.core.taskgraph import Kind, PipelineSpec, Task
 
 from repro.runtime.rrfp import trace as _tr
@@ -61,6 +67,8 @@ class StageActor:
         order: list[Task] | None = None,
         buffer_limit: int = 32,
         w_defer_cap: int = 0,
+        reference_arbitration: bool = False,
+        trace_full_ready: bool = False,
     ):
         if mode not in ("hint", "precommitted"):
             raise ValueError(f"unknown mode {mode!r}")
@@ -76,9 +84,20 @@ class StageActor:
         self.order_pos = 0
         self.buffer_limit = buffer_limit
         self.w_defer_cap = w_defer_cap
+        #: verification knob: arbitrate via the reference sort-then-rank
+        #: path (decision-identical; only the per-decision cost differs)
+        self.reference_arbitration = reference_arbitration
+        #: record full sorted ready snapshots per dispatch instead of the
+        #: cheap incremental diff (``radd``) encoding
+        self.trace_full_ready = trace_full_ready
         self.arrived: set[Task] = set()
-        self.ready: set[Task] = set()
+        self.ready = ReadySet()
         self.done: set[Task] = set()
+        #: ready-set additions since the last recorded dispatch (diff-mode
+        #: trace snapshots; maintained only while a recorder is attached)
+        self._ready_added: list[Task] = []
+        #: lazily built waiting_on() index (diagnostics)
+        self._awaiting: set[Task] | None = None
         self.n_f = 0
         self.n_b = 0
         self.n_w = 0
@@ -102,11 +121,21 @@ class StageActor:
     def _maybe_enqueue(self, t: Task) -> None:
         if t not in self.done and t not in self.ready and self._is_ready(t):
             self.ready.add(t)
+            if self.recorder is not None and not self.trace_full_ready:
+                self._ready_added.append(t)
 
     def sync_mailbox(self) -> None:
-        """Drain admitted arrivals from the mailbox buffers into the ready set."""
-        for t in self.mailbox.arrived_tasks():
+        """Drain arrivals admitted since the last sync into the ready set.
+
+        ``Mailbox.drain_arrivals`` hands over only the tasks buffered since
+        the previous drain, so repeated syncs stop rescanning already-seen
+        envelopes; ``self.arrived`` is the persistent memory that lets a
+        task whose local predecessor lags be re-attempted at the
+        predecessor's completion."""
+        for t in self.mailbox.drain_arrivals():
             self.arrived.add(t)
+            if self._awaiting is not None:
+                self._awaiting.discard(t)
             self._maybe_enqueue(t)
 
     # ---- arbitration -------------------------------------------------------
@@ -138,6 +167,7 @@ class StageActor:
         recorder is attached: this runs on the dispatch hot path of every
         arbitration attempt."""
         rec = self.recorder is not None
+        ref = self.reference_arbitration
         if self.mode == "precommitted":
             if self.order_pos >= len(self.order):
                 return None, None
@@ -147,17 +177,18 @@ class StageActor:
         if self.w_overcap():
             # Every completed B locally enables its W, so a ready W exists
             # whenever the backlog is nonzero; retiring it frees the stash.
-            task = pick(sorted(self.ready), Kind.W)
+            task = pick(sorted(self.ready) if ref else self.ready, Kind.W)
             if task is not None:
                 return task, ({"path": "wcap", "backlog": self.w_backlog()}
                               if rec else None)
         if self.backpressured():
             task, self.drain_focus = backpressure_drain(
-                self.spec, self.idx, sorted(self.ready), self.done,
+                self.spec, self.idx,
+                sorted(self.ready) if ref else self.ready, self.done,
                 self.drain_focus)
             return task, ({"path": "backpressure"} if rec else None)
         order = self.arbiter.try_order() if rec else None
-        task = self.arbiter.select(sorted(self.ready))
+        task = self.arbiter.select(sorted(self.ready) if ref else self.ready)
         if not rec:
             return task, None
         return task, {"path": "hint", "order": [int(k) for k in order]}
@@ -167,10 +198,19 @@ class StageActor:
         """Commit to a dispatch: consume the task's buffered message (if any)
         and return its payload."""
         if self.recorder is not None:
+            # Ready-set snapshot: the default "diff" encoding records only
+            # the tasks *added* since this stage's previous dispatch (the
+            # sole removal between dispatches is the dispatched task
+            # itself), so recording stops paying O(n log n) per decision —
+            # `Trace.ready_sets()` reconstructs the full snapshots offline.
+            # `trace_full_ready` opts back into the verbose sorted form.
+            if self.trace_full_ready:
+                snap = {"ready": [_tr.task_key(t) for t in sorted(self.ready)]}
+            else:
+                snap = {"radd": [_tr.task_key(t) for t in self._ready_added]}
+                self._ready_added = []
             self.recorder.record(
-                _tr.DISPATCH, self.idx, task, t=now,
-                ready=[_tr.task_key(t) for t in sorted(self.ready)],
-                **(info or {}))
+                _tr.DISPATCH, self.idx, task, t=now, **snap, **(info or {}))
         self.ready.discard(task)
         if self.mode == "precommitted":
             self.order_pos += 1
@@ -209,14 +249,18 @@ class StageActor:
         return len(self.done) == self._total
 
     def waiting_on(self) -> list[Task]:
-        """Diagnostics: not-yet-done tasks whose message set is incomplete."""
-        out = []
-        for t in self.spec.tasks():
-            if t.stage != self.idx or t in self.done:
-                continue
-            if self.spec.fan_in(t) > 0 and t not in self.arrived:
-                out.append(t)
-        return sorted(out)
+        """Diagnostics: not-yet-done tasks whose message set is incomplete.
+
+        The index is built once on first use (this-stage tasks that need a
+        message and have not yet arrived) and then maintained incrementally
+        by ``sync_mailbox``, so repeated diagnostic polls cost O(pending)
+        instead of re-scanning every task in the spec."""
+        if self._awaiting is None:
+            self._awaiting = {
+                t for t in self.spec.tasks()
+                if t.stage == self.idx and t not in self.arrived
+                and self.spec.fan_in(t) > 0}
+        return sorted(self._awaiting - self.done)
 
     # ---- thread-per-stage execution loop (ThreadTransport) -----------------
     def run_thread(
@@ -228,7 +272,6 @@ class StageActor:
         tp_degree: int = 1,
         deadlock_timeout: float = 30.0,
         abort=None,
-        poll: float = 0.05,
     ) -> None:
         """Execute this stage's tasks as they become ready.
 
@@ -236,6 +279,14 @@ class StageActor:
         (e.g. a jitted stage callable); ``out_payload`` rides on the outgoing
         envelope.  Raises :class:`DeadlockError` if the mailbox starves for
         ``deadlock_timeout`` seconds while work remains.
+
+        The wait is event-driven: the actor blocks on the mailbox condition
+        until ``Mailbox.deliver``/``deliver_local``/``stop`` notifies it —
+        zero busy-wait, wakeup latency bounded by the notify, not by a poll
+        period.  The only timed wake is the starvation deadline (deadlock
+        detection), so abort/stop signals must notify the condition to be
+        seen promptly (``Mailbox.stop`` does; the driver stops every
+        mailbox when a sibling stage errors).
         """
         idle_since = clock()
         while not self.finished():
@@ -251,14 +302,15 @@ class StageActor:
                     if self.mailbox.stopped or (
                             abort is not None and abort.is_set()):
                         return
-                    self.mailbox.wait_for_work(poll)
-                    if self.mailbox.starved_for() > deadlock_timeout:
+                    remaining = deadlock_timeout - self.mailbox.starved_for()
+                    if remaining <= 0:
                         if abort is not None:
                             abort.set()
                         raise DeadlockError(
                             f"stage {self.idx} starved >{deadlock_timeout}s "
                             f"with {self._total - len(self.done)} tasks left; "
                             f"waiting on messages for {self.waiting_on()[:4]}")
+                    self.mailbox.wait_for_work(remaining)
                 if task is None:  # finished() flipped
                     return
                 payload = self.begin(task, now=clock(), info=sel_info)

@@ -136,12 +136,17 @@ def check_hint_faithful(trace: tr.Trace, spec: PipelineSpec) -> None:
     kind.  Together these imply the paper-level property: whenever the
     dispatch differs from the hint's global preference over the stage's
     remaining tasks, that preferred task was unready.
+
+    Ready snapshots come from :meth:`Trace.ready_sets`, which decodes both
+    the verbose per-dispatch ``ready`` lists and the default incremental
+    ``radd`` diff encoding.
     """
+    snapshots = trace.ready_sets()
     for ev in trace.select(tr.DISPATCH):
         if ev.info.get("path") != "hint":
             continue
         order = [Kind(k) for k in ev.info["order"]]
-        ready = [tr.task_from_key(k) for k in ev.info["ready"]]
+        ready = snapshots[ev.lc]
         kind = ev.task.kind
         assert kind in order, (ev.task, order)
         for k in order[:order.index(kind)]:

@@ -57,7 +57,7 @@ from repro.runtime.rrfp import trace as _tr
 from repro.runtime.rrfp.actor import StageActor
 from repro.runtime.rrfp.chaos import ChaosConfig, ChaosEngine, ChaosThreadTransport
 from repro.runtime.rrfp.mailbox import Mailbox
-from repro.runtime.rrfp.messages import Envelope, envelopes_for
+from repro.runtime.rrfp.messages import Envelope, envelopes_for, reset_seq
 from repro.runtime.rrfp.trace import ReplayOracle, Trace, TraceRecorder
 from repro.runtime.rrfp.transport import SimTransport, ThreadTransport
 
@@ -85,6 +85,14 @@ class ActorConfig:
     record_trace: bool = False
     #: re-execute a recorded trace (time-exact on sim, order-exact threaded)
     replay: Trace | None = None
+    #: record full sorted ready-set snapshots on every dispatch instead of
+    #: the cheap incremental diff encoding (``Trace.ready_sets()`` decodes
+    #: both) — opt-in, for human-readable traces
+    trace_full_ready: bool = False
+    #: verification/benchmark knob: arbitrate via the reference
+    #: sort-then-rank path instead of the incremental ReadySet index
+    #: (decision-identical by construction; only per-decision cost differs)
+    reference_arbitration: bool = False
 
 
 def _compute_rng(seed: int, task: Task) -> np.random.Generator:
@@ -131,6 +139,7 @@ class ActorDriver:
             "graph": ([list(e) for e in spec.graph.edges]
                       if spec.graph is not None else None),
             "chaos": cfg.chaos.to_json() if cfg.chaos is not None else None,
+            "trace_ready": "full" if cfg.trace_full_ready else "diff",
         }
 
     def _effective_config(self, substrate: str) -> ActorConfig:
@@ -177,7 +186,9 @@ class ActorDriver:
             mailboxes.append(mb)
             actors.append(StageActor(
                 s, spec, mb, mode=cfg.mode, hint=cfg.hint, order=order,
-                buffer_limit=cfg.buffer_limit, w_defer_cap=cfg.w_defer_cap))
+                buffer_limit=cfg.buffer_limit, w_defer_cap=cfg.w_defer_cap,
+                reference_arbitration=cfg.reference_arbitration,
+                trace_full_ready=cfg.trace_full_ready))
         return mailboxes, actors
 
     def _seed_inputs(self, mailboxes: list[Mailbox]) -> None:
@@ -190,6 +201,7 @@ class ActorDriver:
     # ---- simulation substrate -----------------------------------------
     def run(self) -> RunResult:
         spec = self.spec
+        reset_seq()  # envelope seqs are run-local: traces stay byte-stable
         cfg = self._effective_config("sim")
         oracle = ReplayOracle(cfg.replay) if cfg.replay is not None else None
         if self.costs is None and oracle is None:
@@ -343,6 +355,7 @@ class ActorDriver:
         import time as _time
 
         spec = self.spec
+        reset_seq()  # envelope seqs are run-local: traces stay byte-stable
         cfg = self._effective_config("thread")
         recorder = (TraceRecorder(self._meta(cfg, "thread"))
                     if cfg.record_trace else None)
@@ -388,11 +401,15 @@ class ActorDriver:
                     tp_degree=cfg.tp_degree,
                     deadlock_timeout=cfg.deadlock_timeout,
                     abort=abort,
-                    poll=min(0.05, cfg.deadlock_timeout / 4),
                 )
             except BaseException as e:  # noqa: BLE001 - reraised on join
                 errors.append(e)
                 abort.set()
+                # Event-driven wakeups have no poll period to fall back on:
+                # sibling actors blocked on their mailbox condition must be
+                # notified, or they sleep until their starvation deadline.
+                for m in mailboxes:
+                    m.stop()
 
         self._seed_inputs(mailboxes)
         threads = [

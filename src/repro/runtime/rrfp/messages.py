@@ -22,6 +22,19 @@ from repro.core.taskgraph import Task
 _seq = itertools.count()
 
 
+def reset_seq() -> None:
+    """Rewind the global envelope sequence to zero (driver run start).
+
+    ``seq`` only feeds trace records, but a process-global counter made a
+    recorded trace depend on how many envelopes *earlier* runs in the same
+    process had created.  Resetting per run makes traces deterministic
+    artifacts: same seed -> byte-identical event logs, across runs and
+    processes (the dispatch benchmark's paired identity check relies on
+    this)."""
+    global _seq
+    _seq = itertools.count()
+
+
 @dataclasses.dataclass(frozen=True)
 class Envelope:
     """One task-readiness message in flight.

@@ -1,8 +1,12 @@
 """Deterministic event traces for the actor runtime (record / replay).
 
 Every observable scheduling decision in the runtime — mailbox enqueue and
-dequeue, TP-gate hold/admit/duplicate, dispatch (with the ready-set snapshot
-and the arbitration path taken), completion (with the realized duration and
+dequeue, TP-gate hold/admit/duplicate, dispatch (with the arbitration path
+taken and an *incremental* ready-set snapshot: by default only the tasks
+added since the stage's previous dispatch are serialized — ``radd`` — and
+:meth:`Trace.ready_sets` reconstructs the full per-dispatch snapshots
+offline; ``ActorConfig.trace_full_ready`` opts into verbose full
+snapshots), completion (with the realized duration and
 the W-deferral backlog), and every transport send/delivery — is recorded as a
 structured :class:`TraceEvent` stamped with a *logical clock*: a process-wide
 monotone counter assigned under one lock, giving a total order over events
@@ -191,6 +195,31 @@ class Trace:
                    int(ev.info.get("src", -1)))
             sched.setdefault(key, []).append(ev.t)
         return sched
+
+    def ready_sets(self) -> dict[int, list[Task]]:
+        """DISPATCH event lc -> the full ready-set snapshot at that dispatch.
+
+        Decodes both snapshot encodings: the verbose ``ready`` form (a full
+        sorted task list per dispatch, opt-in via
+        ``ActorConfig.trace_full_ready``) and the default incremental
+        ``radd`` form, which records only the tasks *added* to the stage's
+        ready set since its previous dispatch.  The diff reconstruction
+        relies on the runtime invariant that between two dispatches the only
+        task ever *removed* from a stage's ready set is the one the earlier
+        dispatch committed to — so replaying adds and removing each
+        dispatched task recovers every snapshot exactly.
+        """
+        out: dict[int, list[Task]] = {}
+        running: dict[int, set[Task]] = {}
+        for ev in self.select(DISPATCH):
+            if "ready" in ev.info:
+                out[ev.lc] = [task_from_key(k) for k in ev.info["ready"]]
+                continue
+            cur = running.setdefault(ev.stage, set())
+            cur.update(task_from_key(k) for k in ev.info.get("radd", ()))
+            out[ev.lc] = sorted(cur)
+            cur.discard(ev.task)
+        return out
 
     def durations(self) -> dict[tuple, float]:
         """task -> realized compute duration (chaos effects included)."""

@@ -325,6 +325,83 @@ class TestThreaded:
 
 
 # ---------------------------------------------------------------------------
+# Event-driven wakeups: no poll loop, so shutdown must notify
+# ---------------------------------------------------------------------------
+class TestShutdownWakeups:
+    """With condition-variable wakeups there is no 50 ms poll period to fall
+    back on: a blocked actor wakes only on notify or at its (long)
+    starvation deadline.  These tests pin the notify paths with join/elapsed
+    bounds far below the deadlock timeout."""
+
+    def test_stop_notifies_blocked_waiter(self):
+        mb = Mailbox(stage=0)
+        woke = threading.Event()
+
+        def waiter():
+            with mb.cond:
+                while not mb.stopped:
+                    mb.wait_for_work(30.0)
+            woke.set()
+
+        th = threading.Thread(target=waiter, daemon=True)
+        th.start()
+        time.sleep(0.05)  # let the waiter block
+        mb.stop()
+        th.join(timeout=2.0)
+        assert woke.is_set() and not th.is_alive(), (
+            "Mailbox.stop() did not wake a blocked waiter")
+
+    def test_deliver_wakes_blocked_waiter(self):
+        mb = Mailbox(stage=0)
+        got = []
+
+        def waiter():
+            with mb.cond:
+                while not mb.arrived_tasks():
+                    mb.wait_for_work(30.0)
+                got.extend(mb.drain_arrivals())
+
+        th = threading.Thread(target=waiter, daemon=True)
+        th.start()
+        time.sleep(0.05)
+        t = Task(Kind.F, 0, 0)
+        mb.deliver(Envelope(task=t, src_stage=1, dst_stage=0))
+        th.join(timeout=2.0)
+        assert not th.is_alive() and got == [t]
+
+    def test_worker_error_aborts_all_stages_promptly(self):
+        """A raising work_fn must take the whole run down well before any
+        sibling's starvation deadline (the driver stops every mailbox)."""
+        spec = PipelineSpec(4, 4)
+
+        def work(task, payload):
+            if task.stage == 2 and task.kind == Kind.B:
+                raise RuntimeError("injected stage failure")
+            return None
+
+        driver = ActorDriver(spec, None, ActorConfig(
+            mode="hint", deadlock_timeout=30.0))
+        t0 = time.monotonic()
+        with pytest.raises(RuntimeError, match="injected stage failure"):
+            driver.run_threaded(work)
+        elapsed = time.monotonic() - t0
+        assert elapsed < 10.0, (
+            f"abort took {elapsed:.1f}s — sibling actors were not woken "
+            f"(deadlock_timeout was 30s)")
+
+    def test_threaded_run_joins_promptly_after_completion(self):
+        """Completion itself must not wait out any poll/starvation period."""
+        spec = PipelineSpec(3, 4)
+        driver = ActorDriver(spec, None, ActorConfig(
+            mode="hint", deadlock_timeout=30.0))
+        t0 = time.monotonic()
+        r = driver.run_threaded(lambda task, payload: None)
+        elapsed = time.monotonic() - t0
+        assert len(r.end) == spec.total_tasks()
+        assert elapsed < 10.0, f"join took {elapsed:.1f}s"
+
+
+# ---------------------------------------------------------------------------
 # Thread transport driving real jitted stage callables
 # ---------------------------------------------------------------------------
 @pytest.mark.slow

@@ -1,0 +1,197 @@
+"""Property tests: the incremental ReadySet arbiter is decision-identical
+to the reference sort-then-rank path.
+
+The dispatch hot path was rebuilt around ``core.hints.ReadySet`` (lazy-
+deletion heap per kind, O(log n) insert / O(1) peek) replacing
+``arbiter.select(sorted(ready))`` (O(n log n) per decision).  The
+non-negotiable invariant is that *every* arbitration decision is unchanged
+— across hints, the ``w_defer_cap`` W-retirement path, and the Appendix C
+backpressure drains, on chain and fan-in DAG specs, under arbitrary
+interleavings of inserts, removals and selects.
+
+Uses ``hypothesis`` when installed, the deterministic ``tests/_hyp_stub.py``
+fallback otherwise (same properties, fixed example budget).
+"""
+import numpy as np
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ModuleNotFoundError:  # deterministic fallback (tests/_hyp_stub.py)
+    from _hyp_stub import given, settings, strategies as st
+
+from repro.core import CostModel, PipelineSpec, StageGraph
+from repro.core.hints import (
+    HintArbiter,
+    HintKind,
+    ReadySet,
+    backpressure_drain,
+    pick,
+)
+from repro.core.taskgraph import Kind, Task
+from repro.runtime.rrfp import ActorConfig, ActorDriver
+
+ALL_HINTS = [HintKind.BF, HintKind.FB, HintKind.B_PRIORITY,
+             HintKind.F_PRIORITY, HintKind.BFW]
+
+#: one chain spec and one fan-in DAG spec (diamond into a short chain) —
+#: the two topologies whose task pools the interleavings draw from
+CHAIN = PipelineSpec(3, 6, split_backward=True)
+DAG = PipelineSpec(5, 4, graph=StageGraph(5, ((0, 2), (1, 2), (2, 3),
+                                              (3, 4))))
+SPECS = [CHAIN, DAG]
+
+
+def _stage_pool(spec: PipelineSpec, stage: int) -> list[Task]:
+    return [t for t in spec.tasks() if t.stage == stage]
+
+
+def _apply_ops(seed: int, spec: PipelineSpec, stage: int, hint: HintKind,
+               n_ops: int) -> None:
+    """Drive a mirrored (reference set, ReadySet) pair through a randomized
+    insert/remove/select interleaving; every decision must match."""
+    rng = np.random.default_rng([0xD15, seed])
+    pool = _stage_pool(spec, stage)
+    ref: set[Task] = set()
+    rs = ReadySet()
+    done: set[Task] = set()
+    ref_arb = HintArbiter(hint)
+    inc_arb = HintArbiter(hint)
+    drain_focus_ref = drain_focus_inc = 0
+    for _ in range(n_ops):
+        op = int(rng.integers(4))
+        if op == 0 and len(ref) < len(pool):  # insert
+            absent = [t for t in pool if t not in ref and t not in done]
+            if absent:
+                t = absent[int(rng.integers(len(absent)))]
+                ref.add(t)
+                rs.add(t)
+        elif op == 1 and ref:  # out-of-band removal (lazy-deletion stress)
+            t = sorted(ref)[int(rng.integers(len(ref)))]
+            ref.discard(t)
+            rs.discard(t)
+        elif op == 2:  # arbited select (mutates round state on both sides)
+            t_ref = ref_arb.select(sorted(ref))
+            t_inc = inc_arb.select(rs)
+            assert t_ref == t_inc, (
+                f"hint {hint}: reference chose {t_ref}, incremental chose "
+                f"{t_inc} on ready={sorted(ref)}")
+            assert ref_arb.last_dir == inc_arb.last_dir
+            if t_ref is not None:
+                ref.discard(t_ref)
+                rs.discard(t_ref)
+                done.add(t_ref)
+        else:  # auxiliary dispatch paths: wcap pick + backpressure drain
+            assert pick(sorted(ref), Kind.W) == pick(rs, Kind.W)
+            t_ref, drain_focus_ref = backpressure_drain(
+                spec, stage, sorted(ref), done, drain_focus_ref)
+            t_inc, drain_focus_inc = backpressure_drain(
+                spec, stage, rs, done, drain_focus_inc)
+            assert (t_ref, drain_focus_ref) == (t_inc, drain_focus_inc)
+        # structural parity after every op
+        assert len(rs) == len(ref)
+        for kind in Kind:
+            assert pick(rs, kind) == pick(sorted(ref), kind)
+
+
+@settings(max_examples=60, deadline=None)
+@given(seed=st.integers(0, 10_000), hint_i=st.integers(0, len(ALL_HINTS) - 1),
+       spec_i=st.integers(0, 1), n_ops=st.integers(5, 60))
+def test_incremental_matches_reference_decisions(seed, hint_i, spec_i, n_ops):
+    spec = SPECS[spec_i]
+    stage = 2  # fan-in stage on the DAG; mid-chain stage on the chain
+    _apply_ops(seed, spec, stage, ALL_HINTS[hint_i], n_ops)
+
+
+@settings(max_examples=30, deadline=None)
+@given(seed=st.integers(0, 10_000), n_ops=st.integers(5, 40))
+def test_interleaved_backpressure_drain_matches(seed, n_ops):
+    """Interleaved (multi-chunk) drains probe ReadySet membership, not just
+    peeks — run the interleaving on a chunked chain spec."""
+    spec = PipelineSpec(3, 3, num_chunks=2)
+    _apply_ops(seed, spec, 1, HintKind.BF, n_ops)
+
+
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(0, 10_000), size=st.integers(1, 24))
+def test_readyset_peek_is_min_over_live(seed, size):
+    """After random add/discard churn, peek(kind) equals the reference
+    minimum over live tasks of that kind (lazy deletion never surfaces a
+    dead or wrong head)."""
+    rng = np.random.default_rng([0x9EEB, seed])
+    pool = _stage_pool(CHAIN, 1)
+    rs = ReadySet()
+    live: set[Task] = set()
+    for _ in range(size * 3):
+        t = pool[int(rng.integers(len(pool)))]
+        if t in live and rng.random() < 0.5:
+            live.discard(t)
+            rs.discard(t)
+        else:
+            live.add(t)
+            rs.add(t)
+        for kind in Kind:
+            assert pick(rs, kind) == pick(sorted(live), kind)
+        assert set(rs) == live and len(rs) == len(live)
+
+
+# ---------------------------------------------------------------------------
+# end to end: same seed, fast vs reference arbitration, identical traces —
+# through the full actor runtime (w_defer_cap + tight buffer_limit force the
+# wcap and backpressure dispatch paths, not just the hint path)
+# ---------------------------------------------------------------------------
+def _paired_traces(spec, cfg_kwargs):
+    cm = CostModel.uniform(spec.num_stages, w=0.5)
+    events = []
+    for ref in (False, True):
+        cfg = ActorConfig(record_trace=True, reference_arbitration=ref,
+                          **cfg_kwargs)
+        res = ActorDriver(spec, cm, cfg).run()
+        events.append([ev.to_json() for ev in res.trace.events])
+    return events
+
+
+def test_driver_trace_identical_chain_bfw_wcap_backpressure():
+    spec = PipelineSpec(4, 8, split_backward=True)
+    a, b = _paired_traces(spec, dict(
+        mode="hint", hint=HintKind.BFW, w_defer_cap=2, buffer_limit=2,
+        seed=3))
+    assert a == b
+
+
+def test_driver_trace_identical_dag():
+    a, b = _paired_traces(DAG, dict(mode="hint", hint=HintKind.BF, seed=11))
+    assert a == b
+
+
+def test_driver_trace_identical_precommitted_fixed_order():
+    """Fixed-order (precommitted) consumption probes ReadySet membership
+    rather than peeks; the paired traces must still match byte for byte."""
+    spec = PipelineSpec(4, 6)
+    a, b = _paired_traces(spec, dict(
+        mode="precommitted", fixed_order="1f1b", seed=2))
+    assert a == b
+
+
+def test_diff_snapshots_reconstruct_full_ready_sets():
+    """The default incremental (``radd``) trace encoding must reconstruct
+    the exact per-dispatch ready snapshots that opt-in full recording
+    serializes — the conformance checker's hint-faithfulness invariant
+    depends on it."""
+    for spec in (PipelineSpec(4, 6, split_backward=True), DAG):
+        cm = CostModel.uniform(spec.num_stages, w=0.5)
+        hint = HintKind.BFW if spec.split_backward else HintKind.BF
+        cap = 2 if spec.split_backward else 0
+        traces = []
+        for full in (False, True):
+            cfg = ActorConfig(mode="hint", hint=hint, w_defer_cap=cap,
+                              seed=5, record_trace=True,
+                              trace_full_ready=full)
+            traces.append(ActorDriver(spec, cm, cfg).run().trace)
+        diff_t, full_t = traces
+        assert diff_t.ready_sets() == full_t.ready_sets()
+        # and the diff encoding is actually the cheaper one on the wire
+        diff_payload = sum(len(ev.info.get("radd", ()))
+                           for ev in diff_t.events)
+        full_payload = sum(len(ev.info.get("ready", ()))
+                           for ev in full_t.events)
+        assert diff_payload < full_payload
