@@ -1,0 +1,193 @@
+"""Bubble-decomposition benchmark: WHERE the makespan gap comes from.
+
+``benchmarks.multimodal_compare`` established THAT readiness-driven BFW
+consumption beats pre-committed 1F1B on skewed multimodal DAG pipelines;
+this benchmark explains WHY: it records one sim-substrate trace per
+consumption mode on the same workloads (same CRN seed, so both modes face
+the same realized variability), runs ``repro.obs.bubbles.decompose`` over
+each, and reports the per-stage idle-time attribution side by side —
+"BFW beats 1F1B 1.44x" becomes "because it removed X s of dependency-wait
+on the LM stages".
+
+Two hard checks ride along (CI gates):
+
+* every decomposition accounts for 100% of per-stage idle time (the
+  categories sum exactly to makespan - busy on every stage);
+* the BFW-vs-1F1B comparison identifies a dominant removed bubble class
+  with a positive removed amount — under pre-committed consumption that
+  class is ``dependency_wait``, which here includes schedule misalignment
+  (the fixed order's next entry being unready while other work was ready),
+  exactly the component readiness-driven consumption eliminates.
+
+    PYTHONPATH=src python -m benchmarks.run --backend actor --bubbles
+    REPRO_SMOKE=1 PYTHONPATH=src python -m benchmarks.bubble_decomposition
+
+Emits ``BENCH_bubbles.json``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+
+from repro.core import INJECTION_LEVELS, HintKind, PipelineSpec
+from repro.obs import CATEGORIES, compare, decompose
+from repro.runtime.rrfp import ActorConfig, ActorDriver
+
+from benchmarks.multimodal_compare import (
+    M,
+    W_DEFER_CAP,
+    workload_configs,
+)
+
+LEVEL = "J2"  # the mid jitter level both sweeps report headline numbers at
+SEED = 7
+
+
+def _smoke() -> bool:
+    return bool(os.environ.get("REPRO_SMOKE"))
+
+
+def _recorded_trace(spec, cm, cfg):
+    cfg = dataclasses.replace(cfg, record_trace=True, seed=SEED)
+    return ActorDriver(spec, cm, cfg).run().trace
+
+
+def decomposition_cells(microbatches: int) -> list[dict]:
+    """Per (workload, mode): a full per-stage bubble table + comparison."""
+    from repro.multimodal import multimodal_dag_costs
+
+    out = []
+    for wname, mm in workload_configs().items():
+        graph = mm.stage_graph()
+        fused = PipelineSpec(mm.num_stages, microbatches, graph=graph)
+        split = PipelineSpec(mm.num_stages, microbatches,
+                             split_backward=True, graph=graph)
+        cm_f = dataclasses.replace(
+            multimodal_dag_costs(mm, seed=0),
+            injection=INJECTION_LEVELS[LEVEL])
+        cm_s = cm_f.with_split_backward()
+        reports = {
+            "pre_1f1b": decompose(_recorded_trace(fused, cm_f, ActorConfig(
+                mode="precommitted", fixed_order="1f1b"))),
+            "hint_bfw": decompose(_recorded_trace(split, cm_s, ActorConfig(
+                mode="hint", hint=HintKind.BFW,
+                w_defer_cap=W_DEFER_CAP))),
+        }
+        cmp = compare(reports["pre_1f1b"], reports["hint_bfw"])
+        out.append({
+            "workload": wname,
+            "level": LEVEL,
+            "stages": mm.num_stages,
+            "microbatches": microbatches,
+            "modes": {name: rep.to_json() for name, rep in reports.items()},
+            "bfw_vs_1f1b": cmp,
+        })
+    return out
+
+
+def run_bubble_benchmark() -> dict:
+    cells = decomposition_cells(8 if _smoke() else M)
+    fully = all(
+        mode_rep["idle_fully_attributed"]
+        for c in cells for mode_rep in c["modes"].values())
+    return {
+        "spec": {"level": LEVEL, "seed": SEED, "categories": list(CATEGORIES),
+                 "w_defer_cap": W_DEFER_CAP, "smoke": _smoke()},
+        "cells": cells,
+        "summary": {
+            "all_idle_fully_attributed": fully,
+            "top_removed_category_per_workload": {
+                c["workload"]: c["bfw_vs_1f1b"]["top_removed_category"]
+                for c in cells},
+            "speedup_per_workload": {
+                c["workload"]: c["bfw_vs_1f1b"]["speedup"] for c in cells},
+        },
+    }
+
+
+def emit_json(path: str = "BENCH_bubbles.json") -> dict:
+    report = run_bubble_benchmark()
+    with open(path, "w") as f:
+        json.dump(report, f, indent=2)
+    return report
+
+
+def bubble_rows(
+    json_path: str = "BENCH_bubbles.json",
+) -> list[tuple[str, float, str]]:
+    """CSV rows for ``benchmarks.run``; raises if attribution is lossy."""
+    report = emit_json(json_path)
+    out = []
+    for c in report["cells"]:
+        cmp = c["bfw_vs_1f1b"]
+        for mode, rep in c["modes"].items():
+            tot = rep["category_totals"]
+            top = max(tot, key=lambda k: tot[k])
+            out.append((
+                f"bubbles/{c['workload']}/{mode}",
+                rep["makespan"] * 1e6,
+                f"idle={sum(s['idle'] for s in rep['stages']):.3f}s,"
+                f"top={top}",
+            ))
+        out.append((
+            f"bubbles/{c['workload']}/bfw-removes",
+            cmp["removed"][cmp["top_removed_category"]] * 1e6,
+            f"category={cmp['top_removed_category']},"
+            f"speedup={cmp['speedup']:.2f}x",
+        ))
+    s = report["summary"]
+    if not s["all_idle_fully_attributed"]:
+        raise SystemExit(
+            "bubble decomposition failed to account for 100% of idle time "
+            "(per-stage categories do not sum to makespan - busy)")
+    for w, cat in s["top_removed_category_per_workload"].items():
+        removed = next(c for c in report["cells"] if c["workload"] == w)[
+            "bfw_vs_1f1b"]["removed"][cat]
+        if removed <= 0:
+            raise SystemExit(
+                f"bubble decomposition: BFW removed no idle time on {w} "
+                f"(top category {cat} delta {removed:.6f}s)")
+    return out
+
+
+# ---------------------------------------------------------------------------
+# instrumented probe for `benchmarks.run --metrics-report / --export-perfetto`
+# ---------------------------------------------------------------------------
+def telemetry_probe(export_path: str | None = None,
+                    metrics_report: bool = True) -> list[tuple[str, float, str]]:
+    """One metrics-instrumented recorded run of the heavy-encoder DAG under
+    BFW: prints the per-stage metrics table, optionally exports Perfetto."""
+    from repro.multimodal import multimodal_dag_costs
+    from repro.obs import MetricsRegistry, export_perfetto
+
+    mm = workload_configs()["seamless-m4t-large-v2/heavy-encoder"]
+    spec = PipelineSpec(mm.num_stages, 8 if _smoke() else M,
+                        split_backward=True, graph=mm.stage_graph())
+    cm = dataclasses.replace(
+        multimodal_dag_costs(mm, seed=0),
+        injection=INJECTION_LEVELS[LEVEL]).with_split_backward()
+    registry = MetricsRegistry()
+    cfg = ActorConfig(mode="hint", hint=HintKind.BFW,
+                      w_defer_cap=W_DEFER_CAP, record_trace=True,
+                      seed=SEED, metrics=registry)
+    res = ActorDriver(spec, cm, cfg).run()
+    if metrics_report:
+        print("per-stage metrics (seamless-m4t heavy-encoder, BFW, J2):")
+        print(registry.report())
+    if export_path:
+        export_perfetto(res.trace, export_path)
+        print(f"perfetto export ({len(res.trace.events)} events) -> "
+              f"{export_path}  (open at ui.perfetto.dev)")
+    rep = decompose(res.trace)
+    return [(
+        "telemetry-probe/heavy-encoder/bfw", res.makespan * 1e6,
+        f"idle_attributed={rep.idle_fully_attributed()},"
+        f"divergences={sum(sh.hint_divergences() for sh in registry.shards())}",
+    )]
+
+
+if __name__ == "__main__":
+    print("name,us_per_call,derived")
+    for name, us, derived in bubble_rows():
+        print(f"{name},{us:.1f},{derived}")

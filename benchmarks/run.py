@@ -16,6 +16,10 @@ real-jitted-callable threaded run, emitting ``BENCH_bfw.json``.  Adding
 ``--chaos`` instead runs the fault-injection sweep (``benchmarks.
 chaos_sweep``): both consumption modes across chaos levels C0..C3 with
 per-run conformance-invariant checks, emitting ``BENCH_chaos.json``.
+``--bubbles`` runs the bubble-decomposition report (``benchmarks.
+bubble_decomposition``, emits ``BENCH_bubbles.json``); ``--metrics-report``
+/ ``--export-perfetto PATH`` run a single metrics-instrumented probe and
+print the telemetry table / write a Chrome-trace JSON.
 """
 from __future__ import annotations
 
@@ -50,6 +54,21 @@ def main() -> None:
                          "the fast-vs-reference trace-identity check "
                          "(emits BENCH_dispatch.json; exits nonzero on a "
                          "dispatch-cost regression)")
+    ap.add_argument("--bubbles", action="store_true",
+                    help="actor backend: bubble-decomposition report — "
+                         "attribute every stage's idle time to "
+                         "warmup/dependency-wait/starvation/tp-gate/"
+                         "backpressure/drain for BFW vs pre-committed 1F1B "
+                         "on the multimodal workloads (emits "
+                         "BENCH_bubbles.json; exits nonzero if attribution "
+                         "is lossy)")
+    ap.add_argument("--metrics-report", action="store_true",
+                    help="actor backend: run one metrics-instrumented probe "
+                         "(heavy-encoder DAG under BFW) and print the "
+                         "per-stage telemetry table")
+    ap.add_argument("--export-perfetto", metavar="PATH", default=None,
+                    help="actor backend: with the telemetry probe, also "
+                         "write a Chrome/Perfetto trace JSON to PATH")
     ap.add_argument("--json-out", default=None,
                     help="actor backend: where to write the JSON report "
                          "(default BENCH_actor_runtime.json, or "
@@ -65,11 +84,32 @@ def main() -> None:
             raise SystemExit(
                 "--hint bfw and --split-backward go together: the BFW hint "
                 "needs W tasks, which only exist under split backward")
-        if sum([args.chaos, bfw, args.multimodal, args.dispatch]) > 1:
-            raise SystemExit("--chaos, the BFW sweep, --multimodal and "
-                             "--dispatch are separate reports; run them as "
-                             "separate invocations")
-        if args.dispatch:
+        probe = args.metrics_report or args.export_perfetto
+        if sum([args.chaos, bfw, args.multimodal, args.dispatch,
+                args.bubbles, bool(probe)]) > 1:
+            raise SystemExit("--chaos, the BFW sweep, --multimodal, "
+                             "--dispatch, --bubbles and the telemetry probe "
+                             "(--metrics-report/--export-perfetto) are "
+                             "separate reports; run them as separate "
+                             "invocations")
+        if probe:
+            from benchmarks.bubble_decomposition import telemetry_probe
+
+            t0 = time.time()
+            print("name,us_per_call,derived")
+            for row_name, us, derived in telemetry_probe(
+                    export_path=args.export_perfetto,
+                    metrics_report=args.metrics_report):
+                print(f"{row_name},{us:.1f},{derived}")
+            print(f"# telemetry probe done in {time.time() - t0:.1f}s",
+                  file=sys.stderr)
+            return
+        if args.bubbles:
+            from benchmarks.bubble_decomposition import bubble_rows as rows_fn
+
+            json_out = args.json_out or "BENCH_bubbles.json"
+            label = "bubbles"
+        elif args.dispatch:
             from benchmarks.dispatch_overhead import dispatch_rows as rows_fn
 
             json_out = args.json_out or "BENCH_dispatch.json"

@@ -65,6 +65,9 @@ class RunResult:
     spec: PipelineSpec
     #: structured event trace (actor runtime with record_trace=True)
     trace: object | None = None
+    #: the run's :class:`repro.obs.metrics.MetricsRegistry` (actor runtime
+    #: with ``ActorConfig.metrics`` attached)
+    metrics: object | None = None
 
     # ---- derived ----------------------------------------------------------
     def durations(self, kind: Kind) -> np.ndarray:

@@ -140,20 +140,42 @@ class HintArbiter:
         stage's remaining tasks to verify that the hint order is violated
         only when the hinted task is unready.
         """
+        return self.order_given(self.last_dir)
+
+    def order_given(self, prev: Kind | None) -> tuple[Kind, ...]:
+        """``try_order`` as of a captured pre-``select`` ``last_dir`` —
+        lets a caller reconstruct the order a dispatch actually scanned
+        after the select has already advanced the round alternation."""
         if self.hint == HintKind.B_PRIORITY:
             order: tuple[Kind, ...] = (Kind.B, Kind.F)
         elif self.hint == HintKind.F_PRIORITY:
             order = (Kind.F, Kind.B)
         elif self.hint == HintKind.FB:
-            order = (Kind.B, Kind.F) if self.last_dir == Kind.F else (Kind.F, Kind.B)
+            order = (Kind.B, Kind.F) if prev == Kind.F else (Kind.F, Kind.B)
         elif self.hint in (HintKind.BF, HintKind.BFW):
-            order = (Kind.F, Kind.B) if self.last_dir == Kind.B else (Kind.B, Kind.F)
+            order = (Kind.F, Kind.B) if prev == Kind.B else (Kind.B, Kind.F)
         else:  # pragma: no cover
             raise ValueError(self.hint)
         if self.hint == HintKind.BFW:
             # Weight-update tasks fill rounds with no ready compute direction.
             order += (Kind.W,)
         return order
+
+    def rank_given(self, kind: Kind, prev: Kind | None) -> int:
+        """``order_given(prev).index(kind)`` without building the tuple —
+        the hint-divergence slot on the metrics hot path (0 = the hinted
+        direction was served)."""
+        if kind == Kind.W:
+            return 2  # only BFW appends W, always last
+        if self.hint == HintKind.B_PRIORITY:
+            first = Kind.B
+        elif self.hint == HintKind.F_PRIORITY:
+            first = Kind.F
+        elif self.hint == HintKind.FB:
+            first = Kind.B if prev == Kind.F else Kind.F
+        else:
+            first = Kind.F if prev == Kind.B else Kind.B
+        return 0 if kind == first else 1
 
     def select(self, ready: Sequence[Task] | ReadySet) -> Task | None:
         """Return the dispatched task for the current ready set (or None).

@@ -87,6 +87,33 @@ def build_trainer(arch: str, *, data: int, stages: int, layers: int | None,
 
 
 # ---------------------------------------------------------------------------
+# observability (--metrics-report / --export-perfetto; actor runtime only)
+# ---------------------------------------------------------------------------
+def _obs_registry(args):
+    """A MetricsRegistry when ``--metrics-report`` asked for one, else None
+    (None keeps the runtime's metrics hooks at their zero-cost path)."""
+    if not getattr(args, "metrics_report", False):
+        return None
+    from repro.obs import MetricsRegistry
+    return MetricsRegistry()
+
+
+def _obs_finish(args, registry, trace) -> None:
+    """End-of-run sync point: print the summary table, export Perfetto."""
+    if registry is not None:
+        print("\nper-stage metrics (accumulated over all steps):")
+        print(registry.report())
+    if getattr(args, "export_perfetto", None):
+        from repro.obs import export_perfetto
+        if trace is None:
+            raise SystemExit(
+                "--export-perfetto: no trace was recorded to export")
+        export_perfetto(trace, args.export_perfetto)
+        print(f"perfetto export ({len(trace.events)} events) -> "
+              f"{args.export_perfetto}  (open at ui.perfetto.dev)")
+
+
+# ---------------------------------------------------------------------------
 # multimodal DAG workload (--workload multimodal)
 # ---------------------------------------------------------------------------
 def _multimodal_stage_split(stages: int) -> tuple[int, int]:
@@ -157,10 +184,11 @@ def train_multimodal(args) -> list[float]:
         raise SystemExit(
             f"--workload multimodal supports schedules rrfp/1f1b/gpipe/zb, "
             f"not {args.schedule!r}")
+    registry = _obs_registry(args)
     acfg = ActorConfig(mode=mode, hint=hint, fixed_order=fixed,
                        w_defer_cap=args.w_defer_cap,
                        deadlock_timeout=args.deadlock_timeout,
-                       chaos=chaos, seed=args.seed)
+                       chaos=chaos, seed=args.seed, metrics=registry)
     print(f"arch={args.arch} workload=multimodal modality={cfg.modality}  "
           f"substrate={args.substrate}  mode={mode}  hint={hint.value}  "
           f"split_backward={split}\n"
@@ -178,23 +206,28 @@ def train_multimodal(args) -> list[float]:
         costs = multimodal_dag_costs(cost_cfg, mb_rows=args.mb_rows,
                                      seed=args.seed)
         history = []
+        obs_trace = None
         for step in range(args.steps):
-            record_this = bool(args.record_trace) and step == 0
+            record_this = (bool(args.record_trace) or bool(
+                getattr(args, "export_perfetto", None))) and step == 0
             cfg_i = dataclasses.replace(acfg, seed=args.seed + 1000 * step,
                                         record_trace=record_this)
             driver = ActorDriver(spec, costs, cfg_i)
             res = driver.run()
             if record_this:
                 driver.trace.meta["step"] = step
-                driver.trace.save(args.record_trace)
-                print(f"recorded step-0 trace "
-                      f"({len(driver.trace.events)} events) "
-                      f"-> {args.record_trace}")
+                obs_trace = driver.trace
+                if args.record_trace:
+                    driver.trace.save(args.record_trace)
+                    print(f"recorded step-0 trace "
+                          f"({len(driver.trace.events)} events) "
+                          f"-> {args.record_trace}")
             bd = res.breakdown()
             history.append(res.makespan)
             print(f"step {step:4d}  makespan {res.makespan*1e3:8.2f} ms  "
                   f"compute {bd['compute']*1e3:7.2f} ms  "
                   f"blocking {bd['blocking']*1e3:7.2f} ms")
+        _obs_finish(args, registry, obs_trace)
         return history
 
     # ---- thread substrate: real jitted DAG training -------------------
@@ -211,6 +244,7 @@ def train_multimodal(args) -> list[float]:
     apply_update = make_host_update(opt_cfg)
 
     losses: list[float] = []
+    obs_trace = None
     for step in range(args.steps):
         batch = multimodal_batch(cfg, args.microbatches, args.mb_rows,
                                  seed=args.seed, step=step)
@@ -220,7 +254,8 @@ def train_multimodal(args) -> list[float]:
             for s in range(cfg.num_stages)
         ]
         t0 = time.time()
-        record_this = bool(args.record_trace) and step == 0
+        record_this = (bool(args.record_trace) or bool(
+            getattr(args, "export_perfetto", None))) and step == 0
         driver = ActorDriver(
             spec, None,
             dataclasses.replace(acfg, record_trace=True) if record_this
@@ -235,9 +270,11 @@ def train_multimodal(args) -> list[float]:
             trace = driver.trace
             trace.meta["step"] = step
             trace.meta["final_loss"] = loss
-            trace.save(args.record_trace)
-            print(f"recorded step-0 trace ({len(trace.events)} events) "
-                  f"-> {args.record_trace}")
+            obs_trace = trace
+            if args.record_trace:
+                trace.save(args.record_trace)
+                print(f"recorded step-0 trace ({len(trace.events)} events) "
+                      f"-> {args.record_trace}")
         bd = result.breakdown()
         dt = time.time() - t0
         print(f"step {step:4d}  loss {loss:8.4f}  lr {float(lr):.2e}  "
@@ -250,6 +287,7 @@ def train_multimodal(args) -> list[float]:
         print(f"jit retraces on encoder stages: "
               f"max {max(enc_caches.values())} per op "
               f"(bucket count {len(cfg.buckets)})")
+    _obs_finish(args, registry, obs_trace)
     return losses
 
 
@@ -314,11 +352,13 @@ def train_actor(args) -> list[float]:
         raise SystemExit(
             f"--runtime actor supports schedules rrfp/1f1b/gpipe/zb, "
             f"not {args.schedule!r}")
+    # NB: name must not shadow the module-level arch ``registry`` used above
+    metrics_reg = _obs_registry(args)
     acfg = ActorConfig(mode=mode, hint=hint, fixed_order=fixed,
                        w_defer_cap=args.w_defer_cap,
                        deadlock_timeout=args.deadlock_timeout,
                        chaos=chaos,
-                       replay=replay)
+                       replay=replay, metrics=metrics_reg)
 
     opt_cfg = AdamWConfig(lr=args.lr, warmup_steps=min(20, args.steps),
                           total_steps=max(args.steps, 1))
@@ -340,6 +380,7 @@ def train_actor(args) -> list[float]:
           f"mode={mode}  hint={hint.value}  split_backward={split}  "
           f"stages={args.stages}  microbatches={args.microbatches}")
     losses: list[float] = []
+    obs_trace = None
     for step in range(args.steps):
         batch = synth_batch(cfg, batch_size, args.seq, seed=args.seed,
                             step=step)
@@ -353,7 +394,8 @@ def train_actor(args) -> list[float]:
         t0 = time.time()
         # recording costs lock traffic on the dispatch path: enable it only
         # for the step whose trace is actually saved
-        record_this = bool(args.record_trace) and step == 0
+        record_this = (bool(args.record_trace) or bool(
+            getattr(args, "export_perfetto", None))) and step == 0
         driver = ActorDriver(
             spec, None,
             dataclasses.replace(acfg, record_trace=True) if record_this
@@ -375,9 +417,11 @@ def train_actor(args) -> list[float]:
             trace = driver.trace
             trace.meta["step"] = step
             trace.meta["final_loss"] = loss
-            trace.save(args.record_trace)
-            print(f"recorded step-0 trace ({len(trace.events)} events) "
-                  f"-> {args.record_trace}")
+            obs_trace = trace
+            if args.record_trace:
+                trace.save(args.record_trace)
+                print(f"recorded step-0 trace ({len(trace.events)} events) "
+                      f"-> {args.record_trace}")
         bd = result.breakdown()
         new_table = monitor.observe_result(result)
         dt = time.time() - t0
@@ -387,6 +431,7 @@ def train_actor(args) -> list[float]:
               + ("  [replan]" if new_table is not None else ""))
     if monitor.replans:
         print(f"straggler monitor triggered {monitor.replans} replan(s)")
+    _obs_finish(args, metrics_reg, obs_trace)
     return losses
 
 
@@ -445,6 +490,14 @@ def main() -> None:
                     help="actor runtime: re-execute the per-stage dispatch "
                          "order recorded in PATH (order-exact replay; "
                          "reproduces the recorded loss bit pattern)")
+    ap.add_argument("--metrics-report", action="store_true",
+                    help="actor runtime: collect runtime telemetry "
+                         "(repro.obs metrics shards) and print the "
+                         "end-of-run per-stage summary table")
+    ap.add_argument("--export-perfetto", default=None, metavar="PATH",
+                    help="actor runtime: export the step-0 trace as Chrome "
+                         "trace-event JSON (open at ui.perfetto.dev); "
+                         "implies step-0 recording")
     ap.add_argument("--full-size", action="store_true")
     ap.add_argument("--lr", type=float, default=1e-3)
     ap.add_argument("--ckpt-dir", default=None)
@@ -462,6 +515,10 @@ def main() -> None:
     if args.runtime == "actor":
         train_actor(args)
         return
+    if args.metrics_report or args.export_perfetto:
+        raise SystemExit("--metrics-report / --export-perfetto instrument "
+                         "the actor runtime; add --runtime actor (or "
+                         "--workload multimodal)")
 
     data = args.devices // args.stages
     assert data >= 1, "need devices >= stages"

@@ -1,0 +1,54 @@
+"""Runtime observability: metrics, bubble attribution, Perfetto export,
+online cost tables.
+
+Layered strictly *on top of* the runtime (``repro.runtime.rrfp`` never
+imports this package except lazily from ``Trace.to_perfetto``):
+
+  metrics     -- per-stage single-writer shards: counters, gauges,
+                 log-bucketed histograms; aggregated at sync points
+  cost_table  -- per-(stage, op) duration EWMAs -> CostModel snapshots
+                 (the online input for ROADMAP item 3 hint re-synthesis)
+  bubbles     -- idle-time decomposition over recorded traces: warmup,
+                 dependency-wait, starvation, TP-gate, backpressure, drain
+  export      -- Chrome trace-event / Perfetto JSON rendering of traces
+
+See ``docs/observability.md`` for the metric catalogue and semantics.
+"""
+from repro.obs.bubbles import (
+    CATEGORIES,
+    BubbleReport,
+    StageBubbles,
+    compare,
+    decompose,
+    spec_from_meta,
+)
+from repro.obs.cost_table import Ewma, OnlineCostTable
+from repro.obs.export import export_perfetto, to_perfetto, validate_chrome_trace
+from repro.obs.metrics import (
+    DEPTH_EDGES,
+    DURATION_EDGES,
+    Histogram,
+    MetricsRegistry,
+    StageShard,
+    log_edges,
+)
+
+__all__ = [
+    "BubbleReport",
+    "CATEGORIES",
+    "DEPTH_EDGES",
+    "DURATION_EDGES",
+    "Ewma",
+    "Histogram",
+    "MetricsRegistry",
+    "OnlineCostTable",
+    "StageBubbles",
+    "StageShard",
+    "compare",
+    "decompose",
+    "export_perfetto",
+    "log_edges",
+    "spec_from_meta",
+    "to_perfetto",
+    "validate_chrome_trace",
+]

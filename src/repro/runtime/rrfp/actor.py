@@ -69,6 +69,7 @@ class StageActor:
         w_defer_cap: int = 0,
         reference_arbitration: bool = False,
         trace_full_ready: bool = False,
+        metrics=None,
     ):
         if mode not in ("hint", "precommitted"):
             raise ValueError(f"unknown mode {mode!r}")
@@ -90,6 +91,9 @@ class StageActor:
         #: record full sorted ready snapshots per dispatch instead of the
         #: cheap incremental diff (``radd``) encoding
         self.trace_full_ready = trace_full_ready
+        #: per-stage single-writer metric shard
+        #: (:class:`repro.obs.metrics.StageShard`), or None = zero-cost
+        self.metrics = metrics
         self.arrived: set[Task] = set()
         self.ready = ReadySet()
         self.done: set[Task] = set()
@@ -164,39 +168,67 @@ class StageActor:
         the dispatch event so the conformance checker can verify, offline,
         that each decision followed the hint (or deviated only because the
         hinted task was unready).  The info dict is only materialized when a
-        recorder is attached: this runs on the dispatch hot path of every
-        arbitration attempt."""
+        recorder or a metric shard is attached: this runs on the dispatch
+        hot path of every arbitration attempt.
+
+        With metrics attached the hint path also stamps ``slot``: the index
+        of the dispatched task's *kind* in the arbiter's preference order —
+        the hint-divergence metric (0 = hinted direction served, >0 = the
+        hinted direction was unready).  Within a direction the dispatched
+        task is always the App. A minimum ready candidate (conformance's
+        hint-faithfulness invariant), so kind-level rank is the whole
+        divergence signal."""
         rec = self.recorder is not None
+        obs = rec or self.metrics is not None
         ref = self.reference_arbitration
+        # Failed attempts (task None) always return info None: nothing is
+        # recorded or counted for a no-dispatch, and roughly half of all
+        # arbitration attempts fail, so they must not pay the dict/tuple
+        # materialization.
         if self.mode == "precommitted":
             if self.order_pos >= len(self.order):
                 return None, None
             nxt = self.order[self.order_pos]
-            task = nxt if nxt in self.ready else None
-            return task, ({"path": "precommitted"} if rec else None)
+            if nxt not in self.ready:
+                return None, None
+            return nxt, ({"path": "precommitted"} if obs else None)
         if self.w_overcap():
             # Every completed B locally enables its W, so a ready W exists
             # whenever the backlog is nonzero; retiring it frees the stash.
             task = pick(sorted(self.ready) if ref else self.ready, Kind.W)
             if task is not None:
                 return task, ({"path": "wcap", "backlog": self.w_backlog()}
-                              if rec else None)
+                              if obs else None)
         if self.backpressured():
             task, self.drain_focus = backpressure_drain(
                 self.spec, self.idx,
                 sorted(self.ready) if ref else self.ready, self.done,
                 self.drain_focus)
-            return task, ({"path": "backpressure"} if rec else None)
-        order = self.arbiter.try_order() if rec else None
+            if task is None:
+                return None, None
+            return task, ({"path": "backpressure"} if obs else None)
+        # select() advances the round alternation, so capture last_dir
+        # first: order/slot are reconstructed post-hoc only on a dispatch.
+        prev_dir = self.arbiter.last_dir
         task = self.arbiter.select(sorted(self.ready) if ref else self.ready)
-        if not rec:
+        if not obs or task is None:
             return task, None
-        return task, {"path": "hint", "order": [int(k) for k in order]}
+        info: dict = {"path": "hint"}
+        if rec:
+            info["order"] = [
+                int(k) for k in self.arbiter.order_given(prev_dir)]
+        if self.metrics is not None:
+            info["slot"] = self.arbiter.rank_given(task.kind, prev_dir)
+        return task, info
 
     def begin(self, task: Task, now: float = 0.0,
               info: dict | None = None) -> Any:
         """Commit to a dispatch: consume the task's buffered message (if any)
         and return its payload."""
+        if self.metrics is not None:
+            # info is always materialized when a shard is attached
+            self.metrics.on_dispatch(task, len(self.ready), info["path"],
+                                     info.get("slot"))
         if self.recorder is not None:
             # Ready-set snapshot: the default "diff" encoding records only
             # the tasks *added* since this stage's previous dispatch (the
@@ -233,12 +265,20 @@ class StageActor:
                 self._maybe_enqueue(Task(Kind.W, self.idx, task.mb, task.chunk))
         elif task.kind == Kind.W:
             self.n_w += 1
+        if self.metrics is not None and dur is not None:
+            self.metrics.on_complete(
+                task, dur,
+                (self.n_b - self.n_w) if self.spec.split_backward else 0)
         if self.recorder is not None:
             info: dict[str, Any] = {"nf": self.n_f, "nb": self.n_b}
             if dur is not None:
                 info["dur"] = dur
             if self.spec.split_backward:
                 info["w_backlog"] = self.w_backlog()
+            if self.metrics is not None and dur is not None:
+                # annotate with the live cost-table state: extra info fields
+                # that save/load and ReplayOracle must tolerate
+                info["ewma"] = self.metrics.cost_ewma[task.kind].value
             self.recorder.record(_tr.COMPLETE, self.idx, task, t=now, **info)
         # W tasks are stage-local by construction: message_successors(W) is
         # empty, so no envelope is emitted and no TP admission gate applies.

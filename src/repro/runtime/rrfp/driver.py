@@ -93,6 +93,13 @@ class ActorConfig:
     #: sort-then-rank path instead of the incremental ReadySet index
     #: (decision-identical by construction; only per-decision cost differs)
     reference_arbitration: bool = False
+    #: observability: a :class:`repro.obs.metrics.MetricsRegistry` whose
+    #: per-stage shards the runtime feeds (None = zero-cost).  Reuse one
+    #: registry across steps to accumulate and keep cost EWMAs warm.
+    #: Metrics never alter scheduling decisions (CI's paired-trace check);
+    #: with a recorder also attached they add info annotations (e.g.
+    #: ``ewma`` on COMPLETE) that replay tolerates.
+    metrics: Any | None = None
 
 
 def _compute_rng(seed: int, task: Task) -> np.random.Generator:
@@ -181,14 +188,16 @@ class ActorDriver:
                     order = cfg.custom_orders[s]
                 else:
                     order = FIXED_ORDERS[cfg.fixed_order](spec, s)
+            shard = (cfg.metrics.shard(s)
+                     if cfg.metrics is not None else None)
             mb = Mailbox(s, cfg.tp_degree, recorder=recorder,
-                         fan_in=spec.fan_in)
+                         fan_in=spec.fan_in, metrics=shard)
             mailboxes.append(mb)
             actors.append(StageActor(
                 s, spec, mb, mode=cfg.mode, hint=cfg.hint, order=order,
                 buffer_limit=cfg.buffer_limit, w_defer_cap=cfg.w_defer_cap,
                 reference_arbitration=cfg.reference_arbitration,
-                trace_full_ready=cfg.trace_full_ready))
+                trace_full_ready=cfg.trace_full_ready, metrics=shard))
         return mailboxes, actors
 
     def _seed_inputs(self, mailboxes: list[Mailbox]) -> None:
@@ -340,6 +349,7 @@ class ActorDriver:
             end=end,
             spec=spec,
             trace=self.trace,
+            metrics=cfg.metrics,
         )
 
     # ---- thread-per-stage substrate ------------------------------------
@@ -451,6 +461,7 @@ class ActorDriver:
             end=end,
             spec=spec,
             trace=self.trace,
+            metrics=cfg.metrics,
         )
 
 

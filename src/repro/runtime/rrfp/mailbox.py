@@ -37,11 +37,15 @@ class Mailbox:
     """
 
     def __init__(self, stage: int, tp_degree: int = 1, recorder=None,
-                 fan_in=None):
+                 fan_in=None, metrics=None):
         self.stage = stage
         self.recorder = recorder
+        #: per-stage metric shard (:class:`repro.obs.metrics.StageShard`);
+        #: written only under ``cond`` (or the sim pump), never contended
+        self.metrics = metrics
         self.fan_in = fan_in or (lambda task: 1)
-        self.group = TPGroup(stage, tp_degree, recorder=recorder)
+        self.group = TPGroup(stage, tp_degree, recorder=recorder,
+                             metrics=metrics)
         self.cond = threading.Condition()
         #: admitted-but-unconsumed arrivals, FIFO per kind
         self.buffers: dict[Kind, list[Task]] = {k: [] for k in Kind}
@@ -84,6 +88,8 @@ class Mailbox:
                 if len(srcs) < need:
                     # fan-in edge admitted, task still waiting on a branch
                     self.last_progress = _time.monotonic()
+                    if self.metrics is not None:
+                        self.metrics.on_fanin_hold()
                     if self.recorder is not None:
                         self.recorder.record(
                             _tr.FANIN_HOLD, self.stage, env.task, t=now,
@@ -96,6 +102,11 @@ class Mailbox:
                 self.high_water[adm.task.kind] = max(
                     self.high_water[adm.task.kind], len(buf))
                 self.last_progress = _time.monotonic()
+                if self.metrics is not None:
+                    # fused enqueue + transport-latency sample (the latency
+                    # of the envelope that completed the message set)
+                    self.metrics.on_admitted(adm.task.kind, len(buf),
+                                             now - env.send_time)
                 if self.recorder is not None:
                     self.recorder.record(_tr.ENQUEUE, self.stage, adm.task,
                                          t=now, src="message")
@@ -112,6 +123,9 @@ class Mailbox:
             self.high_water[task.kind] = max(
                 self.high_water[task.kind], len(self.buffers[task.kind]))
             self.last_progress = _time.monotonic()
+            if self.metrics is not None:
+                self.metrics.on_enqueue(task.kind,
+                                        len(self.buffers[task.kind]))
             if self.recorder is not None:
                 self.recorder.record(_tr.ENQUEUE, self.stage, task, t=now,
                                      src="local")
@@ -167,6 +181,8 @@ class Mailbox:
         """
         self.buffers[task.kind].remove(task)
         self.last_progress = _time.monotonic()
+        if self.metrics is not None:
+            self.metrics.on_dequeue(task.kind)
         if self.recorder is not None:
             self.recorder.record(_tr.DEQUEUE, self.stage, task, t=now)
         by_src = self.payloads.pop(task, None)

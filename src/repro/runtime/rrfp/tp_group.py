@@ -36,10 +36,13 @@ class Admission:
 class TPGroup:
     """All-ranks readiness gate for one pipeline stage."""
 
-    def __init__(self, stage: int, tp_degree: int = 1, recorder=None):
+    def __init__(self, stage: int, tp_degree: int = 1, recorder=None,
+                 metrics=None):
         self.stage = stage
         self.tp_degree = max(1, tp_degree)
         self.recorder = recorder
+        #: per-stage metric shard (:class:`repro.obs.metrics.StageShard`)
+        self.metrics = metrics
         #: per-edge rank holds: (task, src_stage) -> {rank: arrival time}.
         #: DAG fan-in stages receive one message per incoming edge for the
         #: same task; each edge's rank set completes independently.
@@ -70,15 +73,21 @@ class TPGroup:
         key = (env.task, env.src_stage)
         if key in self._admitted:
             self.duplicates += 1
+            if self.metrics is not None:
+                self.metrics.on_tp_dup()
             self._record(_tr.TP_DUP, env, now, reason="post_admission")
             return None
         holds = self._held.setdefault(key, {})
         if env.rank in holds:
             self.duplicates += 1
+            if self.metrics is not None:
+                self.metrics.on_tp_dup()
             self._record(_tr.TP_DUP, env, now, reason="rank_held")
             return None
         holds[env.rank] = now
         if len(holds) < self.tp_degree:
+            if self.metrics is not None:
+                self.metrics.on_tp_hold()
             self._record(_tr.TP_HOLD, env, now,
                          missing=self.tp_degree - len(holds))
             return None
@@ -89,6 +98,8 @@ class TPGroup:
         if spread > 0:
             self.deferrals += 1
         self.admitted += 1
+        if self.metrics is not None:
+            self.metrics.on_tp_admit(spread)
         self._record(_tr.TP_ADMIT, env, now, spread=spread)
         return Admission(task=env.task, admit_time=now, spread=spread)
 

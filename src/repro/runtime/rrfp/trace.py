@@ -62,6 +62,19 @@ def task_key(t: Task) -> list[int]:
     return [int(t.kind), t.stage, t.mb, t.chunk]
 
 
+def _jsonable(v: Any):
+    """Coerce an info value to a plain-JSON type (numpy scalars -> Python)."""
+    if isinstance(v, (str, int, float, bool)) or v is None:
+        return v
+    if isinstance(v, (list, tuple)):
+        return [_jsonable(x) for x in v]
+    if isinstance(v, dict):
+        return {k: _jsonable(x) for k, x in v.items()}
+    if hasattr(v, "item"):  # numpy scalar
+        return v.item()
+    return v
+
+
 def task_from_key(k: Iterable[int]) -> Task:
     kind, stage, mb, chunk = k
     return Task(Kind(kind), stage, mb, chunk)
@@ -86,7 +99,10 @@ class TraceEvent:
         if self.task is not None:
             d["task"] = task_key(self.task)
         if self.info:
-            d["info"] = self.info
+            # info may carry extra annotations (e.g. metrics-enabled runs
+            # stamp EWMA values) whose values can be numpy scalars; coerce
+            # so save/load round-trips any recorded run
+            d["info"] = {k: _jsonable(v) for k, v in self.info.items()}
         return d
 
     @staticmethod
@@ -222,9 +238,29 @@ class Trace:
         return out
 
     def durations(self) -> dict[tuple, float]:
-        """task -> realized compute duration (chaos effects included)."""
-        return {tuple(task_key(ev.task)): ev.info["dur"]
-                for ev in self.select(COMPLETE) if "dur" in ev.info}
+        """Full task identity (kind, stage, mb, chunk) -> realized compute
+        duration (chaos effects included).
+
+        Keys carry the *complete* task key, so two tasks differing only in
+        kind, stage, microbatch or chunk never collapse onto one entry; on
+        a malformed trace with duplicate COMPLETEs for the same task the
+        first (logical-clock order) duration wins rather than the last
+        silently overwriting it — replay consumes the duration the heap
+        actually used."""
+        out: dict[tuple, float] = {}
+        for ev in self.select(COMPLETE):
+            if "dur" in ev.info:
+                out.setdefault(tuple(task_key(ev.task)), ev.info["dur"])
+        return out
+
+    def to_perfetto(self) -> dict:
+        """Chrome trace-event JSON view of this trace (Perfetto-loadable).
+
+        Delegates to :func:`repro.obs.export.to_perfetto`; imported lazily
+        so the runtime layer does not depend on the observability layer."""
+        from repro.obs.export import to_perfetto
+
+        return to_perfetto(self)
 
     def final_loss(self) -> float | None:
         return self.meta.get("final_loss")

@@ -165,7 +165,14 @@ def sim_costs(spec: PipelineSpec, seed: int) -> CostModel:
 @contextlib.contextmanager
 def artifact_on_failure(get_trace, name: str):
     """Save the run's trace under _artifacts/ when a check fails (the CI
-    conformance job uploads that directory on failure)."""
+    conformance job uploads that directory on failure).
+
+    Alongside the replayable ``.jsonl`` dump, a ``.perfetto.json`` view of
+    the same trace is exported so a failure can be *looked at* (timeline at
+    ui.perfetto.dev) without first round-tripping the JSON-lines file
+    through the exporter locally.  The visual export is best-effort: a
+    trace broken enough to crash the exporter must not mask the original
+    failure or the replayable dump."""
     try:
         yield
     except BaseException:
@@ -176,6 +183,15 @@ def artifact_on_failure(get_trace, name: str):
             trace.save(str(path))
             print(f"conformance failure: trace saved -> {path}",
                   file=sys.stderr)
+            try:
+                from repro.obs.export import export_perfetto
+                vpath = ARTIFACT_DIR / f"{name}.perfetto.json"
+                export_perfetto(trace, str(vpath))
+                print(f"conformance failure: perfetto view -> {vpath}",
+                      file=sys.stderr)
+            except Exception as exc:  # pragma: no cover - best effort
+                print(f"conformance failure: perfetto export skipped "
+                      f"({exc})", file=sys.stderr)
         raise
 
 

@@ -1,0 +1,448 @@
+"""Observability subsystem (repro.obs): metrics, cost tables, bubbles.
+
+Pins the PR-level acceptance invariants:
+
+* histogram bucket-edge semantics and the deferred (lazy-fold) observe path;
+* EWMA convergence on drifting costs + OnlineCostTable <-> CostModel round
+  trips;
+* bubble decomposition accounts for 100% of per-stage idle time (categories
+  sum exactly to makespan - busy) on chain, DAG and precommitted runs;
+* attaching a MetricsRegistry never changes a scheduling decision, and a
+  metrics-annotated recorded trace still replays exactly.
+"""
+import json
+import math
+
+import pytest
+
+from repro.core import (
+    CostModel,
+    HintKind,
+    JitterModel,
+    Kind,
+    PipelineSpec,
+    StageGraph,
+    Task,
+)
+from repro.obs import (
+    CATEGORIES,
+    DEPTH_EDGES,
+    DURATION_EDGES,
+    Ewma,
+    Histogram,
+    MetricsRegistry,
+    OnlineCostTable,
+    compare,
+    decompose,
+    log_edges,
+)
+from repro.runtime.rrfp import ActorConfig, ActorDriver, Trace
+from repro.runtime.rrfp import trace as _tr
+
+
+def det_costs(S, f=1.0, b=2.0, w=0.0, comm=1e-3, **kw):
+    return CostModel.uniform(
+        S, f=f, b=b, w=w, comm_base=comm,
+        compute_jitter=JitterModel(), comm_jitter=JitterModel(), **kw,
+    )
+
+
+def run_recorded(spec, cm, **cfg_kw):
+    cfg = ActorConfig(record_trace=True, **cfg_kw)
+    driver = ActorDriver(spec, cm, cfg)
+    res = driver.run()
+    return res, driver.trace
+
+
+def dag_spec(num_mb=4):
+    g = StageGraph(5, ((0, 2), (1, 2), (2, 3), (3, 4)))
+    return PipelineSpec(5, num_mb, graph=g)
+
+
+# ---------------------------------------------------------------------------
+# Histogram
+# ---------------------------------------------------------------------------
+class TestHistogram:
+    def test_bucket_edge_semantics(self):
+        # bucket i counts edges[i-1] < x <= edges[i]; 0 = underflow (x <=
+        # edges[0]); the last bucket is overflow (x > edges[-1])
+        h = Histogram(edges=(1.0, 2.0, 4.0))
+        for x in (0.5, 1.0, 1.5, 2.0, 3.0, 4.0, 5.0):
+            h.observe(x)
+        assert h.counts == [2, 2, 2, 1]
+        assert h.count == 7
+        assert h.total == pytest.approx(sum((0.5, 1.0, 1.5, 2.0, 3.0, 4.0, 5.0)))
+
+    def test_deferred_fold_is_transparent(self):
+        # observe is an append; the fold runs at the first read and further
+        # observations after a read fold correctly on the next read
+        h = Histogram(edges=(1.0, 10.0))
+        h.observe(0.5)
+        assert h._pending  # queued, not yet bucketed
+        assert h.count == 1  # property read folds
+        assert not h._pending
+        h.observe(5.0)
+        h.observe(50.0)
+        assert h.counts == [1, 1, 1]
+        assert h.total == pytest.approx(55.5)
+
+    def test_edges_must_strictly_increase(self):
+        with pytest.raises(ValueError):
+            Histogram(edges=(1.0, 1.0, 2.0))
+        with pytest.raises(ValueError):
+            Histogram(edges=(2.0, 1.0))
+
+    def test_default_edge_sets(self):
+        assert Histogram().edges is DURATION_EDGES
+        assert Histogram(DEPTH_EDGES).edges is DEPTH_EDGES
+        # log-spaced: constant ratio between consecutive edges
+        e = log_edges(1e-6, 1e2, 8)
+        ratios = [e[i + 1] / e[i] for i in range(len(e) - 1)]
+        assert all(r == pytest.approx(ratios[0], rel=1e-9) for r in ratios)
+        with pytest.raises(ValueError):
+            log_edges(0.0, 1.0, 4)
+
+    def test_merge_requires_same_edges(self):
+        a, b = Histogram(edges=(1.0, 2.0)), Histogram(edges=(1.0, 2.0))
+        a.observe(0.5)
+        b.observe(1.5)
+        b.observe(9.0)
+        a.merge(b)
+        assert a.counts == [1, 1, 1]
+        assert a.count == 3
+        assert a.total == pytest.approx(11.0)
+        with pytest.raises(ValueError):
+            a.merge(Histogram(edges=(1.0, 3.0)))
+
+    def test_quantile_is_bucketed_upper_bound(self):
+        h = Histogram(edges=(1.0, 2.0, 4.0))
+        assert h.quantile(0.5) == 0.0  # empty
+        for x in (0.5, 1.5, 1.5, 3.0):
+            h.observe(x)
+        assert h.quantile(0.25) == 1.0
+        assert h.quantile(0.75) == 2.0
+        assert h.quantile(1.0) == 4.0
+        h.observe(100.0)  # overflow bucket reports inf
+        assert h.quantile(1.0) == math.inf
+
+    def test_mean_exact_despite_bucketing(self):
+        h = Histogram(edges=(1.0, 100.0))
+        for x in (0.25, 0.5, 99.0):
+            h.observe(x)
+        assert h.mean() == pytest.approx((0.25 + 0.5 + 99.0) / 3)
+
+    def test_to_json_folds(self):
+        h = Histogram(edges=(1.0, 2.0))
+        h.observe(1.5)
+        j = h.to_json()
+        assert j["counts"] == [0, 1, 0]
+        assert j["count"] == 1
+        assert json.dumps(j)  # serializable
+
+
+# ---------------------------------------------------------------------------
+# EWMA + online cost tables
+# ---------------------------------------------------------------------------
+class TestEwma:
+    def test_deferred_fold_matches_eager_recurrence(self):
+        e = Ewma(alpha=0.3)
+        xs = [5.0, 1.0, 2.0, 8.0, 3.0]
+        for x in xs:
+            e.observe(x)
+        v = None
+        for x in xs:  # the fold must replay in observation order
+            v = x if v is None else 0.7 * v + 0.3 * x
+        assert e.value == pytest.approx(v)
+        assert e.count == len(xs)
+
+    def test_converges_after_cost_drift(self):
+        # the 0.9/0.1 EMA tracks a step change: after ~100 samples at the
+        # new level the old level's weight is (0.9)^100 ~ 2.7e-5
+        e = Ewma(alpha=0.1)
+        for _ in range(50):
+            e.observe(1.0)
+        for _ in range(100):
+            e.observe(2.0)
+        assert e.value == pytest.approx(2.0, rel=1e-3)
+
+    def test_seed_discards_pending(self):
+        e = Ewma(alpha=0.1)
+        e.observe(100.0)
+        e.seed(3.0, 7)
+        assert e.value == 3.0
+        assert e.count == 7
+
+
+class TestOnlineCostTable:
+    def test_observe_and_cost_model_snapshot(self):
+        t = OnlineCostTable(num_stages=2, alpha=0.5)
+        t.observe(0, Kind.F, 2.0)
+        t.observe(0, Kind.F, 4.0)
+        t.observe(1, Kind.B, 3.0)
+        t.observe_comm(1e-3)
+        assert t.value(0, Kind.F) == pytest.approx(3.0)  # 0.5*2 + 0.5*4
+        assert t.samples(0, Kind.F) == 2
+        assert t.value(1, Kind.F) is None
+
+        default = det_costs(2, f=9.0, b=9.0, w=0.5)
+        cm = t.as_cost_model(default=default)
+        assert cm.f_cost[0] == pytest.approx(3.0)
+        assert cm.f_cost[1] == pytest.approx(9.0)  # unobserved -> fallback
+        assert cm.b_cost[1] == pytest.approx(3.0)
+        assert cm.w_cost[0] == pytest.approx(0.5)
+        assert cm.comm_base == pytest.approx(1e-3)
+        # jitter-free snapshot: realized variability is already in the EWMA
+        assert cm.compute_jitter.sigma == 0.0
+
+    def test_negative_comm_latency_dropped(self):
+        t = OnlineCostTable(1)
+        t.observe_comm(-1.0)
+        assert t.comm.count == 0
+
+    def test_update_from_trace_matches_manual_fold(self):
+        spec = PipelineSpec(3, 4)
+        cm = CostModel.uniform(3, seed=11)
+        _, trace = run_recorded(spec, cm, mode="hint", hint=HintKind.BF,
+                                seed=11)
+        table = OnlineCostTable(spec.num_stages).update_from_trace(trace)
+
+        expect: dict[tuple, Ewma] = {}
+        sends, comm = {}, Ewma(0.1)
+        for ev in trace.events:  # logical-clock order, like the table
+            if ev.kind == _tr.COMPLETE and "dur" in ev.info:
+                key = (ev.stage, ev.task.kind)
+                expect.setdefault(key, Ewma(0.1)).observe(ev.info["dur"])
+            elif ev.kind == _tr.SEND:
+                sends.setdefault(ev.info["seq"], ev.t)
+            elif ev.kind == _tr.DELIVER and ev.info.get("seq") in sends:
+                comm.observe(ev.t - sends[ev.info["seq"]])
+        assert expect  # the trace must carry durations
+        for (s, k), e in expect.items():
+            assert table.value(s, k) == pytest.approx(e.value)
+            assert table.samples(s, k) == e.count
+        assert table.comm.value == pytest.approx(comm.value)
+
+    def test_to_json_serializable(self):
+        t = OnlineCostTable(1)
+        t.observe(0, Kind.F, 1.0)
+        assert json.dumps(t.to_json())
+
+
+# ---------------------------------------------------------------------------
+# bubble decomposition
+# ---------------------------------------------------------------------------
+def assert_exact_attribution(report):
+    """The non-negotiable invariant: categories sum to idle, per stage."""
+    assert report.idle_fully_attributed()
+    for sb in report.stages:
+        assert sb.busy + sb.idle == pytest.approx(report.makespan)
+        assert sb.attributed == pytest.approx(sb.idle, abs=1e-9)
+        assert all(v >= -1e-12 for v in sb.bubbles.values())
+
+
+class TestBubbleDecomposition:
+    def test_chain_hint_idle_fully_attributed(self):
+        spec = PipelineSpec(4, 6)
+        _, trace = run_recorded(spec, det_costs(4), mode="hint",
+                                hint=HintKind.BF, seed=3)
+        report = decompose(trace)
+        assert_exact_attribution(report)
+        # the last stage fills late (warmup) and finishes its B early,
+        # then sits idle while backward propagates to stage 0 (drain)
+        assert report.stages[-1].bubbles["warmup"] > 0.0
+        assert report.stages[-1].bubbles["drain"] > 0.0
+        # stage 0 executes the final B of the run: no drain bubble there
+        assert report.stages[0].bubbles["drain"] == 0.0
+
+    def test_precommitted_1f1b_idle_fully_attributed(self):
+        spec = PipelineSpec(4, 6)
+        _, trace = run_recorded(spec, det_costs(4), mode="precommitted",
+                                fixed_order="1f1b", seed=3)
+        report = decompose(trace)
+        assert_exact_attribution(report)
+
+    def test_dag_with_jitter_idle_fully_attributed(self):
+        spec = dag_spec(num_mb=4)
+        cm = CostModel.uniform(spec.num_stages, seed=5)
+        _, trace = run_recorded(spec, cm, mode="hint", hint=HintKind.BF,
+                                seed=5)
+        report = decompose(trace)
+        assert_exact_attribution(report)
+
+    def test_tp_degree_2_idle_fully_attributed(self):
+        spec = PipelineSpec(3, 4)
+        _, trace = run_recorded(spec, det_costs(3), mode="hint",
+                                hint=HintKind.BF, seed=9, tp_degree=2)
+        report = decompose(trace)
+        assert_exact_attribution(report)
+
+    def test_report_shapes_and_compare(self):
+        spec = PipelineSpec(3, 6)
+        _, slow = run_recorded(spec, det_costs(3), mode="precommitted",
+                               fixed_order="gpipe", seed=1)
+        _, fast = run_recorded(spec, det_costs(3), mode="hint",
+                               hint=HintKind.BF, seed=1)
+        base, other = decompose(slow), decompose(fast)
+        j = base.to_json()
+        assert set(j["category_totals"]) == set(CATEGORIES)
+        assert json.dumps(j)
+        assert "stage" in base.table()
+
+        cmp = compare(base, other)
+        assert cmp["speedup"] == pytest.approx(
+            base.makespan / other.makespan)
+        assert cmp["top_removed_category"] in CATEGORIES
+        # the removed deltas are consistent with the two category totals
+        bt, ot = base.category_totals(), other.category_totals()
+        for c in CATEGORIES:
+            assert cmp["removed"][c] == pytest.approx(bt[c] - ot[c])
+
+
+# ---------------------------------------------------------------------------
+# metrics wired into the runtime
+# ---------------------------------------------------------------------------
+class TestRuntimeMetrics:
+    def test_metrics_never_change_decisions(self):
+        # same seed, metrics on vs. off: identical event signature (the
+        # info annotations metrics add are not part of the signature)
+        for spec, kw in (
+            (PipelineSpec(4, 6), dict(mode="hint", hint=HintKind.BF)),
+            (dag_spec(4), dict(mode="hint", hint=HintKind.BF)),
+            (PipelineSpec(4, 6, split_backward=True),
+             dict(mode="hint", hint=HintKind.BFW, w_defer_cap=2)),
+        ):
+            cm = CostModel.uniform(spec.num_stages, seed=7)
+            _, bare = run_recorded(spec, cm, seed=7, **kw)
+            _, inst = run_recorded(spec, cm, seed=7,
+                                   metrics=MetricsRegistry(), **kw)
+            assert inst.signature() == bare.signature()
+
+    def test_dispatch_and_mailbox_counts(self):
+        spec = PipelineSpec(4, 6)
+        reg = MetricsRegistry()
+        cfg = ActorConfig(mode="hint", hint=HintKind.BF, seed=7, metrics=reg)
+        ActorDriver(spec, det_costs(4), cfg).run()
+
+        totals = reg.totals()
+        assert sum(totals["dispatches"].values()) == spec.total_tasks()
+        assert totals["dispatches"]["F"] == 4 * 6
+        assert totals["dispatches"]["B"] == 4 * 6
+        assert totals["dispatches"]["W"] == 0
+        assert sum(totals["dispatch_paths"].values()) == spec.total_tasks()
+        for sh in reg.shards():
+            # everything buffered is eventually consumed; some dispatches
+            # (the last stage's locally-enabled loss B) bypass the mailbox
+            assert sum(sh.dequeues) == sum(sh.enqueues)
+            assert sum(sh.dequeues) <= sum(sh.dispatches)
+            assert sh.busy > 0.0
+            assert sh.ready_depth.count == sum(sh.dispatches)
+            # transport latency sampled once per message-completing envelope
+            assert sh.comm_ewma.value is None or sh.comm_ewma.value >= 0.0
+        # interior stages receive messages -> comm EWMAs populated
+        assert reg.shards()[1].comm_ewma.count > 0
+        assert json.dumps(reg.to_json())
+        assert "total dispatches" in reg.report()
+
+    def test_tp_gate_metrics(self):
+        spec = PipelineSpec(3, 4)
+        reg = MetricsRegistry()
+        cfg = ActorConfig(mode="hint", hint=HintKind.BF, seed=9,
+                          tp_degree=2, metrics=reg)
+        ActorDriver(spec, det_costs(3), cfg).run()
+        t = reg.totals()
+        # every cross-stage message set needs both ranks: the first rank's
+        # arrival holds, the second admits
+        assert t["tp_admits"] > 0
+        assert t["tp_holds"] > 0
+        spread = sum(sh.tp_spread.count for sh in reg.shards())
+        assert spread == t["tp_admits"]
+
+    def test_wcap_and_backlog_metrics(self):
+        spec = PipelineSpec(3, 6, split_backward=True)
+        reg = MetricsRegistry()
+        cfg = ActorConfig(mode="hint", hint=HintKind.BFW, seed=7,
+                          w_defer_cap=1, metrics=reg)
+        ActorDriver(spec, det_costs(3, w=1.0), cfg).run()
+        t = reg.totals()
+        assert t["dispatches"]["W"] == 3 * 6
+        assert any(sh.w_backlog_peak > 0 for sh in reg.shards())
+
+    def test_cost_table_snapshot_matches_shards(self):
+        spec = PipelineSpec(3, 4)
+        reg = MetricsRegistry()
+        cfg = ActorConfig(mode="hint", hint=HintKind.BF, seed=5, metrics=reg)
+        ActorDriver(spec, CostModel.uniform(3, seed=5), cfg).run()
+        table = reg.cost_table()
+        for sh in reg.shards():
+            for k in (Kind.F, Kind.B):
+                assert table.value(sh.stage, k) == pytest.approx(
+                    sh.cost_ewma[k].value)
+                assert table.samples(sh.stage, k) == sh.cost_ewma[k].count
+        # snapshots feed hint synthesis as plain CostModels
+        cm = table.as_cost_model()
+        assert cm.f_cost.shape == (3,)
+
+    def test_registry_accumulates_across_steps(self):
+        spec = PipelineSpec(3, 4)
+        reg = MetricsRegistry()
+        for step in range(2):
+            cfg = ActorConfig(mode="hint", hint=HintKind.BF, seed=step,
+                              metrics=reg)
+            ActorDriver(spec, det_costs(3), cfg).run()
+        assert sum(reg.totals()["dispatches"].values()) == \
+            2 * spec.total_tasks()
+
+    def test_shard_auto_extends(self):
+        reg = MetricsRegistry()
+        assert reg.num_stages == 0
+        reg.shard(3).on_dequeue(Kind.F)
+        assert reg.num_stages == 4
+
+    def test_divergence_slots(self):
+        spec = PipelineSpec(4, 6)
+        reg = MetricsRegistry()
+        cfg = ActorConfig(mode="hint", hint=HintKind.BF, seed=7, metrics=reg)
+        ActorDriver(spec, det_costs(4), cfg).run()
+        for sh in reg.shards():
+            # every hint-path dispatch lands in exactly one slot
+            assert sum(sh.divergence) == sh.dispatch_paths["hint"]
+            assert sh.hint_divergences() == sum(sh.divergence[1:])
+
+
+class TestMetricsRecordReplay:
+    def test_metrics_annotated_trace_replays_exactly(self, tmp_path):
+        spec = PipelineSpec(4, 6)
+        cm = CostModel.uniform(4, seed=13)
+        _, trace = run_recorded(spec, cm, mode="hint", hint=HintKind.BF,
+                                seed=13, metrics=MetricsRegistry())
+        # the metrics annotations (ewma on COMPLETE, slot on DISPATCH)
+        # survive the save/load roundtrip ...
+        path = tmp_path / "trace.jsonl"
+        trace.save(str(path))
+        loaded = Trace.load(str(path))
+        assert loaded.signature() == trace.signature()
+        assert any("ewma" in ev.info for ev in loaded.events
+                   if ev.kind == _tr.COMPLETE)
+        # ... and the replay oracle tolerates them (time-exact sim replay)
+        rdriver = ActorDriver(
+            spec, None, ActorConfig(record_trace=True, replay=loaded))
+        rdriver.run()
+        assert rdriver.trace.signature(include_time=True) == \
+            trace.signature(include_time=True)
+
+    def test_durations_keyed_by_full_identity(self):
+        spec = PipelineSpec(3, 4, split_backward=True)
+        cm = det_costs(3).with_split_backward()
+        _, trace = run_recorded(spec, cm, mode="hint", hint=HintKind.BFW,
+                                seed=7)
+        durs = trace.durations()
+        # no collapsing across kind/stage/mb: one entry per task
+        assert len(durs) == spec.total_tasks()
+        # duplicate COMPLETEs keep the first duration
+        ev = next(e for e in trace.events
+                  if e.kind == _tr.COMPLETE and "dur" in e.info)
+        forged = Trace(meta=dict(trace.meta), events=list(trace.events))
+        forged.events.append(_tr.TraceEvent(
+            lc=10**9, kind=_tr.COMPLETE, stage=ev.stage, task=ev.task,
+            t=ev.t, info={"dur": ev.info["dur"] + 123.0}))
+        assert forged.durations() == durs

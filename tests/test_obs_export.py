@@ -1,0 +1,147 @@
+"""Perfetto / Chrome trace-event export (repro.obs.export).
+
+The exporter's output is consumed by an external tool (ui.perfetto.dev),
+so these tests pin the *format contract*: structural schema validity, one
+complete-event slice per executed task, paired flow arrows per delivered
+envelope, and a lossless JSON round trip — on chain, DAG, split-backward
+and chaos runs from both recording substrates.
+"""
+import json
+
+import pytest
+
+from repro.core import CostModel, HintKind, JitterModel, PipelineSpec, StageGraph
+from repro.obs import export_perfetto, to_perfetto, validate_chrome_trace
+from repro.runtime.rrfp import CHAOS_LEVELS, ActorConfig, ActorDriver
+from repro.runtime.rrfp import trace as _tr
+
+
+def recorded_trace(spec, cm, **cfg_kw):
+    driver = ActorDriver(spec, cm, ActorConfig(record_trace=True, **cfg_kw))
+    driver.run()
+    return driver.trace
+
+
+def det_costs(S, **kw):
+    return CostModel.uniform(S, comm_base=1e-3,
+                             compute_jitter=JitterModel(),
+                             comm_jitter=JitterModel(), **kw)
+
+
+def dag_spec(num_mb=4):
+    g = StageGraph(5, ((0, 2), (1, 2), (2, 3), (3, 4)))
+    return PipelineSpec(5, num_mb, graph=g)
+
+
+def slices(doc):
+    return [e for e in doc["traceEvents"]
+            if e["ph"] == "X" and e.get("cat") == "task"]
+
+
+class TestPerfettoExport:
+    def test_chain_schema_and_slice_count(self):
+        spec = PipelineSpec(4, 6)
+        trace = recorded_trace(spec, det_costs(4), mode="hint",
+                               hint=HintKind.BF, seed=7)
+        doc = to_perfetto(trace)
+        validate_chrome_trace(doc)
+        # one X slice per executed task, on the right process track
+        xs = slices(doc)
+        assert len(xs) == spec.total_tasks()
+        assert {e["pid"] for e in xs} == set(range(spec.num_stages))
+        # process metadata names every stage track
+        names = [e for e in doc["traceEvents"]
+                 if e["ph"] == "M" and e["name"] == "process_name"]
+        assert len(names) == spec.num_stages
+        # queue-depth counters ride along
+        assert any(e["ph"] == "C" and e["name"] == "queue_depth"
+                   for e in doc["traceEvents"])
+
+    def test_flow_arrows_pair_send_to_deliver(self):
+        spec = PipelineSpec(3, 4)
+        trace = recorded_trace(spec, det_costs(3), mode="hint",
+                               hint=HintKind.BF, seed=7)
+        doc = to_perfetto(trace)
+        validate_chrome_trace(doc)  # includes s/f pairing + ordering
+        starts = [e for e in doc["traceEvents"] if e["ph"] == "s"]
+        finishes = [e for e in doc["traceEvents"] if e["ph"] == "f"]
+        delivered = sum(1 for ev in trace.events if ev.kind == _tr.DELIVER)
+        assert len(starts) == len(finishes) == delivered
+        # every arrow originates at its SEND's stage and time
+        send_by_seq = {ev.info["seq"]: ev for ev in trace.events
+                       if ev.kind == _tr.SEND}
+        for s in starts:
+            ev = send_by_seq[s["id"]]
+            assert s["pid"] == ev.stage
+            assert s["ts"] == pytest.approx(ev.t * 1e6)
+
+    def test_split_backward_slice_names(self):
+        spec = PipelineSpec(3, 4, split_backward=True)
+        cm = det_costs(3).with_split_backward()
+        trace = recorded_trace(spec, cm, mode="hint", hint=HintKind.BFW,
+                               seed=7)
+        doc = to_perfetto(trace)
+        validate_chrome_trace(doc)
+        names = {e["name"].split()[0] for e in slices(doc)}
+        assert names == {"F", "dX", "dW"}
+        # the deferred-W backlog counter is emitted on split specs
+        assert any(e["ph"] == "C" and e["name"] == "w_backlog"
+                   for e in doc["traceEvents"])
+
+    def test_dag_and_chaos_traces_validate(self):
+        for spec, kw in (
+            (dag_spec(4), {}),
+            (PipelineSpec(4, 4), {"chaos": CHAOS_LEVELS["C2"]}),
+        ):
+            cm = CostModel.uniform(spec.num_stages, seed=3)
+            trace = recorded_trace(spec, cm, mode="hint", hint=HintKind.BF,
+                                   seed=3, **kw)
+            doc = to_perfetto(trace)
+            validate_chrome_trace(doc)
+            assert len(slices(doc)) == spec.total_tasks()
+
+    def test_chaos_duplicates_get_their_own_arrows(self):
+        spec = PipelineSpec(4, 6)
+        cm = CostModel.uniform(4, seed=21)
+        trace = recorded_trace(spec, cm, mode="hint", hint=HintKind.BF,
+                               seed=21, chaos=CHAOS_LEVELS["C3"])
+        doc = to_perfetto(trace)
+        validate_chrome_trace(doc)
+        finishes = [e for e in doc["traceEvents"] if e["ph"] == "f"]
+        delivered = sum(1 for ev in trace.events if ev.kind == _tr.DELIVER)
+        assert len(finishes) == delivered  # duplicates included
+        # C3 injects stalls; they render as chaos-category slices
+        if any(ev.kind == _tr.STALL for ev in trace.events):
+            assert any(e.get("cat") == "chaos" for e in doc["traceEvents"])
+
+    def test_json_roundtrip_and_file_export(self, tmp_path):
+        spec = PipelineSpec(3, 4)
+        trace = recorded_trace(spec, det_costs(3), mode="hint",
+                               hint=HintKind.BF, seed=7)
+        path = tmp_path / "trace.perfetto.json"
+        export_perfetto(trace, str(path))
+        doc = json.loads(path.read_text())
+        validate_chrome_trace(doc)
+        assert doc == json.loads(json.dumps(to_perfetto(trace)))
+        # Trace.to_perfetto delegates to the same renderer
+        assert trace.to_perfetto() == to_perfetto(trace)
+        assert doc["otherData"]["num_stages"] == 3
+
+    def test_validator_rejects_malformed_docs(self):
+        with pytest.raises(AssertionError):
+            validate_chrome_trace({"traceEvents": []})
+        with pytest.raises(AssertionError):
+            validate_chrome_trace({"traceEvents": [{"ph": "??"}]})
+        with pytest.raises(AssertionError):  # X slice missing dur
+            validate_chrome_trace({"traceEvents": [
+                {"ph": "X", "name": "F", "pid": 0, "tid": 0, "ts": 1.0}]})
+        with pytest.raises(AssertionError):  # dangling flow start
+            validate_chrome_trace({"traceEvents": [
+                {"ph": "s", "name": "m", "pid": 0, "tid": 0, "ts": 1.0,
+                 "id": 4}]})
+        with pytest.raises(AssertionError):  # flow finishing before start
+            validate_chrome_trace({"traceEvents": [
+                {"ph": "s", "name": "m", "pid": 0, "tid": 0, "ts": 5.0,
+                 "id": 4},
+                {"ph": "f", "name": "m", "pid": 1, "tid": 0, "ts": 1.0,
+                 "id": 4}]})
