@@ -1,0 +1,163 @@
+"""Recovery benchmark: MTTR + post-recovery throughput under fail-stop
+faults (emits ``BENCH_recovery.json``).
+
+For each chaos level C0..C3 (the fail-stop fault is layered *on top of* the
+level's latency/reorder/duplication/straggler noise), each workload (linear
+chain and branch+fusion multimodal DAG) and each recovery mode (respawn =
+standby host, remap = fold the dead stage onto a surviving neighbor), runs
+seeded iterations on the sim substrate in which a mid-pipeline stage is
+killed (or permanently stalled) partway through the iteration and the run
+must finish under ``ActorConfig.recover``.  Reports:
+
+* **MTTR** (mean time to repair: fault injection -> respawned stage
+  dispatching again), decomposed nowhere — it is detection (heartbeat
+  deadline) + restore cost by construction;
+* **post-recovery throughput** relative to pre-failure throughput (tasks
+  completed per second after RECOVERY_END vs before the fault) — respawn
+  should recover the full rate, remap pays the co-hosting tax;
+* **makespan overhead** vs the same scenario without the fault;
+* the count of runs on which the *recovery-aware* conformance invariants
+  held (``check_recovery_exactly_once`` et al. via ``conformance.holds``)
+  — the exactly-once claim as a measured quantity.
+
+    PYTHONPATH=src python -m benchmarks.run --recovery
+
+Set ``REPRO_SMOKE=1`` to shrink the sweep for CI smoke runs.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+
+import numpy as np
+
+from repro.core import (
+    CostModel,
+    HintKind,
+    PipelineSpec,
+    StageGraph,
+    multimodal_stage_flops,
+)
+from repro.runtime.rrfp import CHAOS_LEVELS, ActorConfig, ActorDriver
+from repro.runtime.rrfp.conformance import holds as invariants_hold
+
+S, M = 8, 32
+ITERS = 4
+FAIL_KINDS_CYCLE = ("kill", "permanent_stall")
+
+
+def _chain_workload() -> tuple[PipelineSpec, CostModel]:
+    spec = PipelineSpec(S, M)
+    costs = CostModel.from_stage_flops(
+        multimodal_stage_flops(4e12, 2e12, S), comm_base=2e-3, seed=0)
+    return spec, costs
+
+
+def _dag_workload() -> tuple[PipelineSpec, CostModel]:
+    """Branch+fusion: 3-stage encoder ∥ text frontend -> fusion -> 2-stage
+    LM chain (7 stages)."""
+    enc, lm = 3, 2
+    n = enc + 1 + lm + 1
+    edges = [(s, s + 1) for s in range(enc - 1)]
+    edges += [(enc - 1, enc + 1), (enc, enc + 1)]
+    edges += [(s, s + 1) for s in range(enc + 1, n - 1)]
+    graph = StageGraph(n, tuple(edges))
+    spec = PipelineSpec(n, M, graph=graph)
+    costs = CostModel.uniform(n, f=1.0, b=2.0, comm_base=2e-3, seed=0)
+    return spec, costs
+
+
+def _throughput(trace, lo: float, hi: float) -> float:
+    """Completed tasks per second inside the wall-clock window [lo, hi)."""
+    if hi <= lo:
+        return 0.0
+    n = sum(1 for ev in trace.events
+            if ev.kind == "complete" and lo <= ev.t < hi)
+    return n / (hi - lo)
+
+
+def run_recovery_bench() -> dict:
+    smoke = bool(os.environ.get("REPRO_SMOKE"))
+    iters = 1 if smoke else ITERS
+    levels = ["C0", "C2"] if smoke else list(CHAOS_LEVELS)
+    workloads = {"chain": _chain_workload(), "multimodal_dag": _dag_workload()}
+    modes = ("respawn",) if smoke else ("respawn", "remap")
+    rows = []
+    for level in levels:
+        base_chaos = CHAOS_LEVELS[level]
+        for wl_name, (spec, costs) in workloads.items():
+            fail_stage = spec.num_stages // 2
+            for rmode in modes:
+                mttrs, overheads, post_ratio, ok = [], [], [], 0
+                for i in range(iters):
+                    chaos = dataclasses.replace(
+                        base_chaos, seed=100 + i, fail_stage=fail_stage,
+                        fail_kind=FAIL_KINDS_CYCLE[i % 2],
+                        fail_after=3 + 5 * i)
+                    cfg = ActorConfig(
+                        mode="hint", hint=HintKind.BF, seed=1000 * i,
+                        chaos=chaos, record_trace=True, recover=True,
+                        recovery_mode=rmode)
+                    driver = ActorDriver(spec, costs, cfg)
+                    result = driver.run()
+                    trace = driver.trace
+                    if invariants_hold(trace, spec, cfg):
+                        ok += 1
+                    (w,) = trace.recovery_windows()
+                    mttrs.append(w["t_end"] - w["t_fail"])
+                    calm = ActorDriver(
+                        spec, costs,
+                        dataclasses.replace(
+                            cfg, recover=False,
+                            chaos=dataclasses.replace(chaos, fail_stage=-1)))
+                    calm_res = calm.run()
+                    overheads.append(result.makespan - calm_res.makespan)
+                    pre = _throughput(trace, 0.0, w["t_fail"])
+                    post = _throughput(trace, w["t_end"], result.makespan)
+                    post_ratio.append(post / max(pre, 1e-12))
+                rows.append({
+                    "level": level,
+                    "workload": wl_name,
+                    "recovery_mode": rmode,
+                    "fail_stage": fail_stage,
+                    "runs": iters,
+                    "exactly_once_ok": ok,
+                    "mttr_s": float(np.mean(mttrs)),
+                    "mttr_std": float(np.std(mttrs)),
+                    "makespan_overhead_s": float(np.mean(overheads)),
+                    "post_recovery_throughput_ratio":
+                        float(np.mean(post_ratio)),
+                })
+    return {
+        "spec": {
+            "chain": {"stages": S, "microbatches": M},
+            "multimodal_dag": {
+                "stages": workloads["multimodal_dag"][0].num_stages,
+                "microbatches": M},
+            "iters": iters,
+            "fail_kinds": list(FAIL_KINDS_CYCLE),
+        },
+        "rows": rows,
+    }
+
+
+def emit_json(path: str = "BENCH_recovery.json") -> dict:
+    report = run_recovery_bench()
+    with open(path, "w") as f:
+        json.dump(report, f, indent=2)
+    return report
+
+
+def recovery_rows(json_path: str = "BENCH_recovery.json") -> list[tuple]:
+    """CSV rows for ``benchmarks.run``."""
+    report = emit_json(json_path)
+    out = []
+    for r in report["rows"]:
+        out.append((
+            f"recovery/{r['level']}/{r['workload']}/{r['recovery_mode']}",
+            r["mttr_s"] * 1e6,
+            f"exactly_once={r['exactly_once_ok']}/{r['runs']},"
+            f"post_tput={r['post_recovery_throughput_ratio']:.2f}x,"
+            f"overhead={r['makespan_overhead_s']*1e3:.1f}ms"))
+    return out

@@ -43,6 +43,11 @@ def main() -> None:
     ap.add_argument("--chaos", action="store_true",
                     help="actor backend: run the fault-injection sweep "
                          "with conformance checks (emits BENCH_chaos.json)")
+    ap.add_argument("--recovery", action="store_true",
+                    help="actor backend: run the fail-stop recovery sweep — "
+                         "MTTR, post-recovery throughput and exactly-once "
+                         "conformance across chaos levels × workloads × "
+                         "respawn/remap (emits BENCH_recovery.json)")
     ap.add_argument("--multimodal", action="store_true",
                     help="actor backend: run the multimodal DAG sweep — "
                          "readiness-driven vs pre-committed fixed order on "
@@ -85,13 +90,13 @@ def main() -> None:
                 "--hint bfw and --split-backward go together: the BFW hint "
                 "needs W tasks, which only exist under split backward")
         probe = args.metrics_report or args.export_perfetto
-        if sum([args.chaos, bfw, args.multimodal, args.dispatch,
-                args.bubbles, bool(probe)]) > 1:
-            raise SystemExit("--chaos, the BFW sweep, --multimodal, "
-                             "--dispatch, --bubbles and the telemetry probe "
-                             "(--metrics-report/--export-perfetto) are "
-                             "separate reports; run them as separate "
-                             "invocations")
+        if sum([args.chaos, args.recovery, bfw, args.multimodal,
+                args.dispatch, args.bubbles, bool(probe)]) > 1:
+            raise SystemExit("--chaos, --recovery, the BFW sweep, "
+                             "--multimodal, --dispatch, --bubbles and the "
+                             "telemetry probe (--metrics-report/"
+                             "--export-perfetto) are separate reports; run "
+                             "them as separate invocations")
         if probe:
             from benchmarks.bubble_decomposition import telemetry_probe
 
@@ -125,6 +130,11 @@ def main() -> None:
 
             json_out = args.json_out or "BENCH_chaos.json"
             label = "chaos"
+        elif args.recovery:
+            from benchmarks.recovery import recovery_rows as rows_fn
+
+            json_out = args.json_out or "BENCH_recovery.json"
+            label = "recovery"
         elif bfw:
             from benchmarks.bfw_compare import bfw_rows as rows_fn
 

@@ -121,6 +121,21 @@ class CheckpointStore:
 
     def restore(self, step: int, target_tree, shardings=None):
         """Load step into ``target_tree``'s structure (and shardings)."""
+        arrays, manifest = self._read_arrays(step)
+        tree = _unflatten_into(target_tree, arrays)
+        if shardings is not None:
+            tree = jax.device_put(tree, shardings)
+        return tree, manifest["meta"]
+
+    def restore_host(self, step: int, target_tree):
+        """Load step into ``target_tree``'s structure as *host* numpy arrays
+        (no device placement) — the recovery coordinator's restore path: a
+        respawned stage actor rebuilds its program from the last committed
+        step without assuming any device mesh is available yet."""
+        arrays, manifest = self._read_arrays(step)
+        return _unflatten_into(target_tree, arrays), manifest["meta"]
+
+    def _read_arrays(self, step: int):
         d = os.path.join(self.dir, f"step_{step}")
         with open(os.path.join(d, "manifest.json")) as f:
             manifest = json.load(f)
@@ -128,7 +143,4 @@ class CheckpointStore:
         for p in range(manifest["shards"]):
             with np.load(os.path.join(d, f"shard_{p}.npz")) as z:
                 arrays.update({k: z[k] for k in z.files})
-        tree = _unflatten_into(target_tree, arrays)
-        if shardings is not None:
-            tree = jax.device_put(tree, shardings)
-        return tree, manifest["meta"]
+        return arrays, manifest

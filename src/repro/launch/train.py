@@ -357,7 +357,8 @@ def train_actor(args) -> list[float]:
     acfg = ActorConfig(mode=mode, hint=hint, fixed_order=fixed,
                        w_defer_cap=args.w_defer_cap,
                        deadlock_timeout=args.deadlock_timeout,
-                       chaos=chaos,
+                       chaos=chaos, recover=args.recover,
+                       hb_deadline=args.hb_deadline,
                        replay=replay, metrics=metrics_reg)
 
     opt_cfg = AdamWConfig(lr=args.lr, warmup_steps=min(20, args.steps),
@@ -370,6 +371,15 @@ def train_actor(args) -> list[float]:
 
     apply_update = make_host_update(opt_cfg)
 
+    store = CheckpointStore(args.ckpt_dir) if args.ckpt_dir else None
+    start_step = 0
+    if store and args.resume and store.latest_step() is not None:
+        start_step = store.latest_step()
+        state, _ = store.restore(
+            start_step, {"params": params, "m": mstate, "v": vstate})
+        params, mstate, vstate = state["params"], state["m"], state["v"]
+        print(f"resumed from step {start_step}")
+
     # The monitor re-synthesizes precommitted tables through the DES engine,
     # whose baseline orders model a fused backward — feed it the fused twin
     # of the spec (same stages/microbatches, W folded into B).
@@ -381,7 +391,7 @@ def train_actor(args) -> list[float]:
           f"stages={args.stages}  microbatches={args.microbatches}")
     losses: list[float] = []
     obs_trace = None
-    for step in range(args.steps):
+    for step in range(start_step, args.steps):
         batch = synth_batch(cfg, batch_size, args.seq, seed=args.seed,
                             step=step)
         sp, io = params["sp"], params["io"]
@@ -391,16 +401,38 @@ def train_actor(args) -> list[float]:
                 split_backward=split)
             for s in range(args.stages)
         ]
+
+        def respawn(s, programs=programs, sp=sp, io=io, batch=batch):
+            # the stage's in-memory state died with it: rebuild its program
+            # from the latest checkpoint (under --ckpt-every 1 that is
+            # exactly the params this step started from) or, before the
+            # first checkpoint, from the live step-start params
+            sp_r, io_r = sp, io
+            if store is not None and store.latest_step() is not None:
+                host, _ = store.restore_host(
+                    store.latest_step(),
+                    {"params": {"sp": sp, "io": io}})
+                sp_r = jax.tree.map(jnp.asarray, host["params"]["sp"])
+                io_r = jax.tree.map(jnp.asarray, host["params"]["io"])
+                print(f"recover: stage {s} restored from checkpoint step "
+                      f"{store.latest_step()}")
+            programs[s] = ActorStageProgram(
+                fns, s, jax.tree.map(lambda x: x[s], sp_r), io_r, batch,
+                split_backward=split)
+            return programs[s]
+
         t0 = time.time()
         # recording costs lock traffic on the dispatch path: enable it only
         # for the step whose trace is actually saved
         record_this = (bool(args.record_trace) or bool(
-            getattr(args, "export_perfetto", None))) and step == 0
+            getattr(args, "export_perfetto", None))) and step == start_step
+        acfg_step = dataclasses.replace(acfg, respawn=respawn) \
+            if args.recover else acfg
         driver = ActorDriver(
             spec, None,
-            dataclasses.replace(acfg, record_trace=True) if record_this
-            else acfg)
-        result = driver.run_threaded(list(programs))
+            dataclasses.replace(acfg_step, record_trace=True) if record_this
+            else acfg_step)
+        result = driver.run_threaded(programs)
         d_sp = jax.tree.map(lambda *xs: jnp.stack(xs),
                             *[p.d_stage for p in programs])
         d_io = jax.tree.map(lambda *xs: sum(xs[1:], xs[0]),
@@ -429,6 +461,10 @@ def train_actor(args) -> list[float]:
               f"{dt*1e3:7.1f} ms  makespan {result.makespan*1e3:7.1f} ms  "
               f"blocking {bd['blocking']*1e3:6.1f} ms"
               + ("  [replan]" if new_table is not None else ""))
+        if store and (step + 1) % args.ckpt_every == 0:
+            store.save(step + 1,
+                       {"params": params, "m": mstate, "v": vstate},
+                       meta={"arch": args.arch, "step": step + 1})
     if monitor.replans:
         print(f"straggler monitor triggered {monitor.replans} replan(s)")
     _obs_finish(args, metrics_reg, obs_trace)
@@ -498,14 +534,33 @@ def main() -> None:
                     help="actor runtime: export the step-0 trace as Chrome "
                          "trace-event JSON (open at ui.perfetto.dev); "
                          "implies step-0 recording")
+    ap.add_argument("--recover", action="store_true",
+                    help="actor runtime: treat a fail-stop fault (--chaos "
+                         "fail_stage=S[,fail_kind=kill|permanent_stall,"
+                         "fail_after=K]) as recoverable — detect the death, "
+                         "fence the stale epoch, respawn the stage from the "
+                         "latest checkpoint (--ckpt-dir) or live params, and "
+                         "replay its in-flight microbatches")
+    ap.add_argument("--hb-deadline", type=float, default=2.0,
+                    help="actor runtime, --recover: seconds without stage "
+                         "progress before a permanent stall is declared dead")
     ap.add_argument("--full-size", action="store_true")
     ap.add_argument("--lr", type=float, default=1e-3)
     ap.add_argument("--ckpt-dir", default=None)
-    ap.add_argument("--ckpt-every", type=int, default=10)
+    ap.add_argument("--ckpt-every", type=int, default=None,
+                    help="checkpoint cadence in steps (default 10; under "
+                         "--recover default 1, so the respawn path restores "
+                         "exactly the params the failed step started from)")
     ap.add_argument("--resume", action="store_true")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
+    if args.ckpt_every is None:
+        args.ckpt_every = 1 if args.recover else 10
 
+    if args.recover and not (args.runtime == "actor"
+                             and args.workload == "language"):
+        raise SystemExit("--recover drives the thread-per-stage actor "
+                         "runtime; add --runtime actor (language workload)")
     if args.workload == "multimodal":
         args.runtime = "actor"  # the DAG only runs on the actor runtime
         train_multimodal(args)

@@ -29,6 +29,11 @@ that ends the gap:
 ``backpressure``
     the stage sat idle at its App. C F/B imbalance limit, or the ending
     dispatch itself took the backpressure-drain path.
+``recovery``
+    idle time inside a fault-recovery window (FAIL .. RECOVERY_END of any
+    stage): the outage itself plus the time survivors spent stalled on the
+    dead stage.  Without this category a killed stage's gap would be
+    misattributed to ``dependency_wait``/``starvation``.
 ``drain``
     the trailing gap after the stage's last COMPLETE — pipeline drain.
 
@@ -36,8 +41,14 @@ Within a gap the precedence is dependency_wait -> starvation -> tp_gate ->
 (backpressure | starvation); breakpoints are clamped monotone, and the last
 segment absorbs the float residue, so per-stage categories sum *exactly* to
 the stage's idle time (makespan - busy) — the invariant the acceptance
-tests pin down.  ``warmup`` and ``drain`` are reported separately but form
-one paper-level category (fill/drain bubbles).
+tests pin down.  Each interior segment's overlap with the run's (merged)
+recovery windows is carved out into ``recovery``, which moves time between
+categories without changing the total, so the exact-attribution invariant
+survives recovered traces.  On such traces each task's DISPATCH/COMPLETE
+pair is taken from its *highest-epoch* incarnation (a doomed dispatch that
+never completed must not make the outage look busy).  ``warmup`` and
+``drain`` are reported separately but form one paper-level category
+(fill/drain bubbles).
 """
 from __future__ import annotations
 
@@ -51,7 +62,7 @@ from repro.runtime.rrfp import trace as _tr
 #: attribution categories, report order (warmup/drain = the paper's
 #: fill/drain class, split so leading and trailing bubbles stay visible)
 CATEGORIES = ("warmup", "dependency_wait", "starvation", "tp_gate",
-              "backpressure", "drain")
+              "backpressure", "recovery", "drain")
 
 
 def spec_from_meta(meta: dict) -> PipelineSpec:
@@ -159,29 +170,51 @@ def decompose(trace: _tr.Trace, spec: PipelineSpec | None = None,
     mode = meta.get("mode", "hint")
     S = spec.num_stages
 
-    # first-event-wins projections (duplicate-tolerant)
-    dispatches: list[list[_tr.TraceEvent]] = [[] for _ in range(S)]
-    complete_t: dict[Task, float] = {}
+    # Highest-epoch-first-occurrence projections: on a failure-free trace
+    # (all epochs 0) this is plain first-event-wins (duplicate-tolerant);
+    # on a recovered trace each task's dispatch/complete comes from its
+    # final incarnation, so a doomed dispatch that never completed cannot
+    # pair with its post-recovery completion and swallow the outage.
+    best_disp: dict[Task, _tr.TraceEvent] = {}
+    best_comp: dict[Task, _tr.TraceEvent] = {}
     enqueue_t: dict[Task, float] = {}
     tp_first_hold: dict[Task, float] = {}
-    fb_completes: list[dict[Kind, list[float]]] = [
-        {Kind.F: [], Kind.B: []} for _ in range(S)]
-    seen_dispatch: set[Task] = set()
     for ev in trace.events:
         if ev.kind == _tr.DISPATCH:
-            if ev.task not in seen_dispatch:
-                seen_dispatch.add(ev.task)
-                dispatches[ev.stage].append(ev)
+            cur = best_disp.get(ev.task)
+            if cur is None or ev.epoch > cur.epoch:
+                best_disp[ev.task] = ev
         elif ev.kind == _tr.COMPLETE:
-            if ev.task not in complete_t:
-                complete_t[ev.task] = ev.t
-                if ev.task.kind in (Kind.F, Kind.B):
-                    fb_completes[ev.stage][ev.task.kind].append(ev.t)
+            cur = best_comp.get(ev.task)
+            if cur is None or ev.epoch > cur.epoch:
+                best_comp[ev.task] = ev
         elif ev.kind == _tr.ENQUEUE:
             # last edge/rank admission = the task became consumable
             enqueue_t.setdefault(ev.task, ev.t)
         elif ev.kind == _tr.TP_HOLD:
             tp_first_hold.setdefault(ev.task, ev.t)
+    dispatches: list[list[_tr.TraceEvent]] = [[] for _ in range(S)]
+    for ev in sorted(best_disp.values(), key=lambda e: e.lc):
+        dispatches[ev.stage].append(ev)
+    complete_t: dict[Task, float] = {t: e.t for t, e in best_comp.items()}
+    fb_completes: list[dict[Kind, list[float]]] = [
+        {Kind.F: [], Kind.B: []} for _ in range(S)]
+    for ev in sorted(best_comp.values(), key=lambda e: e.t):
+        if ev.task.kind in (Kind.F, Kind.B):
+            fb_completes[ev.stage][ev.task.kind].append(ev.t)
+
+    # merged fault-recovery windows (FAIL .. RECOVERY_END), any stage
+    rec_spans = sorted((w["t_fail"], w["t_end"])
+                       for w in trace.recovery_windows())
+    merged: list[tuple[float, float]] = []
+    for w0, w1 in rec_spans:
+        if merged and w0 <= merged[-1][1]:
+            merged[-1] = (merged[-1][0], max(merged[-1][1], w1))
+        else:
+            merged.append((w0, w1))
+
+    def rec_overlap(lo: float, hi: float) -> float:
+        return sum(max(0.0, min(hi, w1) - max(lo, w0)) for w0, w1 in merged)
 
     makespan = float(meta.get("makespan") or
                      (max(complete_t.values()) if complete_t else 0.0))
@@ -211,7 +244,10 @@ def decompose(trace: _tr.Trace, spec: PipelineSpec | None = None,
                 continue
             gap = b - a
             if first:
-                bubbles["warmup"] += gap
+                # an outage before the first dispatch is not pipeline fill
+                ov = rec_overlap(a, b) if merged else 0.0
+                bubbles["warmup"] += gap - ov
+                bubbles["recovery"] += ov
                 first = False
                 continue
             # monotone breakpoints a <= p <= h <= r <= b
@@ -233,10 +269,28 @@ def decompose(trace: _tr.Trace, spec: PipelineSpec | None = None,
             starve = h - p
             tp = r - h
             tail = gap - dep - starve - tp  # exact residue: sums to gap
+            if merged:
+                # carve each segment's overlap with the recovery windows
+                # out into "recovery": time moves between categories, the
+                # total stays the gap, so exact attribution is preserved
+                for seg, lo, hi in (("dep", a, p), ("starve", p, h),
+                                    ("tp", h, r)):
+                    ov = rec_overlap(lo, hi)
+                    if seg == "dep":
+                        dep -= ov
+                    elif seg == "starve":
+                        starve -= ov
+                    else:
+                        tp -= ov
+                    bubbles["recovery"] += ov
             bubbles["dependency_wait"] += dep
             bubbles["starvation"] += starve
             bubbles["tp_gate"] += tp
             if tail > 0.0:
+                if merged:
+                    ov = min(rec_overlap(r, b), tail)
+                    bubbles["recovery"] += ov
+                    tail -= ov
                 backpressured = (
                     ev.info.get("path") == "backpressure"
                     or (mode == "hint" and buffer_limit > 0
@@ -245,7 +299,9 @@ def decompose(trace: _tr.Trace, spec: PipelineSpec | None = None,
                         else "starvation"] += tail
         tail_gap = makespan - prev_end
         if evs and tail_gap > 0.0:
-            bubbles["drain"] += tail_gap
+            ov = rec_overlap(prev_end, makespan) if merged else 0.0
+            bubbles["drain"] += tail_gap - ov
+            bubbles["recovery"] += ov
         elif not evs:
             # a stage that never dispatched is one long warmup bubble
             bubbles["warmup"] += makespan

@@ -46,6 +46,30 @@ def plan_remesh(alive_devices: int, prefer_model: int = 16,
     return best
 
 
+def remap_stages(num_stages: int, dead: int) -> list[int]:
+    """Host assignment after losing the device hosting stage ``dead``.
+
+    The re-map recovery path (no spare device to respawn onto): every stage
+    keeps its logical identity, the dead stage's actor is re-hosted on the
+    nearest surviving neighbor's device, and the pair time-share that
+    device.  ``plan_remesh`` validates that the surviving device set still
+    admits a mesh at all (the same feasibility rule full re-meshing uses);
+    the minimal-movement fold keeps every other stage's state in place so
+    only the dead stage restores from checkpoint.
+
+    Returns ``host_of``: stage index -> hosting device (device ids are the
+    original stage indices; ``dead`` appears as nobody's host).
+    """
+    if not (0 <= dead < num_stages):
+        raise ValueError(f"dead stage {dead} outside 0..{num_stages - 1}")
+    if num_stages < 2:
+        raise ValueError("cannot re-map a 1-stage pipeline")
+    plan_remesh(num_stages - 1, prefer_model=num_stages - 1, min_model=1)
+    host_of = list(range(num_stages))
+    host_of[dead] = dead - 1 if dead > 0 else dead + 1
+    return host_of
+
+
 def relayout_stage_params(old_model: ArchModel, new_num_stages: int,
                           stage_params_host):
     """Re-distribute per-layer params [S_old, l_max_old, ...] onto a new

@@ -13,10 +13,13 @@ Layering (bottom-up):
   transport -- SimTransport (virtual clock, injectable heavy-tailed latency)
                / ThreadTransport (thread-per-stage, real callables)
   chaos     -- CRN-keyed fault injection: per-edge latency, reorder,
-               duplication, stragglers, transient stalls (both substrates)
+               duplication, stragglers, transient stalls, fail-stop faults
+               (kill / permanent_stall) — both substrates
   actor     -- ready-set arbitration + App. C backpressure + thread loop
   driver    -- builds/wires everything; emits core.engine.RunResult traces,
-               records event traces, replays recorded runs
+               records event traces, replays recorded runs; with
+               ``ActorConfig.recover``, survives fail-stop faults (epoch
+               fencing + respawn/re-map + restore + replay, exactly-once)
 
 See ``docs/testing.md`` for the conformance invariants checked against
 recorded traces and how to record/replay a run.
@@ -24,10 +27,12 @@ recorded traces and how to record/replay a run.
 from repro.runtime.rrfp.actor import StageActor, TaskTrace
 from repro.runtime.rrfp.chaos import (
     CHAOS_LEVELS,
+    FAIL_KINDS,
     MODALITY_PROFILE_NAMES,
     ChaosConfig,
     ChaosEngine,
     ChaosThreadTransport,
+    StageFailure,
     modality_profile,
     parse_chaos,
 )
@@ -64,6 +69,7 @@ __all__ = [
     "ChaosThreadTransport",
     "EdgePayloads",
     "Envelope",
+    "FAIL_KINDS",
     "MODALITY_PROFILE_NAMES",
     "Mailbox",
     "modality_profile",
@@ -71,6 +77,7 @@ __all__ = [
     "ReplayOracle",
     "SimTransport",
     "StageActor",
+    "StageFailure",
     "TaskTrace",
     "ThreadTransport",
     "TPGroup",

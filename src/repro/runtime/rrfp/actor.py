@@ -109,6 +109,11 @@ class StageActor:
         self.stats = StageStats()
         self.traces: list[TaskTrace] = []
         self._total = spec.num_tasks_per_stage()
+        #: execution heartbeat (thread substrate): ``time.monotonic()`` at
+        #: which the currently-running ``work_fn`` started, or None when not
+        #: executing.  The recovery coordinator's watchdog reads this to
+        #: detect a permanently-stalled stage by heartbeat staleness.
+        self.exec_since: float | None = None
 
     # ---- readiness bookkeeping (call under the mailbox lock) ---------------
     def _is_ready(self, t: Task) -> bool:
@@ -356,7 +361,11 @@ class StageActor:
                 payload = self.begin(task, now=clock(), info=sel_info)
             start = clock()
             self.stats.blocking += max(0.0, start - idle_since)
-            out_payload = work_fn(task, payload)
+            self.exec_since = _time.monotonic()
+            try:
+                out_payload = work_fn(task, payload)
+            finally:
+                self.exec_since = None
             end = clock()
             self.stats.compute += end - start
             with self.mailbox.cond:

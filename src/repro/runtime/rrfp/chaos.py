@@ -28,7 +28,18 @@ Perturbations (all off by default):
   substrate;
 * **transient stalls** — with ``stall_prob`` per task, the stage blocks for
   an Exp(``stall_scale``) pause before executing (a GC pause / preemption
-  analog).
+  analog);
+* **fail-stop faults** — a stage *dies*: ``kill`` (the actor vanishes
+  mid-task; its in-memory state is lost) or ``permanent_stall`` (the actor
+  hangs forever — indistinguishable from death to the control plane, which
+  must detect it by heartbeat deadline rather than by a closed connection).
+  Either an explicit injection point (``fail_stage`` dies at its
+  ``fail_after``-th dispatch) or CRN-sampled per stage via ``fail_prob``,
+  keyed by (seed, stage) so a scenario's death point is a reproducible
+  function of the config.  With ``ActorConfig.recover`` the driver's
+  recovery coordinator survives the fault; without it, the fault is
+  *promoted to a detectable failure*: the run raises :class:`StageFailure`
+  instead of hanging.
 """
 from __future__ import annotations
 
@@ -42,6 +53,25 @@ from repro.core.taskgraph import Task
 
 from repro.runtime.rrfp.mailbox import Mailbox
 from repro.runtime.rrfp.messages import Envelope
+
+#: fail-stop fault kinds
+FAIL_KINDS = ("kill", "permanent_stall")
+
+
+class StageFailure(RuntimeError):
+    """A stage died (fail-stop fault) and no recovery coordinator was armed.
+
+    Raised instead of letting the run hang to its deadlock timeout: the
+    chaos ``kill`` / ``permanent_stall`` faults are *detectable* failures,
+    and an un-recovered run should fail fast and say why."""
+
+    def __init__(self, stage: int, fail_kind: str, detail: str = ""):
+        self.stage = stage
+        self.fail_kind = fail_kind
+        super().__init__(
+            f"stage {stage} suffered a fail-stop fault ({fail_kind})"
+            + (f": {detail}" if detail else "")
+            + "; enable ActorConfig.recover for elastic recovery")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -68,11 +98,27 @@ class ChaosConfig:
     #: per-task transient stage stall
     stall_prob: float = 0.0
     stall_scale: float = 0.0  # Exp() scale, seconds
+    #: fail-stop fault: explicit injection — this stage dies at the dispatch
+    #: of its ``fail_after``-th task (0-indexed; that task never completes
+    #: and the stage makes no further progress).  -1 disables.
+    fail_stage: int = -1
+    fail_kind: str = "kill"  # "kill" | "permanent_stall"
+    fail_after: int = 0
+    #: fail-stop fault: CRN-sampled — each stage independently dies with
+    #: this probability, at a death point drawn from (seed, stage)
+    fail_prob: float = 0.0
+
+    def __post_init__(self):
+        if self.fail_kind not in FAIL_KINDS:
+            raise ValueError(
+                f"fail_kind must be one of {FAIL_KINDS}, "
+                f"got {self.fail_kind!r}")
 
     def active(self) -> bool:
         return (self.latency_base > 0 or self.reorder_prob > 0
                 or self.duplicate_prob > 0 or bool(self.straggler)
-                or self.stall_prob > 0)
+                or self.stall_prob > 0 or self.fail_stage >= 0
+                or self.fail_prob > 0)
 
     def to_json(self) -> dict:
         d = dataclasses.asdict(self)
@@ -181,8 +227,10 @@ def parse_chaos(spec: str) -> ChaosConfig:
                 (int(s), float(f))
                 for s, f in (kv.split(":") for kv in val.split("+")))
             cfg = dataclasses.replace(cfg, straggler=pairs)
-        elif key in ("seed", "max_duplicates"):
+        elif key in ("seed", "max_duplicates", "fail_stage", "fail_after"):
             cfg = dataclasses.replace(cfg, **{key: int(val)})
+        elif key == "fail_kind":
+            cfg = dataclasses.replace(cfg, fail_kind=val)
         else:
             cfg = dataclasses.replace(cfg, **{key: float(val)})
     return cfg
@@ -258,6 +306,27 @@ class ChaosEngine:
         (stall + straggler emulation; compute itself cannot be scaled)."""
         factor = self.compute_scale(task.stage)
         return self.stall(task) + (factor - 1.0) * self.cfg.straggler_unit
+
+    # ---- fail-stop ---------------------------------------------------------
+    def fail_point(self, stage: int, n_tasks: int) -> tuple[str, int] | None:
+        """Does ``stage`` suffer a fail-stop fault this run, and when?
+
+        Returns ``(fail_kind, k)`` — the stage dies at the dispatch of its
+        k-th task (0-indexed) — or None.  The sampled path is keyed by
+        (seed, "fail", stage): a pure function of the config, so the same
+        scenario kills the same stage at the same point in every consumption
+        mode and on both substrates (CRN)."""
+        cfg = self.cfg
+        if cfg.fail_stage == stage:
+            # clamp into the stage's dispatch range so an armed fault always
+            # fires (a never-firing fault would hang the recovery coordinator)
+            return (cfg.fail_kind, min(max(0, cfg.fail_after), n_tasks - 1))
+        if cfg.fail_prob > 0:
+            rng = np.random.default_rng(
+                [cfg.seed & 0x7FFFFFFF, zlib.crc32(b"fail"), stage])
+            if rng.random() < cfg.fail_prob:
+                return (cfg.fail_kind, int(rng.integers(0, max(1, n_tasks))))
+        return None
 
 
 class ChaosThreadTransport:

@@ -28,7 +28,14 @@ mode under *any* variability, which is the paper's §3 correctness claim):
   order only when the hinted task is unready: no ready task of a preferred
   direction is skipped, and within a direction the App. A minimum ready
   candidate is picked;
-* **wcap path** — dispatches forced by the W cap actually retire a W.
+* **wcap path** — dispatches forced by the W cap actually retire a W;
+* **recovery exactly-once** — on a trace with recovery windows
+  (:meth:`Trace.recovery_windows`), no microbatch is lost or doubled across
+  the recovery boundary: every task still completes, repeats occur only on
+  a failed stage with each completion in a distinct recovery epoch (one per
+  incarnation — re-execution, never duplication), and every fenced envelope
+  was genuinely stale.  ``check_all`` dispatches between the plain and the
+  recovery-aware exactly-once form automatically.
 
 Deadlock-freedom is checked by construction: a run either completes or
 raises :class:`~repro.core.engine.DeadlockError`.
@@ -60,14 +67,67 @@ def check_exactly_once(trace: tr.Trace, spec: PipelineSpec) -> None:
 
 
 def check_dependency_order(trace: tr.Trace, spec: PipelineSpec) -> None:
-    """By logical clock, predecessors complete before a task dispatches."""
-    dispatch_lc = {ev.task: ev.lc for ev in trace.select(tr.DISPATCH)}
-    complete_lc = {ev.task: ev.lc for ev in trace.select(tr.COMPLETE)}
-    for t in spec.tasks():
-        for p in spec.predecessors(t):
-            assert complete_lc[p] < dispatch_lc[t], (
-                f"{t} dispatched (lc={dispatch_lc[t]}) before predecessor "
-                f"{p} completed (lc={complete_lc[p]})")
+    """By logical clock, predecessors complete before a task dispatches.
+
+    Every dispatch of a task (a recovered stage may dispatch a task once
+    per incarnation) must come after the *first* completion of each
+    predecessor: data a re-execution consumes was produced no later than
+    that."""
+    first_complete: dict = {}
+    for ev in trace.select(tr.COMPLETE):
+        first_complete.setdefault(ev.task, ev.lc)
+    preds = {t: spec.predecessors(t) for t in spec.tasks()}
+    for ev in trace.select(tr.DISPATCH):
+        for p in preds[ev.task]:
+            assert first_complete[p] < ev.lc, (
+                f"{ev.task} dispatched (lc={ev.lc}) before predecessor "
+                f"{p} completed (lc={first_complete[p]})")
+
+
+def check_recovery_exactly_once(trace: tr.Trace, spec: PipelineSpec) -> None:
+    """Recovery-aware exactly-once: nothing lost, nothing doubled.
+
+    On a trace with recovery windows: (1) every spec task completes at
+    least once — the failure lost no microbatch; (2) a task completes more
+    than once only on a stage that failed, with every completion in a
+    distinct recovery epoch — one execution per incarnation (the thread
+    substrate re-executes from scratch; duplicated *effects* are dropped by
+    the TP admission gate and idempotent per-task slots, so one completion
+    per incarnation is re-execution, not double application); (3) repeat
+    dispatches likewise only on failed stages; (4) every fenced envelope
+    carried an epoch strictly older than its mailbox's — fencing never
+    drops a live message."""
+    want = set(spec.tasks())
+    failed_stages = {w["stage"] for w in trace.recovery_windows()}
+    completes: dict = {}
+    for ev in trace.select(tr.COMPLETE):
+        completes.setdefault(ev.task, []).append(ev)
+    missing = want - set(completes)
+    assert not missing, (
+        f"{len(missing)} task(s) lost across recovery: "
+        f"{sorted(missing)[:6]}")
+    extra = set(completes) - want
+    assert not extra, f"completed tasks outside the spec: {sorted(extra)[:6]}"
+    for t, evs in completes.items():
+        if len(evs) == 1:
+            continue
+        assert t.stage in failed_stages, (
+            f"{t} completed {len(evs)}x on a stage that never failed")
+        epochs = [e.epoch for e in evs]
+        assert len(set(epochs)) == len(epochs), (
+            f"{t} completed twice within one incarnation "
+            f"(epochs={epochs}): a genuine duplicate, not a re-execution")
+    dispatched = Counter(ev.task for ev in trace.select(tr.DISPATCH))
+    missing = want - set(dispatched)
+    assert not missing, f"tasks never dispatched: {sorted(missing)[:6]}"
+    for t, n in dispatched.items():
+        assert n == 1 or t.stage in failed_stages, (
+            f"{t} dispatched {n}x on a stage that never failed")
+    for ev in trace.select(tr.FENCE):
+        assert ev.info["env_epoch"] < ev.info["mailbox_epoch"], (
+            f"lc={ev.lc}: fenced a live envelope for {ev.task} "
+            f"(env_epoch={ev.info['env_epoch']} >= "
+            f"mailbox_epoch={ev.info['mailbox_epoch']})")
 
 
 def check_fanin_admission(trace: tr.Trace, spec: PipelineSpec,
@@ -116,7 +176,15 @@ def check_backpressure(trace: tr.Trace, spec: PipelineSpec, limit: int,
     if mode != "hint" or spec.num_chunks != 1:
         return
     depth: Counter = Counter()
-    for ev in trace.select(tr.COMPLETE):
+    for ev in trace.events:
+        if ev.kind == tr.RECOVERY_BEGIN:
+            # a respawned incarnation starts from a clean F/B ledger; its
+            # completions are a fresh consistent sequence, so summing them
+            # onto the dead incarnation's would double count
+            depth[ev.stage] = 0
+            continue
+        if ev.kind != tr.COMPLETE:
+            continue
         if ev.task.kind == Kind.F:
             depth[ev.stage] += 1
         elif ev.task.kind == Kind.B:
@@ -172,8 +240,13 @@ def check_all(trace: tr.Trace, spec: PipelineSpec, config) -> None:
     """Every invariant, against one run's trace.  ``config`` is any object
     with ``mode`` / ``w_defer_cap`` / ``buffer_limit`` attributes
     (``ActorConfig`` in practice; kept duck-typed to avoid a driver
-    dependency)."""
-    check_exactly_once(trace, spec)
+    dependency).  Traces containing recovery windows get the
+    recovery-aware exactly-once form; every other invariant applies
+    unchanged across the recovery boundary."""
+    if trace.recovery_windows():
+        check_recovery_exactly_once(trace, spec)
+    else:
+        check_exactly_once(trace, spec)
     check_dependency_order(trace, spec)
     check_fanin_admission(trace, spec, getattr(config, "tp_degree", 1))
     check_w_cap(trace, config.w_defer_cap, config.mode)

@@ -37,6 +37,29 @@ Record / chaos / replay (the conformance machinery):
   one.  On the thread substrate replay is *order-exact*: the recorded
   per-stage dispatch orders are consumed as a pre-committed schedule, which
   pins the floating-point reduction order and therefore the loss/grad bits.
+
+Elastic fault recovery (``ActorConfig.recover``):
+
+A chaos ``kill`` / ``permanent_stall`` fault becomes a *recoverable event*
+instead of a dead run.  The driver detects the death (heartbeat deadline on
+the sim virtual clock; a died thread or a stale execution heartbeat on the
+thread substrate), then a recovery coordinator: (1) bumps the recovery
+*epoch* and fences the failed stage's mailbox — any pre-failure straggler
+still in flight is dropped, never admitted; (2) respawns the stage (or
+re-maps it onto a surviving neighbor's device,
+``recovery_mode="remap"``, feasibility-checked by
+:func:`repro.runtime.elastic.plan_remesh`); (3) restores the stage's
+progress — on the sim substrate from the recorded completion set ("replay
+from trace", modeled restore latency ``restore_cost``), on the thread
+substrate by full re-execution with state rebuilt via ``respawn`` (e.g.
+params from :class:`repro.ckpt.store.CheckpointStore`); and (4) replays the
+in-flight microbatches destined to the dead stage from the send log, tagged
+with the new epoch.  Exactly-once is preserved end to end: re-sent messages
+are idempotently dropped by the TP gate, re-executed contributions
+overwrite their per-task slot, and the conformance suite checks the
+resulting trace (``check_recovery_exactly_once``).  Without ``recover``,
+the fault is promoted to a fail-fast
+:class:`~repro.runtime.rrfp.chaos.StageFailure`.
 """
 from __future__ import annotations
 
@@ -55,11 +78,32 @@ from repro.core.taskgraph import Kind, PipelineSpec, Task
 
 from repro.runtime.rrfp import trace as _tr
 from repro.runtime.rrfp.actor import StageActor
-from repro.runtime.rrfp.chaos import ChaosConfig, ChaosEngine, ChaosThreadTransport
+from repro.runtime.rrfp.chaos import (
+    ChaosConfig,
+    ChaosEngine,
+    ChaosThreadTransport,
+    StageFailure,
+)
 from repro.runtime.rrfp.mailbox import Mailbox
 from repro.runtime.rrfp.messages import Envelope, envelopes_for, reset_seq
 from repro.runtime.rrfp.trace import ReplayOracle, Trace, TraceRecorder
 from repro.runtime.rrfp.transport import SimTransport, ThreadTransport
+
+
+class _StageDeath(Exception):
+    """Internal thread-substrate signal: the chaos layer killed this stage.
+
+    Distinct from user-code exceptions so the runner can route it to the
+    recovery coordinator (``ActorConfig.recover``) or promote it to
+    :class:`StageFailure` instead of the generic abort path."""
+
+    def __init__(self, stage: int, fail_kind: str, task: Task | None = None,
+                 t_fail: float = 0.0):
+        self.stage = stage
+        self.fail_kind = fail_kind
+        self.task = task
+        self.t_fail = t_fail
+        super().__init__(f"stage {stage} died ({fail_kind})")
 
 
 @dataclasses.dataclass
@@ -100,6 +144,28 @@ class ActorConfig:
     #: with a recorder also attached they add info annotations (e.g.
     #: ``ewma`` on COMPLETE) that replay tolerates.
     metrics: Any | None = None
+    #: ---- elastic fault recovery ----------------------------------------
+    #: arm the recovery coordinator: chaos kill/permanent_stall faults are
+    #: survived (quiesce -> respawn/re-map -> restore -> replay) instead of
+    #: raising :class:`~repro.runtime.rrfp.chaos.StageFailure`
+    recover: bool = False
+    #: heartbeat deadline, in substrate time (virtual seconds on sim, wall
+    #: seconds on threads): how long a stage may be silent before the
+    #: coordinator declares it dead — the detection-latency half of MTTR
+    hb_deadline: float = 5e-3
+    #: sim substrate: modeled virtual-time cost of restoring the respawned
+    #: stage's params/optimizer from the last committed checkpoint — the
+    #: restore half of MTTR
+    restore_cost: float = 1e-3
+    #: "respawn" = fresh actor on the failed stage's own device;
+    #: "remap" = no spare device — the stage re-hosts on a surviving
+    #: neighbor (repro.runtime.elastic.remap_stages) and the pair
+    #: time-share it (sim substrate)
+    recovery_mode: str = "respawn"
+    #: thread substrate: ``respawn(stage) -> work_fn`` rebuilds the dead
+    #: stage's program (e.g. params restored via CheckpointStore); None
+    #: reuses the original work_fn (stateless programs)
+    respawn: Callable[[int], Any] | None = None
 
 
 def _compute_rng(seed: int, task: Task) -> np.random.Generator:
@@ -147,6 +213,9 @@ class ActorDriver:
                       if spec.graph is not None else None),
             "chaos": cfg.chaos.to_json() if cfg.chaos is not None else None,
             "trace_ready": "full" if cfg.trace_full_ready else "diff",
+            **({"recover": True, "recovery_mode": cfg.recovery_mode,
+                "hb_deadline": cfg.hb_deadline,
+                "restore_cost": cfg.restore_cost} if cfg.recover else {}),
         }
 
     def _effective_config(self, substrate: str) -> ActorConfig:
@@ -176,29 +245,65 @@ class ActorDriver:
                 custom_orders=cfg.replay.dispatch_orders(self.spec.num_stages))
         return cfg
 
+    def _make_stage(
+        self, s: int, cfg: ActorConfig, recorder: TraceRecorder | None,
+        epoch: int = 0,
+    ) -> tuple[Mailbox, StageActor]:
+        """Build one stage's mailbox + actor (initial build and respawn).
+
+        A respawned incarnation passes the post-recovery ``epoch``: its
+        mailbox fences every envelope from an earlier epoch."""
+        spec = self.spec
+        order = None
+        if cfg.mode == "precommitted":
+            if cfg.custom_orders is not None:
+                order = cfg.custom_orders[s]
+            else:
+                order = FIXED_ORDERS[cfg.fixed_order](spec, s)
+        shard = (cfg.metrics.shard(s)
+                 if cfg.metrics is not None else None)
+        mb = Mailbox(s, cfg.tp_degree, recorder=recorder,
+                     fan_in=spec.fan_in, metrics=shard)
+        mb.epoch = epoch
+        actor = StageActor(
+            s, spec, mb, mode=cfg.mode, hint=cfg.hint, order=order,
+            buffer_limit=cfg.buffer_limit, w_defer_cap=cfg.w_defer_cap,
+            reference_arbitration=cfg.reference_arbitration,
+            trace_full_ready=cfg.trace_full_ready, metrics=shard)
+        return mb, actor
+
     def _build_actors(
         self, cfg: ActorConfig, recorder: TraceRecorder | None,
     ) -> tuple[list[Mailbox], list[StageActor]]:
-        spec = self.spec
         mailboxes, actors = [], []
-        for s in range(spec.num_stages):
-            order = None
-            if cfg.mode == "precommitted":
-                if cfg.custom_orders is not None:
-                    order = cfg.custom_orders[s]
-                else:
-                    order = FIXED_ORDERS[cfg.fixed_order](spec, s)
-            shard = (cfg.metrics.shard(s)
-                     if cfg.metrics is not None else None)
-            mb = Mailbox(s, cfg.tp_degree, recorder=recorder,
-                         fan_in=spec.fan_in, metrics=shard)
+        for s in range(self.spec.num_stages):
+            mb, actor = self._make_stage(s, cfg, recorder)
             mailboxes.append(mb)
-            actors.append(StageActor(
-                s, spec, mb, mode=cfg.mode, hint=cfg.hint, order=order,
-                buffer_limit=cfg.buffer_limit, w_defer_cap=cfg.w_defer_cap,
-                reference_arbitration=cfg.reference_arbitration,
-                trace_full_ready=cfg.trace_full_ready, metrics=shard))
+            actors.append(actor)
         return mailboxes, actors
+
+    def _restore_progress(self, actor: StageActor, done: set) -> None:
+        """Seed a respawned actor with the progress the coordinator restored
+        from the trace: completed tasks never re-execute (sim substrate),
+        and every locally-enabled not-yet-done task re-enters the ready set.
+        Message-fed tasks re-arrive via the coordinator's replay."""
+        actor.done = set(done)
+        for t in done:
+            if t.kind == Kind.F:
+                actor.n_f += 1
+            elif t.kind == Kind.B:
+                actor.n_b += 1
+            else:
+                actor.n_w += 1
+        if actor.mode == "precommitted":
+            # a fixed order executes strictly in sequence, so the restored
+            # position is the done prefix
+            while (actor.order_pos < len(actor.order)
+                   and actor.order[actor.order_pos] in done):
+                actor.order_pos += 1
+        for t in self.spec.tasks():
+            if t.stage == actor.idx and t not in done:
+                actor._maybe_enqueue(t)
 
     def _seed_inputs(self, mailboxes: list[Mailbox]) -> None:
         """Source stages' chunk-0 forward inputs are locally available at
@@ -213,6 +318,10 @@ class ActorDriver:
         reset_seq()  # envelope seqs are run-local: traces stay byte-stable
         cfg = self._effective_config("sim")
         oracle = ReplayOracle(cfg.replay) if cfg.replay is not None else None
+        if oracle is not None and cfg.replay.recovery_windows():
+            raise ValueError(
+                "time-exact replay of a recovered trace is not supported: "
+                "replay the unfailed run and re-inject the fault instead")
         if self.costs is None and oracle is None:
             raise ValueError("simulation mode requires a CostModel")
         costs = self.costs
@@ -221,6 +330,25 @@ class ActorDriver:
         chaos = (ChaosEngine(cfg.chaos)
                  if cfg.chaos is not None and cfg.chaos.active() else None)
         mailboxes, actors = self._build_actors(cfg, recorder)
+
+        # fail-stop fault plan: a pure (CRN) function of the chaos config
+        fails: dict[int, tuple[str, int]] = {}
+        if chaos is not None:
+            for s in range(spec.num_stages):
+                fp = chaos.fail_point(s, spec.num_tasks_per_stage())
+                if fp is not None:
+                    fails[s] = fp
+        epoch = 0  # recovery generation; stamps every outgoing envelope
+        dead: set[int] = set()
+        n_disp = [0] * spec.num_stages
+        fail_time: dict[int, float] = {}
+        fail_kind_of: dict[int, str] = {}
+        recoveries: list[dict] = []
+        #: (task, rank, src) of every envelope handed to the transport —
+        #: the recovery coordinator's replay source (sim payloads are the
+        #: fact of arrival, so identity is the whole message)
+        sent_log: set[tuple[Task, int, int]] = set()
+        host_of = list(range(spec.num_stages))  # stage -> hosting device
 
         events: list = []  # (time, seq, kind, payload)
         seq = 0
@@ -248,7 +376,10 @@ class ActorDriver:
             on_send=record_send) if oracle is None else None
 
         def send_messages(succ: Task, src: int, now: float) -> None:
-            for env in envelopes_for(succ, src, cfg.tp_degree, send_time=now):
+            for env in envelopes_for(succ, src, cfg.tp_degree, send_time=now,
+                                     epoch=epoch):
+                if fails or dead:
+                    sent_log.add((env.task, env.rank, env.src_stage))
                 if oracle is None:
                     transport.send(env, now=now)
                 else:
@@ -285,22 +416,51 @@ class ActorDriver:
             return dur
 
         def try_dispatch(s: int, now: float) -> None:
+            if s in dead:
+                return
             actor = actors[s]
-            if busy_until[s] > now:
+            h = host_of[s]
+            if busy_until[h] > now:
                 return
             task, sel_info = actor.select_traced()
             if task is None:
                 return
             actor.begin(task, now=now, info=sel_info)
+            k = n_disp[s]
+            n_disp[s] += 1
+            fp = fails.get(s)
+            if fp is not None and k == fp[1]:
+                # fail-stop: the stage dies executing this task — no
+                # COMPLETE, no outgoing messages, in-memory state lost
+                del fails[s]
+                dead.add(s)
+                fail_time[s] = now
+                fail_kind_of[s] = fp[0]
+                busy_until[h] = float("inf")
+                if recorder is not None:
+                    recorder.record(_tr.FAIL, s, task, t=now,
+                                    fail_kind=fp[0])
+                if not cfg.recover:
+                    if recorder is not None:
+                        self.trace = recorder.trace()
+                    raise StageFailure(
+                        s, fp[0], f"t={now:.6g}, dispatch #{k}")
+                # heartbeat deadline: the coordinator declares the stage
+                # dead only after hb_deadline of silence
+                push(now + cfg.hb_deadline, "detect", s)
+                return
             coord = mailboxes[s].group.coordination_cost(task, cfg.tp_coord_base)
             dur = task_duration(s, task)
-            actor.stats.blocking += max(0.0, now - idle_since[s])
+            actor.stats.blocking += max(0.0, now - idle_since[h])
             actor.stats.tp_coord += coord
             actor.stats.compute += dur
             begin = now + coord
             start[task] = begin
-            busy_until[s] = begin + dur
-            push(busy_until[s], "complete", task)
+            busy_until[h] = begin + dur
+            push(busy_until[h], "complete", task)
+
+        def co_hosted(h: int) -> list[int]:
+            return [s2 for s2 in range(spec.num_stages) if host_of[s2] == h]
 
         for s in range(spec.num_stages):
             try_dispatch(s, 0.0)
@@ -315,15 +475,69 @@ class ActorDriver:
                 succs = actors[s].complete(task, now=now, dur=now - start[task])
                 for succ in succs:
                     send_messages(succ, s, now)
-                idle_since[s] = now
-                try_dispatch(s, now)
-            else:  # deliver
+                h = host_of[s]
+                idle_since[h] = now
+                for s2 in co_hosted(h):
+                    try_dispatch(s2, now)
+            elif ekind == "deliver":
                 env: Envelope = payload
                 s = env.dst_stage
                 adm = mailboxes[s].deliver(env, now=now)
                 if adm is not None:
                     actors[s].sync_mailbox()
                     try_dispatch(s, now)
+            elif ekind == "detect":
+                # ---- recovery coordinator -----------------------------
+                s = payload
+                if recorder is not None:
+                    recorder.record(_tr.RECOVERY_BEGIN, s, t=now,
+                                    epoch_from=epoch, epoch_to=epoch + 1)
+                epoch += 1
+                if recorder is not None:
+                    recorder.epoch = epoch
+                if cfg.recovery_mode == "remap":
+                    # no spare device: fold the dead stage onto a surviving
+                    # neighbor (feasibility-checked MeshPlan re-layout)
+                    from repro.runtime.elastic import remap_stages
+
+                    host_of = remap_stages(spec.num_stages, s)
+                # respawn: fresh mailbox (fenced at the new epoch) + actor
+                mb, actor = self._make_stage(s, cfg, recorder, epoch=epoch)
+                mailboxes[s] = mb
+                actors[s] = actor
+                # restore progress from the last committed state: completed
+                # tasks never re-execute; the doomed + undispatched remainder
+                # re-enter through local enablement and message replay
+                done_s = {t for t in end if t.stage == s}
+                self._restore_progress(actor, done_s)
+                t_up = now + cfg.restore_cost
+                for task_, rank_, src_ in sorted(
+                        e for e in sent_log
+                        if e[0].stage == s and e[0] not in done_s):
+                    push(t_up, "deliver", Envelope(
+                        task=task_, src_stage=src_, dst_stage=s, rank=rank_,
+                        send_time=now, epoch=epoch))
+                h = host_of[s]
+                if cfg.recovery_mode == "remap":
+                    busy_until[h] = max(busy_until[h], t_up)
+                else:
+                    busy_until[h] = t_up
+                    idle_since[h] = t_up
+                recoveries.append({
+                    "stage": s, "fail_kind": fail_kind_of[s],
+                    "t_fail": fail_time[s], "t_detect": now, "t_up": t_up,
+                    "epoch": epoch, "mode": cfg.recovery_mode,
+                    "mttr": t_up - fail_time[s]})
+                push(t_up, "respawned", s)
+            else:  # respawned: the new incarnation is back in service
+                s = payload
+                dead.discard(s)
+                if recorder is not None:
+                    recorder.record(_tr.RECOVERY_END, s, t=now,
+                                    mode=cfg.recovery_mode,
+                                    mttr=now - fail_time[s])
+                actors[s].sync_mailbox()
+                try_dispatch(s, now)
 
         if recorder is not None:
             self.trace = recorder.trace()
@@ -337,10 +551,12 @@ class ActorDriver:
                 f"missing messages: {starved}")
         makespan = max(end.values())
         for s, a in enumerate(actors):
-            a.stats.blocking += max(0.0, makespan - busy_until[s])
+            a.stats.blocking += max(0.0, makespan - busy_until[host_of[s]])
             a.stats.deferrals = mailboxes[s].group.deferrals
         if recorder is not None:
             recorder.meta["makespan"] = makespan
+            if recoveries:
+                recorder.meta["recoveries"] = recoveries
             self.trace = recorder.trace()
         return RunResult(
             makespan=makespan,
@@ -362,6 +578,7 @@ class ActorDriver:
         ``work_fn(task, payload)`` (or one callable per stage) performs the
         actual computation and returns the payload for the outgoing message.
         """
+        import queue as _queue
         import time as _time
 
         spec = self.spec
@@ -375,6 +592,25 @@ class ActorDriver:
         t0 = _time.perf_counter()
         clock = lambda: _time.perf_counter() - t0  # noqa: E731
 
+        # fail-stop fault plan (CRN: a pure function of the chaos config)
+        fail_points: dict[int, tuple[str, int]] = {}
+        if chaos is not None:
+            for s in range(spec.num_stages):
+                fp = chaos.fail_point(s, spec.num_tasks_per_stage())
+                if fp is not None:
+                    fail_points[s] = fp
+        #: recovery generation; the transport shim stamps it on every
+        #: outgoing envelope under ``gate``, so no send can interleave with
+        #: a coordinator epoch bump
+        gate = threading.RLock()
+        epoch_box = [0]
+        #: (task, rank, src) -> last payload sent — the coordinator's replay
+        #: source for messages destined to a respawned stage
+        send_log: dict[tuple[Task, int, int], Any] = {}
+        all_actors: list[StageActor] = list(actors)
+        fail_time: dict[int, float] = {}
+        recoveries: list[dict] = []
+
         def record_send(env: Envelope, now: float) -> None:
             if recorder is not None:
                 recorder.record(_tr.SEND, env.src_stage, env.task,
@@ -382,12 +618,30 @@ class ActorDriver:
 
         mb_map = {m.stage: m for m in mailboxes}
         if chaos is not None:
-            transport = ChaosThreadTransport(mb_map, chaos,
-                                             on_send=record_send)
+            base_transport = ChaosThreadTransport(mb_map, chaos,
+                                                  on_send=record_send)
         else:
-            transport = ThreadTransport(mb_map, on_send=record_send)
-        work_fns = (work_fn if isinstance(work_fn, list)
-                    else [work_fn] * spec.num_stages)
+            base_transport = ThreadTransport(mb_map, on_send=record_send)
+
+        class _EpochTransport:
+            """Stamp the current recovery epoch on every envelope (and log
+            it for replay) before handing off to the real transport.  The
+            gate serializes sends against the coordinator's epoch bump +
+            mailbox swap, so an envelope either predates a recovery (old
+            epoch -> fenced at the respawned mailbox) or fully follows it."""
+
+            def send(self, env: Envelope, now: float = 0.0):
+                with gate:
+                    if env.epoch != epoch_box[0]:
+                        env = dataclasses.replace(env, epoch=epoch_box[0])
+                    if fail_points:
+                        send_log[(env.task, env.rank, env.src_stage)] = \
+                            env.payload
+                    base_transport.send(env, now=now)
+
+        transport = _EpochTransport() if fail_points else base_transport
+        base_fns = list(work_fn) if isinstance(work_fn, list) \
+            else [work_fn] * spec.num_stages
         if chaos is not None:
             def chaotic(fn):
                 def wrapped(task, payload):
@@ -399,19 +653,69 @@ class ActorDriver:
                         _time.sleep(d)
                     return fn(task, payload)
                 return wrapped
+        else:
+            chaotic = None
 
-            work_fns = [chaotic(fn) for fn in work_fns]
+        # fail-stop wrapper: the doomed dispatch never completes.  ``kill``
+        # raises immediately; ``permanent_stall`` hangs inside work_fn until
+        # the watchdog notices the stale execution heartbeat and releases it
+        # (the release is the moment of *detection*, not of death).
+        exec_n = {s: 0 for s in fail_points}
+        fired: set[int] = set()
+        stall_release = {s: threading.Event()
+                         for s, (k, _) in fail_points.items()
+                         if k == "permanent_stall"}
+
+        def failing(fn, s: int):
+            kind_, k_die = fail_points[s]
+
+            def wrapped(task, payload):
+                i = exec_n[s]
+                exec_n[s] = i + 1
+                if s not in fired and i == k_die:
+                    fired.add(s)
+                    t_fail = clock()
+                    if kind_ == "permanent_stall":
+                        stall_release[s].wait()
+                    raise _StageDeath(s, kind_, task, t_fail=t_fail)
+                return fn(task, payload)
+            return wrapped
+
+        def stage_fn(s: int, respawned: bool = False):
+            fn = base_fns[s]
+            if respawned and cfg.respawn is not None:
+                fn = cfg.respawn(s)
+            if chaotic is not None:
+                fn = chaotic(fn)
+            if not respawned and s in fail_points:
+                fn = failing(fn, s)
+            return fn
+
         abort = threading.Event()
         errors: list[BaseException] = []
+        fail_q: _queue.Queue = _queue.Queue()
 
-        def runner(actor: StageActor):
+        def runner(actor: StageActor, fn):
             try:
                 actor.run_thread(
-                    work_fns[actor.idx], transport, clock,
+                    fn, transport, clock,
                     tp_degree=cfg.tp_degree,
                     deadlock_timeout=cfg.deadlock_timeout,
                     abort=abort,
                 )
+            except _StageDeath as d:
+                fail_time[d.stage] = d.t_fail
+                if recorder is not None:
+                    recorder.record(_tr.FAIL, d.stage, d.task, t=d.t_fail,
+                                    fail_kind=d.fail_kind)
+                if cfg.recover:
+                    fail_q.put(d)  # hand off to the recovery coordinator
+                    return
+                errors.append(StageFailure(
+                    d.stage, d.fail_kind, f"t={d.t_fail:.6g}"))
+                abort.set()
+                for m in mailboxes:
+                    m.stop()
             except BaseException as e:  # noqa: BLE001 - reraised on join
                 errors.append(e)
                 abort.set()
@@ -423,26 +727,119 @@ class ActorDriver:
 
         self._seed_inputs(mailboxes)
         threads = [
-            threading.Thread(target=runner, args=(a,), name=f"stage-{a.idx}",
-                             daemon=True)
+            threading.Thread(target=runner, args=(a, stage_fn(a.idx)),
+                             name=f"stage-{a.idx}", daemon=True)
             for a in actors
         ]
-        for th in threads:
+
+        def recover_stage(death: _StageDeath) -> None:
+            s = death.stage
+            t_detect = clock()
+            with gate:
+                if recorder is not None:
+                    recorder.record(_tr.RECOVERY_BEGIN, s, t=t_detect,
+                                    epoch_from=epoch_box[0],
+                                    epoch_to=epoch_box[0] + 1)
+                epoch_box[0] += 1
+                if recorder is not None:
+                    recorder.epoch = epoch_box[0]
+                old_mb = mb_map[s]
+                mb, actor = self._make_stage(s, cfg, recorder,
+                                             epoch=epoch_box[0])
+                mailboxes[s] = mb
+                mb_map[s] = mb
+                actors[s] = actor
+                all_actors.append(actor)
+                old_mb.stop()
+                # In-memory state (stashed activations) died with the stage:
+                # the incarnation re-executes from scratch.  Re-seed local
+                # inputs, then replay every logged send destined here at the
+                # new epoch; late duplicates of the originals are fenced.
+                nowc = clock()
+                if s in spec.source_stages():
+                    for j in range(spec.num_microbatches):
+                        mb.deliver_local(Task(Kind.F, s, j, 0), now=nowc)
+                for (task_, rank_, src_), payload in sorted(
+                        send_log.items(), key=lambda kv: kv[0]):
+                    if task_.stage == s:
+                        mb.deliver(Envelope(
+                            task=task_, src_stage=src_, dst_stage=s,
+                            rank=rank_, payload=payload, send_time=nowc,
+                            epoch=epoch_box[0]), now=nowc)
+            th = threading.Thread(
+                target=runner, args=(actor, stage_fn(s, respawned=True)),
+                name=f"stage-{s}-r{epoch_box[0]}", daemon=True)
+            th.start()  # start before publishing: the join loop may see it
+            threads.append(th)
+            t_up = clock()
+            mttr = t_up - fail_time[s]
+            if recorder is not None:
+                recorder.record(_tr.RECOVERY_END, s, t=t_up, mode="respawn",
+                                mttr=mttr)
+            recoveries.append({
+                "stage": s, "fail_kind": death.fail_kind,
+                "t_fail": fail_time[s], "t_detect": t_detect, "t_up": t_up,
+                "epoch": epoch_box[0], "mode": "respawn", "mttr": mttr})
+
+        def coordinator() -> None:
+            """Failure detection + recovery: drains the death queue (kills
+            announce themselves) and runs a heartbeat watchdog for armed
+            permanent stalls (silent deaths are detected by staleness)."""
+            pending = set(fail_points)
+            while pending and not abort.is_set():
+                try:
+                    death = fail_q.get(
+                        timeout=max(cfg.hb_deadline / 4, 0.002))
+                except _queue.Empty:
+                    for s2 in list(pending):
+                        if fail_points[s2][0] != "permanent_stall":
+                            continue
+                        es = actors[s2].exec_since
+                        if (es is not None
+                                and _time.monotonic() - es > cfg.hb_deadline):
+                            stall_release[s2].set()
+                    continue
+                pending.discard(death.stage)
+                recover_stage(death)
+
+        coord_th = None
+        # the coordinator doubles as the stall watchdog, so it also runs
+        # without ``recover``: a released stall is then promoted to a
+        # fail-fast StageFailure instead of a silent hang
+        if fail_points and (cfg.recover or stall_release):
+            coord_th = threading.Thread(
+                target=coordinator, name="recovery-coordinator", daemon=True)
+            coord_th.start()
+        for th in list(threads):  # snapshot: a respawn may append
             th.start()
-        for th in threads:
-            th.join()
-        if isinstance(transport, ChaosThreadTransport):
+        i = 0
+        while True:
+            while i < len(threads):
+                threads[i].join()
+                i += 1
+            if coord_th is None or not coord_th.is_alive():
+                break
+            coord_th.join(timeout=0.01)  # a respawn may still add threads
+        if coord_th is not None:
+            coord_th.join()
+        if isinstance(base_transport, ChaosThreadTransport):
             # chaos duplicates may still be in flight; land them before
             # stopping so no timer outlives the run
-            transport.drain(timeout=cfg.deadlock_timeout)
+            base_transport.drain(timeout=cfg.deadlock_timeout)
         for m in mailboxes:
             m.stop()
         if recorder is not None:
             self.trace = recorder.trace()
         if errors:
             raise errors[0]
-        start = {tr.task: tr.start for a in actors for tr in a.traces}
-        end = {tr.task: tr.end for a in actors for tr in a.traces}
+        # later incarnations override: a re-executed task's times are its
+        # post-recovery ones (all_actors is in creation order)
+        start: dict[Task, float] = {}
+        end: dict[Task, float] = {}
+        for a in all_actors:
+            for tr in a.traces:
+                start[tr.task] = tr.start
+                end[tr.task] = tr.end
         if len(end) != spec.total_tasks():
             raise DeadlockError(
                 f"threaded run finished {len(end)}/{spec.total_tasks()} tasks")
@@ -453,6 +850,8 @@ class ActorDriver:
             a.stats.deferrals = a.mailbox.group.deferrals
         if recorder is not None:
             recorder.meta["makespan"] = makespan
+            if recoveries:
+                recorder.meta["recoveries"] = recoveries
             self.trace = recorder.trace()
         return RunResult(
             makespan=makespan,

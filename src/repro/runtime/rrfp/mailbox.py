@@ -58,6 +58,14 @@ class Mailbox:
         #: source stages whose edge for a task has been TP-admitted
         self._edges: dict[Task, set[int]] = {}
         self.stopped = False
+        #: minimum acceptable envelope epoch.  A respawned stage's mailbox
+        #: starts at the post-recovery epoch, so any pre-failure straggler
+        #: (epoch < this) is *fenced*: dropped before the TP gate, never
+        #: admitted.  Survivor mailboxes keep their incarnation's epoch and
+        #: still accept in-flight messages from before the failure.
+        self.epoch = 0
+        #: fenced-envelope count (diagnostics / property tests)
+        self.fenced = 0
         #: monotonic wall time of the last admission/consumption (thread-mode
         #: starvation detection)
         self.last_progress = _time.monotonic()
@@ -67,8 +75,22 @@ class Mailbox:
     def deliver(self, env: Envelope, now: float = 0.0) -> Admission | None:
         """Offer one envelope; buffer the task once its full message set
         (all TP ranks × all fan-in edges) is admitted.  Returns the *edge*
-        admission (or None), so callers poke the actor only on progress."""
+        admission (or None), so callers poke the actor only on progress.
+
+        Envelopes from a recovery epoch older than the mailbox's are fenced
+        (dropped, recorded as FENCE) — the total-fencing guarantee that
+        makes a respawned incarnation's state independent of pre-failure
+        stragglers still in flight."""
         with self.cond:
+            if env.epoch < self.epoch:
+                self.fenced += 1
+                if self.recorder is not None:
+                    self.recorder.record(_tr.FENCE, self.stage, env.task,
+                                         rank=env.rank, t=now, seq=env.seq,
+                                         src=env.src_stage,
+                                         env_epoch=env.epoch,
+                                         mailbox_epoch=self.epoch)
+                return None
             if self.recorder is not None:
                 self.recorder.record(_tr.DELIVER, self.stage, env.task,
                                      rank=env.rank, t=now, seq=env.seq,

@@ -42,6 +42,13 @@ class Envelope:
     ``task`` is receiver-side: the task this message makes ready (not the
     sender task that produced it).  ``seq`` is a global monotone id used for
     FIFO tie-breaking and tracing.
+
+    ``epoch`` is the recovery generation the envelope was sent in.  A
+    mailbox whose stage has been respawned fences every envelope from an
+    earlier epoch (see :meth:`~repro.runtime.rrfp.mailbox.Mailbox.deliver`),
+    so pre-failure stragglers — including chaos-delayed duplicates still in
+    flight when their destination died — can never contaminate the restored
+    incarnation's state.
     """
 
     task: Task
@@ -50,6 +57,7 @@ class Envelope:
     rank: int = 0
     send_time: float = 0.0
     payload: Any = None
+    epoch: int = 0
     seq: int = dataclasses.field(default_factory=lambda: next(_seq))
 
 
@@ -78,6 +86,7 @@ def envelopes_for(
     tp_degree: int,
     send_time: float = 0.0,
     payload: Any = None,
+    epoch: int = 0,
 ) -> list[Envelope]:
     """Fan one logical message out into per-TP-rank envelopes."""
     return [
@@ -88,6 +97,7 @@ def envelopes_for(
             rank=r,
             send_time=send_time,
             payload=payload,
+            epoch=epoch,
         )
         for r in range(max(1, tp_degree))
     ]

@@ -53,8 +53,13 @@ DISPATCH = "dispatch"  # actor committed to execute a task
 COMPLETE = "complete"  # task finished executing
 STALL = "stall"        # chaos: transient stage stall injected
 FANIN_HOLD = "fanin_hold"  # DAG fan-in: edge admitted, other branch missing
+FAIL = "fail"          # fail-stop fault: a stage died (kill/permanent_stall)
+RECOVERY_BEGIN = "recovery_begin"  # coordinator detected the death; quiesce
+RECOVERY_END = "recovery_end"      # stage respawned/re-mapped; epoch bumped
+FENCE = "fence"        # stale (pre-recovery epoch) envelope dropped
 EVENT_KINDS = (SEND, DELIVER, TP_HOLD, TP_ADMIT, TP_DUP, ENQUEUE, DEQUEUE,
-               DISPATCH, COMPLETE, STALL, FANIN_HOLD)
+               DISPATCH, COMPLETE, STALL, FANIN_HOLD, FAIL, RECOVERY_BEGIN,
+               RECOVERY_END, FENCE)
 
 
 def task_key(t: Task) -> list[int]:
@@ -82,7 +87,15 @@ def task_from_key(k: Iterable[int]) -> Task:
 
 @dataclasses.dataclass(frozen=True)
 class TraceEvent:
-    """One recorded runtime event, totally ordered by logical clock ``lc``."""
+    """One recorded runtime event, totally ordered by logical clock ``lc``.
+
+    ``epoch`` is the recovery generation the event belongs to: 0 until a
+    fail-stop recovery bumps it, so a recovered run's logical clock is
+    (epoch, lc) and the conformance checkers can tell a pre-failure
+    completion from its post-recovery re-execution.  Serialized only when
+    nonzero, so traces of failure-free runs are byte-identical to those
+    recorded before recovery existed.
+    """
 
     lc: int
     kind: str
@@ -90,12 +103,15 @@ class TraceEvent:
     task: Task | None = None
     rank: int = 0
     t: float = 0.0  # substrate time: virtual (sim) or wall (thread)
+    epoch: int = 0
     info: dict = dataclasses.field(default_factory=dict)
 
     def to_json(self) -> dict:
         d: dict[str, Any] = {"lc": self.lc, "kind": self.kind,
                              "stage": self.stage, "rank": self.rank,
                              "t": self.t}
+        if self.epoch:
+            d["epoch"] = self.epoch
         if self.task is not None:
             d["task"] = task_key(self.task)
         if self.info:
@@ -111,7 +127,7 @@ class TraceEvent:
             lc=d["lc"], kind=d["kind"], stage=d["stage"],
             task=task_from_key(d["task"]) if "task" in d else None,
             rank=d.get("rank", 0), t=d.get("t", 0.0),
-            info=d.get("info", {}))
+            epoch=d.get("epoch", 0), info=d.get("info", {}))
 
 
 class TraceRecorder:
@@ -127,13 +143,23 @@ class TraceRecorder:
         self._lock = threading.Lock()
         self._events: list[TraceEvent] = []
         self.meta = dict(meta or {})
+        #: current recovery generation; the recovery coordinator bumps this
+        #: so every subsequent event is stamped with the new epoch
+        self.epoch = 0
 
     def record(self, kind: str, stage: int, task: Task | None = None,
                rank: int = 0, t: float = 0.0, **info) -> None:
         with self._lock:
             self._events.append(TraceEvent(
                 lc=len(self._events), kind=kind, stage=stage, task=task,
-                rank=rank, t=t, info=info))
+                rank=rank, t=t, epoch=self.epoch, info=info))
+
+    def completed_tasks(self, stage: int) -> set:
+        """Tasks this stage has COMPLETEd so far — the progress the recovery
+        coordinator restores into a respawned actor ("replay from trace")."""
+        with self._lock:
+            return {ev.task for ev in self._events
+                    if ev.kind == COMPLETE and ev.stage == stage}
 
     def trace(self) -> "Trace":
         with self._lock:
@@ -227,7 +253,15 @@ class Trace:
         """
         out: dict[int, list[Task]] = {}
         running: dict[int, set[Task]] = {}
-        for ev in self.select(DISPATCH):
+        for ev in self.events:
+            if ev.kind == RECOVERY_BEGIN:
+                # the failed stage's in-memory ready set died with it; the
+                # respawned incarnation re-derives readiness from replayed
+                # deliveries, so the diff reconstruction restarts empty
+                running.pop(ev.stage, None)
+                continue
+            if ev.kind != DISPATCH:
+                continue
             if "ready" in ev.info:
                 out[ev.lc] = [task_from_key(k) for k in ev.info["ready"]]
                 continue
@@ -252,6 +286,40 @@ class Trace:
             if "dur" in ev.info:
                 out.setdefault(tuple(task_key(ev.task)), ev.info["dur"])
         return out
+
+    def recovery_windows(self) -> list[dict]:
+        """Fail-stop recovery episodes, in order: one dict per FAIL with the
+        matching RECOVERY_BEGIN/RECOVERY_END times and the epoch transition.
+
+        ``t_fail`` is when the stage died, ``t_detect`` when the coordinator
+        declared it (heartbeat deadline), ``t_end`` when the respawned or
+        re-mapped incarnation was back in service; ``t_end - t_fail`` is the
+        episode's time-to-recover (the benchmark's MTTR numerator).
+        """
+        out: list[dict] = []
+        open_by_stage: dict[int, dict] = {}
+        for ev in self.events:
+            if ev.kind == FAIL:
+                w = {"stage": ev.stage, "t_fail": ev.t,
+                     "fail_kind": ev.info.get("fail_kind", "kill"),
+                     "t_detect": None, "t_end": None,
+                     "epoch_from": ev.epoch, "epoch_to": None}
+                open_by_stage[ev.stage] = w
+                out.append(w)
+            elif ev.kind == RECOVERY_BEGIN:
+                w = open_by_stage.get(ev.stage)
+                if w is not None:
+                    w["t_detect"] = ev.t
+            elif ev.kind == RECOVERY_END:
+                w = open_by_stage.pop(ev.stage, None)
+                if w is not None:
+                    w["t_end"] = ev.t
+                    w["epoch_to"] = ev.epoch
+                    w["mode"] = ev.info.get("mode", "respawn")
+        return out
+
+    def max_epoch(self) -> int:
+        return max((ev.epoch for ev in self.events), default=0)
 
     def to_perfetto(self) -> dict:
         """Chrome trace-event JSON view of this trace (Perfetto-loadable).

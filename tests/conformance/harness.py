@@ -32,6 +32,7 @@ from repro.runtime.rrfp.conformance import (  # noqa: F401  (re-exported)
     check_exactly_once,
     check_fanin_admission,
     check_hint_faithful,
+    check_recovery_exactly_once,
     check_w_cap,
     check_wcap_path,
 )
@@ -298,6 +299,42 @@ class NumpyStageProgram:
             self.d_w = (self.d_w + self._mb_grads[mb]).astype(np.float32)
         self._mb_grads.clear()
         return self
+
+
+def execute_complete_order(trace, spec: PipelineSpec, seed: int,
+                           d: int = 16) -> list[NumpyStageProgram]:
+    """Execute a trace's realized completion order through fresh
+    :class:`NumpyStageProgram` instances and return them finalized.
+
+    Each task's COMPLETE is taken from its highest-epoch incarnation (on a
+    recovered trace the final incarnation is the one whose effects are
+    committed), in logical-clock order — a dependency-respecting total
+    order by the conformance dependency invariant.  With the programs'
+    stash-then-sorted-sum reduction, the resulting loss/grad bits depend
+    only on the *set* of executed tasks, so exactly-once across a recovery
+    boundary is equivalent to bitwise parity with an unfailed run."""
+    from repro.runtime.rrfp import trace as _tr
+
+    programs = [NumpyStageProgram(s, spec, seed, d=d)
+                for s in range(spec.num_stages)]
+    best: dict[Task, object] = {}
+    for ev in trace.select(_tr.COMPLETE):
+        cur = best.get(ev.task)
+        if cur is None or ev.epoch > cur.epoch:
+            best[ev.task] = ev
+    outputs: dict[Task, object] = {}
+    for ev in sorted(best.values(), key=lambda e: e.lc):
+        t = ev.task
+        mps = spec.message_predecessors(t)
+        if not mps:
+            payload = None
+        elif len(mps) == 1:
+            payload = payload_for_edge(outputs.get(mps[0]), t.stage)
+        else:
+            payload = {p.stage: payload_for_edge(outputs[p], t.stage)
+                       for p in mps}
+        outputs[t] = programs[t.stage](t, payload)
+    return [p.finalize() for p in programs]
 
 
 def reference_execute(spec: PipelineSpec, programs: list) -> None:

@@ -1,0 +1,289 @@
+"""Recovery-conformance suite: stage death is a recoverable event.
+
+Each seed derives a scenario (spec × consumption mode × chaos level) and
+arms one fail-stop fault — a random non-source stage killed (or permanently
+stalled) at a randomized dispatch index.  The run must complete under
+``ActorConfig.recover``, and the recorded trace must satisfy
+``check_recovery_exactly_once``: no microbatch lost or doubled across the
+recovery boundary, repeats only as re-execution (one per incarnation), and
+every fenced envelope genuinely stale.
+
+On the sim substrate the suite additionally proves the paper-level claim
+that recovery is *bitwise invisible*: executing the recovered run's realized
+completion order through deterministic numpy stage programs yields the same
+loss and weight-gradient bits as the unfailed run on the same seed.  On the
+thread substrate the programs execute for real (payloads ride the
+envelopes, a respawn rebuilds the dead stage's program from scratch) and
+the finalized totals must again match the unfailed run exactly.
+
+Fast seeds run on every PR; the full matrix rides the ``slow`` marker.
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from harness import (
+    NumpyStageProgram,
+    artifact_on_failure,
+    check_all,
+    execute_complete_order,
+    make_dag_scenario,
+    make_scenario,
+    sim_costs,
+)
+
+from repro.runtime.rrfp import (
+    ActorConfig,
+    ActorDriver,
+    CHAOS_LEVELS,
+    ChaosConfig,
+    StageFailure,
+)
+
+SEEDS_FAST = list(range(0, 12))
+SEEDS_SLOW = list(range(12, 48))
+LEVELS = ("C0", "C1", "C2", "C3")
+
+
+def _arm_fault(sc, seed: int):
+    """Derive a randomized fail-stop fault for a scenario: a non-source
+    stage, kill or permanent stall, at a randomized dispatch index, layered
+    on a rotating chaos level (C0 control .. C3 heavy)."""
+    rng = np.random.default_rng([0xFA11, seed])
+    sources = set(sc.spec.source_stages())
+    candidates = [s for s in range(sc.spec.num_stages) if s not in sources]
+    fail_stage = int(rng.choice(candidates))
+    fail_kind = str(rng.choice(["kill", "permanent_stall"]))
+    fail_after = int(rng.integers(0, sc.spec.num_tasks_per_stage()))
+    level = CHAOS_LEVELS[LEVELS[seed % len(LEVELS)]]
+    chaos = dataclasses.replace(
+        level, seed=seed, fail_stage=fail_stage, fail_kind=fail_kind,
+        fail_after=fail_after)
+    cfg = dataclasses.replace(
+        sc.config, chaos=chaos, recover=True,
+        recovery_mode="remap" if seed % 5 == 4 else "respawn")
+    return cfg, (fail_stage, fail_kind, fail_after)
+
+
+def _run_sim(sc, seed: int) -> None:
+    cfg, fault = _arm_fault(sc, seed)
+    costs = sim_costs(sc.spec, seed)
+    driver = ActorDriver(sc.spec, costs, cfg)
+    with artifact_on_failure(lambda: driver.trace,
+                             f"recovery_sim_{sc.name()}"):
+        result = driver.run()  # survives the fault: completes or raises
+        trace = driver.trace
+        assert trace.recovery_windows(), f"fault {fault} never fired"
+        check_all(trace, sc.spec, cfg)  # recovery-aware exactly-once
+
+        # bitwise parity: the recovered run's realized completion order
+        # produces the unfailed run's exact loss/grad bits
+        calm = ActorDriver(
+            sc.spec, costs,
+            dataclasses.replace(cfg, chaos=dataclasses.replace(
+                cfg.chaos, fail_stage=-1), recover=False))
+        calm.run()
+        got = execute_complete_order(trace, sc.spec, seed)
+        want = execute_complete_order(calm.trace, sc.spec, seed)
+        for s in range(sc.spec.num_stages):
+            assert want[s].loss == got[s].loss, f"stage {s} loss bits differ"
+            assert np.array_equal(want[s].d_w, got[s].d_w), (
+                f"stage {s} grad bits differ")
+        assert len(result.end) == sc.spec.total_tasks()
+
+
+@pytest.mark.parametrize("seed", SEEDS_FAST)
+def test_sim_recovery_chain(seed):
+    _run_sim(make_scenario(seed), seed)
+
+
+@pytest.mark.parametrize("seed", SEEDS_FAST[:6])
+def test_sim_recovery_dag(seed):
+    _run_sim(make_dag_scenario(seed), seed)
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("seed", SEEDS_SLOW)
+def test_sim_recovery_chain_full_matrix(seed):
+    _run_sim(make_scenario(seed), seed)
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("seed", SEEDS_SLOW[:18])
+def test_sim_recovery_dag_full_matrix(seed):
+    _run_sim(make_dag_scenario(seed), seed)
+
+
+# ---------------------------------------------------------------------------
+# thread substrate: real re-execution through numpy stage programs
+# ---------------------------------------------------------------------------
+def _run_thread(sc, seed: int) -> None:
+    spec = sc.spec
+    cfg, fault = _arm_fault(sc, seed)
+    # wall-clock scale: detect stalls fast, give recovery generous slack
+    cfg = dataclasses.replace(cfg, hb_deadline=0.05, deadlock_timeout=20.0,
+                              recovery_mode="respawn")
+
+    def build(with_fault: bool):
+        progs = [NumpyStageProgram(s, spec, seed) for s in range(spec.num_stages)]
+
+        def respawn(s: int):
+            # in-memory state died with the stage: fresh program, full
+            # re-execution (duplicated effects are dropped downstream)
+            progs[s] = NumpyStageProgram(s, spec, seed)
+            return lambda t, p: progs[s](t, p)
+
+        c = cfg if with_fault else dataclasses.replace(
+            cfg, chaos=dataclasses.replace(cfg.chaos, fail_stage=-1),
+            recover=False, respawn=None)
+        if with_fault:
+            c = dataclasses.replace(c, respawn=respawn)
+        drv = ActorDriver(spec, None, c)
+        fns = [(lambda s: (lambda t, p: progs[s](t, p)))(s)
+               for s in range(spec.num_stages)]
+        return drv, fns, progs, c
+
+    drv, fns, progs, c = build(True)
+    with artifact_on_failure(lambda: drv.trace,
+                             f"recovery_thread_{sc.name()}"):
+        drv.run_threaded(fns)
+        trace = drv.trace
+        assert trace.recovery_windows(), f"fault {fault} never fired"
+        check_all(trace, spec, c)
+        calm_drv, calm_fns, calm_progs, _ = build(False)
+        calm_drv.run_threaded(calm_fns)
+        for p in progs:
+            p.finalize()
+        for p in calm_progs:
+            p.finalize()
+        for s in range(spec.num_stages):
+            assert calm_progs[s].loss == progs[s].loss, (
+                f"stage {s} loss bits differ across recovery")
+            assert np.array_equal(calm_progs[s].d_w, progs[s].d_w), (
+                f"stage {s} grad bits differ across recovery")
+
+
+@pytest.mark.parametrize("seed", SEEDS_FAST[:6])
+def test_thread_recovery_chain(seed):
+    _run_thread(make_scenario(seed, substrate="thread"), seed)
+
+
+@pytest.mark.parametrize("seed", SEEDS_FAST[:3])
+def test_thread_recovery_dag(seed):
+    _run_thread(make_dag_scenario(seed, substrate="thread"), seed)
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("seed", SEEDS_SLOW[:12])
+def test_thread_recovery_full_matrix(seed):
+    _run_thread(make_scenario(seed, substrate="thread"), seed)
+
+
+# ---------------------------------------------------------------------------
+# promotion, guards, and attribution
+# ---------------------------------------------------------------------------
+def test_fault_without_recover_is_promoted():
+    """No recovery armed -> the fault fails fast (StageFailure), on both
+    substrates, instead of hanging to the deadlock timeout."""
+    from repro.core import PipelineSpec
+
+    spec = PipelineSpec(3, 4)
+    chaos = ChaosConfig(fail_stage=1, fail_after=2)
+    with pytest.raises(StageFailure):
+        ActorDriver(spec, sim_costs(spec, 0),
+                    ActorConfig(chaos=chaos)).run()
+    progs = [NumpyStageProgram(s, spec, 0) for s in range(3)]
+    with pytest.raises(StageFailure):
+        ActorDriver(spec, None, ActorConfig(
+            chaos=chaos, hb_deadline=0.05, deadlock_timeout=10.0)
+        ).run_threaded([(lambda s: (lambda t, p: progs[s](t, p)))(s)
+                        for s in range(3)])
+
+
+def test_recovered_trace_replay_is_rejected():
+    """Time-exact replay of a recovered trace is explicitly unsupported."""
+    from repro.core import PipelineSpec
+
+    spec = PipelineSpec(3, 4)
+    drv = ActorDriver(spec, sim_costs(spec, 0), ActorConfig(
+        chaos=ChaosConfig(fail_stage=1, fail_after=2), recover=True,
+        record_trace=True))
+    drv.run()
+    with pytest.raises(ValueError, match="recovered trace"):
+        ActorDriver(spec, None, ActorConfig(
+            record_trace=True, replay=drv.trace)).run()
+
+
+def test_remap_folds_dead_stage_onto_neighbor():
+    """recovery_mode="remap": the dead stage re-hosts on a surviving
+    neighbor and the pair time-share the device — the run still completes
+    exactly-once, and the time-sharing shows up as a longer makespan."""
+    from repro.core import PipelineSpec
+
+    spec = PipelineSpec(4, 8)
+    costs = sim_costs(spec, 1)
+    base = ActorConfig(chaos=ChaosConfig(fail_stage=2, fail_after=1),
+                       recover=True, record_trace=True)
+    respawn = ActorDriver(spec, costs, base).run()
+    remap_cfg = dataclasses.replace(base, recovery_mode="remap")
+    drv = ActorDriver(spec, costs, remap_cfg)
+    remap = drv.run()
+    check_all(drv.trace, spec, remap_cfg)
+    assert drv.trace.recovery_windows()[0]["mode"] == "remap"
+    assert remap.makespan > respawn.makespan  # co-hosting costs throughput
+
+
+def test_killed_stage_gap_attributed_to_recovery():
+    """Bubble decomposition: the outage is a ``recovery`` bubble, not
+    ``dependency_wait``/``starvation``, and exact attribution survives."""
+    from repro.core import PipelineSpec
+    from repro.obs.bubbles import decompose
+
+    spec = PipelineSpec(4, 8)
+    costs = sim_costs(spec, 3)
+    cfg = ActorConfig(chaos=ChaosConfig(fail_stage=1, fail_after=3),
+                      recover=True, record_trace=True,
+                      hb_deadline=0.5, restore_cost=0.25)
+    drv = ActorDriver(spec, costs, cfg)
+    drv.run()
+    rep = decompose(drv.trace)
+    assert rep.idle_fully_attributed()
+    rec = rep.category_totals()["recovery"]
+    w = drv.trace.recovery_windows()[0]
+    outage = w["t_end"] - w["t_fail"]
+    # at minimum the dead stage's own outage is attributed to recovery
+    assert rec >= outage * 0.99
+    # and the calm run has no recovery bubble at all
+    calm_cfg = dataclasses.replace(
+        cfg, chaos=None, recover=False)
+    calm = ActorDriver(spec, costs, calm_cfg)
+    calm.run()
+    calm_rep = decompose(calm.trace)
+    assert calm_rep.category_totals()["recovery"] == 0.0
+    assert calm_rep.idle_fully_attributed()
+
+
+def test_recovery_epoch_visible_in_trace():
+    """The trace records the epoch transition: FAIL at the old epoch,
+    RECOVERY_BEGIN carrying from/to, post-recovery events at the new."""
+    from repro.core import PipelineSpec
+    from repro.runtime.rrfp import trace as tr
+
+    spec = PipelineSpec(3, 6)
+    drv = ActorDriver(spec, sim_costs(spec, 7), ActorConfig(
+        chaos=ChaosConfig(fail_stage=1, fail_kind="permanent_stall",
+                          fail_after=4),
+        recover=True, record_trace=True))
+    drv.run()
+    t = drv.trace
+    assert t.max_epoch() == 1
+    (w,) = t.recovery_windows()
+    assert w["epoch_from"] == 0 and w["epoch_to"] == 1
+    assert w["fail_kind"] == "permanent_stall"
+    fails = t.select(tr.FAIL)
+    assert len(fails) == 1 and fails[0].epoch == 0
+    # the respawned incarnation's completions carry the new epoch
+    late = [ev for ev in t.select(tr.COMPLETE)
+            if ev.stage == 1 and ev.epoch == 1]
+    assert late, "no post-recovery completions on the failed stage"

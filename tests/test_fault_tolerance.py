@@ -76,6 +76,48 @@ def test_elastic_remesh_roundtrip(tmp_path):
                                np.asarray(y2, np.float32), atol=2e-4)
 
 
+def test_shrink_restore_regrow_restore_bitwise_roundtrip(tmp_path):
+    """Shrink -> restore -> regrow -> restore is *bitwise* lossless.
+
+    The elastic path a recovery takes when capacity drops and later returns:
+    checkpoint on 4 stages, re-layout to 2 (shrink), checkpoint, re-layout
+    back to 4 (regrow), checkpoint — then restore the final checkpoint on
+    the host and require every *live layer slot* equal the original *bit
+    for bit* (``np.array_equal`` on host arrays, no tolerance; padding
+    slots — stage/layer positions with no layer assigned — carry no model
+    state and are zeroed by re-layout).  Stage re-layout is a pure
+    permutation of per-layer slots, so any drift in a live slot would mean
+    the relayout or the store corrupted a value."""
+    from repro.models.common import global_layer_index
+    cfg = registry.reduced_config("deepseek-7b", num_layers=6)
+    m4 = build(cfg, num_stages=4)
+    sp4 = jax.tree.map(np.asarray, m4.init_stage_params(jax.random.key(3)))
+    store = CheckpointStore(str(tmp_path))
+
+    store.save(1, {"sp": sp4}, meta={"stages": 4})
+    host1, meta1 = store.restore_host(1, {"sp": sp4})
+    assert meta1["stages"] == 4
+
+    m2, sp2 = relayout_stage_params(m4, 2, host1["sp"])  # shrink
+    store.save(2, {"sp": sp2}, meta={"stages": 2})
+    host2, meta2 = store.restore_host(2, {"sp": sp2})
+    assert meta2["stages"] == 2
+
+    m4b, sp4b = relayout_stage_params(m2, 4, host2["sp"])  # regrow
+    store.save(3, {"sp": sp4b}, meta={"stages": 4})
+    host3, _ = store.restore_host(3, {"sp": sp4b})
+
+    live = global_layer_index(m4.counts) >= 0  # [S, l_max] live-slot mask
+    orig = jax.tree.leaves(sp4)
+    back = jax.tree.leaves(host3["sp"])
+    assert len(orig) == len(back)
+    for a, b in zip(orig, back):
+        a, b = np.asarray(a), np.asarray(b)
+        assert a.dtype == b.dtype and a.shape == b.shape
+        assert np.array_equal(a[live], b[live]), (
+            "round-trip changed live-layer parameter bits")
+
+
 def test_remesh_plans_degrade_gracefully():
     """Losing nodes still yields a runnable grid; pipeline depth prefers 16."""
     assert plan_remesh(512, prefer_model=16).devices == 512

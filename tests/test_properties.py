@@ -13,7 +13,10 @@ The central properties:
   set's presentation order — arbitration depends on task identity only;
 * mailbox buffers are FIFO per kind regardless of kind interleaving, and
   TP-group admission commits at the last-rank arrival independent of the
-  rank arrival permutation.
+  rank arrival permutation;
+* epoch fencing is *total*: under any interleaving, an envelope from a
+  recovery epoch older than its mailbox's is always dropped (never admitted,
+  never payload-stashed) and an envelope at or above it never is.
 """
 import itertools
 
@@ -186,6 +189,65 @@ def test_tp_admission_permutation_invariant(tp, perm_seed):
         else:
             assert adm is not None and adm.task == task
             assert adm.spread == float(tp - 1)  # first at 0, last at tp-1
+
+
+# ---------------------------------------------------------------------------
+# epoch fencing: total under any interleaving
+# ---------------------------------------------------------------------------
+@settings(max_examples=50, deadline=None)
+@given(seed=st.integers(0, 10_000), n=st.integers(1, 14),
+       mb_epoch=st.integers(1, 3), tp=st.integers(1, 3),
+       perm_seed=st.integers(0, 10_000))
+def test_epoch_fencing_is_total(seed, n, mb_epoch, tp, perm_seed):
+    """Fencing is total: under *any* interleaving of stale and live
+    envelopes, every envelope whose epoch is older than the mailbox's is
+    dropped before the TP admission gate, and every live one (same or newer
+    epoch) admits normally — fencing never loses a live message and never
+    leaks a stale one into a respawned incarnation's buffers."""
+    rng = np.random.default_rng([0xFE2CE, seed])
+    tasks = _ready_set(seed, n, split=True)
+    # per-task epoch: some strictly below the mailbox's (stale stragglers
+    # from a pre-failure incarnation), some at or above it
+    epoch_of = {t: int(rng.integers(0, mb_epoch + 2)) for t in tasks}
+    envs = [env for t in tasks
+            for env in envelopes_for(t, src_stage=1, tp_degree=tp,
+                                     epoch=epoch_of[t])]
+    prng = np.random.default_rng([perm_seed, n, tp])
+    prng.shuffle(envs)
+    mb = Mailbox(stage=0, tp_degree=tp)
+    mb.epoch = mb_epoch
+    for env in envs:
+        mb.deliver(env)
+    live = {t for t in tasks if epoch_of[t] >= mb_epoch}
+    stale_envs = sum(1 for env in envs if env.epoch < mb_epoch)
+    # exactly the stale envelopes fenced: no live message dropped
+    assert mb.fenced == stale_envs
+    # exactly the live tasks admitted: no stale message leaked
+    assert set(mb.arrived_tasks()) == live
+    assert mb.group.admitted == len(live)
+
+
+@settings(max_examples=30, deadline=None)
+@given(seed=st.integers(0, 10_000), tp=st.integers(1, 3),
+       dup=st.integers(1, 3))
+def test_stale_duplicates_fenced_after_live_admission(seed, tp, dup):
+    """An old-epoch duplicate arriving *after* its task was admitted at the
+    live epoch is still fenced — it can neither re-admit the task nor
+    overwrite the admitted payload."""
+    task = Task(Kind.F, 0, 2)
+    mb = Mailbox(stage=0, tp_degree=tp)
+    mb.epoch = 1
+    for env in envelopes_for(task, src_stage=1, tp_degree=tp,
+                             payload="live", epoch=1):
+        mb.deliver(env)
+    assert mb.arrived_tasks() == [task]
+    for _ in range(dup):
+        for env in envelopes_for(task, src_stage=1, tp_degree=tp,
+                                 payload="stale", epoch=0):
+            mb.deliver(env)
+    assert mb.fenced == dup * tp
+    assert mb.arrived_tasks() == [task]  # no re-admission
+    assert mb.payloads[task][1] == "live"
 
 
 @settings(max_examples=30, deadline=None)
