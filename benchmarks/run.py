@@ -17,9 +17,12 @@ real-jitted-callable threaded run, emitting ``BENCH_bfw.json``.  Adding
 chaos_sweep``): both consumption modes across chaos levels C0..C3 with
 per-run conformance-invariant checks, emitting ``BENCH_chaos.json``.
 ``--bubbles`` runs the bubble-decomposition report (``benchmarks.
-bubble_decomposition``, emits ``BENCH_bubbles.json``); ``--metrics-report``
-/ ``--export-perfetto PATH`` run a single metrics-instrumented probe and
-print the telemetry table / write a Chrome-trace JSON.
+bubble_decomposition``, emits ``BENCH_bubbles.json``); ``--adaptive`` runs
+the adaptive-scheduling benchmark (``benchmarks.adaptive_compare``): static
+hint decay vs online re-synthesis + hot-swap under drifting costs, emitting
+``BENCH_adaptive.json``; ``--metrics-report`` / ``--export-perfetto PATH``
+run a single metrics-instrumented probe and print the telemetry table /
+write a Chrome-trace JSON.
 """
 from __future__ import annotations
 
@@ -67,6 +70,13 @@ def main() -> None:
                          "on the multimodal workloads (emits "
                          "BENCH_bubbles.json; exits nonzero if attribution "
                          "is lossy)")
+    ap.add_argument("--adaptive", action="store_true",
+                    help="actor backend: adaptive-scheduling benchmark — "
+                         "static-hint decay vs online re-synthesis + "
+                         "hot-swap under drifting costs, with swap-trace "
+                         "conformance (emits BENCH_adaptive.json; exits "
+                         "nonzero if adaptive fails to beat static on a "
+                         "drifting cell or flaps on a stationary one)")
     ap.add_argument("--metrics-report", action="store_true",
                     help="actor backend: run one metrics-instrumented probe "
                          "(heavy-encoder DAG under BFW) and print the "
@@ -91,12 +101,14 @@ def main() -> None:
                 "needs W tasks, which only exist under split backward")
         probe = args.metrics_report or args.export_perfetto
         if sum([args.chaos, args.recovery, bfw, args.multimodal,
-                args.dispatch, args.bubbles, bool(probe)]) > 1:
+                args.dispatch, args.bubbles, args.adaptive,
+                bool(probe)]) > 1:
             raise SystemExit("--chaos, --recovery, the BFW sweep, "
-                             "--multimodal, --dispatch, --bubbles and the "
-                             "telemetry probe (--metrics-report/"
-                             "--export-perfetto) are separate reports; run "
-                             "them as separate invocations")
+                             "--multimodal, --dispatch, --bubbles, "
+                             "--adaptive and the telemetry probe "
+                             "(--metrics-report/--export-perfetto) are "
+                             "separate reports; run them as separate "
+                             "invocations")
         if probe:
             from benchmarks.bubble_decomposition import telemetry_probe
 
@@ -125,6 +137,11 @@ def main() -> None:
 
             json_out = args.json_out or "BENCH_multimodal.json"
             label = "multimodal"
+        elif args.adaptive:
+            from benchmarks.adaptive_compare import adaptive_rows as rows_fn
+
+            json_out = args.json_out or "BENCH_adaptive.json"
+            label = "adaptive"
         elif args.chaos:
             from benchmarks.chaos_sweep import chaos_rows as rows_fn
 

@@ -43,13 +43,16 @@ def schedule_search():
     for arch in ARCHS:
         plan = plan_cell(arch, "train_4k", ProductionMeshShape())
         oc = per_op_costs(plan)
-        S, M = 16, plan.num_microbatches
+        # derive S from the planned cell: first/last-stage adjustments
+        # (embed / CE) must land on the plan's actual boundary stages
+        S, M = plan.model.num_stages, plan.num_microbatches
         f = np.full(S, _t(oc["F"]))
         b = np.full(S, _t(oc["B"]))
         f[0] = _t(oc["F"], oc["embed"])
         b[0] = _t(oc["B"], oc["embed"], oc["embed"])
         f[-1] = _t(oc["F"], oc["ce"])
         b[-1] = _t(oc["B_last"])
+        assert f.shape == b.shape == (S,), (f.shape, b.shape, S)
         spec = PipelineSpec(S, M)
         results = {}
         for name, table in candidate_tables(spec, f, b):

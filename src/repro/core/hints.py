@@ -54,6 +54,26 @@ def pick(ready: "Sequence[Task] | ReadySet", kind: Kind) -> Task | None:
     return min(cands, key=_within_direction_key)
 
 
+def table_ranks(order: Sequence[Task]) -> dict[Task, int]:
+    """A synthesized per-stage order as a rank table (task -> position).
+
+    The adaptive runtime consumes re-synthesized schedules this way:
+    the table *ranks* ready work, it never forces waiting on an unready
+    entry — the same non-binding contract as the directional hints.
+    """
+    return {t: i for i, t in enumerate(order)}
+
+
+def _table_key(ranks: dict[Task, int], t: Task) -> tuple:
+    """Total order under a rank table: ranked tasks first (by rank), then
+    unranked ones by the Appendix A within-direction key (injective per
+    stage), so a stale table still dispatches everything deterministically."""
+    r = ranks.get(t)
+    if r is not None:
+        return (0, r)
+    return (1, int(t.kind)) + _within_direction_key(t)
+
+
 class ReadySet:
     """Incremental ready-set index: lazy-deletion heap per task kind.
 
@@ -77,12 +97,17 @@ class ReadySet:
     working unchanged.
     """
 
-    __slots__ = ("_live", "_heaps")
+    __slots__ = ("_live", "_heaps", "_table", "_theap")
 
-    def __init__(self, tasks: Iterable[Task] = ()):
+    def __init__(self, tasks: Iterable[Task] = (),
+                 table: dict[Task, int] | None = None):
         self._live: set[Task] = set()
         self._heaps: dict[Kind, list[tuple[tuple[int, int], Task]]] = {
             k: [] for k in Kind}
+        #: optional rank table (task -> priority); maintains one extra
+        #: cross-kind heap so ``peek_table`` stays amortized O(1)
+        self._table: dict[Task, int] | None = table
+        self._theap: list[tuple[tuple, Task]] = []
         for t in tasks:
             self.add(t)
 
@@ -92,15 +117,37 @@ class ReadySet:
             return
         self._live.add(t)
         heapq.heappush(self._heaps[t.kind], (_within_direction_key(t), t))
+        if self._table is not None:
+            heapq.heappush(self._theap, (_table_key(self._table, t), t))
 
     def discard(self, t: Task) -> None:
         # Lazy: the heap entry stays until it surfaces at a peek.
         self._live.discard(t)
 
+    def set_table(self, ranks: dict[Task, int] | None) -> None:
+        """Install (or drop) a rank table — the hot-swap point.
+
+        Rebuilds the cross-kind heap from the live set: O(n) for n ready
+        tasks, paid once per swap (iteration boundaries), never on the
+        dispatch hot path."""
+        self._table = ranks
+        if ranks is None:
+            self._theap = []
+            return
+        self._theap = [(_table_key(ranks, t), t) for t in self._live]
+        heapq.heapify(self._theap)
+
     # ---- queries ----------------------------------------------------------
     def peek(self, kind: Kind) -> Task | None:
         """The within-direction minimum ready task of ``kind`` (or None)."""
         heap = self._heaps[kind]
+        while heap and heap[0][1] not in self._live:
+            heapq.heappop(heap)
+        return heap[0][1] if heap else None
+
+    def peek_table(self) -> Task | None:
+        """The rank-table minimum over *all* ready tasks (or None)."""
+        heap = self._theap
         while heap and heap[0][1] not in self._live:
             heapq.heappop(heap)
         return heap[0][1] if heap else None
@@ -131,6 +178,11 @@ class HintArbiter:
 
     hint: HintKind = HintKind.BF
     last_dir: Kind | None = None
+    #: optional rank table (task -> priority).  When set, ``select``
+    #: serves the minimum-rank ready task instead of the directional
+    #: round structure — same non-binding contract, finer priorities.
+    #: Swapped at runtime via :meth:`set_table` (adaptive re-synthesis).
+    table: dict[Task, int] | None = None
 
     def try_order(self) -> tuple[Kind, ...]:
         """The kind preference the *next* ``select`` will scan, in order.
@@ -184,6 +236,13 @@ class HintArbiter:
         (the production hot path); with a plain sequence it is the
         reference linear scan.  Decisions are identical either way.
         """
+        if self.table is not None:
+            if isinstance(ready, ReadySet):
+                return ready.peek_table()
+            if not ready:
+                return None
+            ranks = self.table
+            return min(ready, key=lambda t: _table_key(ranks, t))
         for k in self.try_order():
             t = pick(ready, k)
             if t is not None:
@@ -197,6 +256,10 @@ class HintArbiter:
 
     def reset(self) -> None:
         self.last_dir = None
+
+    def set_table(self, ranks: dict[Task, int] | None) -> None:
+        """Hot-swap the rank table (None reverts to the directional hint)."""
+        self.table = ranks
 
 
 def backpressure_drain(

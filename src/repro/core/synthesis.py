@@ -52,13 +52,47 @@ def synthesize(
     base = Engine(
         spec,
         cm,
-        EngineConfig(mode="precommitted", fixed_order="1f1b"),
+        EngineConfig(
+            mode="precommitted",
+            # zero-bubble is the natural fixed-order baseline once the
+            # backward is split; 1F1B is undefined for BFW specs
+            fixed_order="zb" if spec.split_backward else "1f1b",
+        ),
     ).run()
     return SynthesisResult(
         stage_orders=rrfp.stage_orders(),
         sim_makespan=rrfp.makespan,
         baseline_makespan=base.makespan,
     )
+
+
+def price_orders(
+    spec: PipelineSpec,
+    orders: list[list[Task]],
+    costs: CostModel,
+    use_expected_costs: bool = True,
+) -> float:
+    """Predicted makespan of a candidate stage-order table under ``costs``.
+
+    Runs the DES engine in pre-committed mode over the candidate orders —
+    the same pricing model ``synthesize`` uses for its 1F1B baseline, so a
+    re-synthesized table and the currently-active one are compared on
+    equal footing.  The adaptive runtime's drift detector calls this with
+    the *measured* (jitter-free EWMA snapshot) cost model: a swap happens
+    only when the candidate's predicted makespan beats the active
+    table's by the configured threshold (docs/adaptive.md).
+    """
+    cm = costs.expected() if use_expected_costs else costs
+    # Async sends: the adaptive runtime executes tables on the actor
+    # substrate (mailbox sends, no rendezvous).  Sync rendezvous would also
+    # deadlock here — an RRFP-synthesized order can run sends arbitrarily
+    # far ahead of the receiver's 2-deep recv window.
+    r = Engine(
+        spec, cm,
+        EngineConfig(mode="precommitted", custom_orders=orders,
+                     sync_sends=False),
+    ).run()
+    return r.makespan
 
 
 def ema_update_costs(

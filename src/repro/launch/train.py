@@ -100,7 +100,7 @@ def _obs_registry(args):
 
 def _obs_finish(args, registry, trace) -> None:
     """End-of-run sync point: print the summary table, export Perfetto."""
-    if registry is not None:
+    if registry is not None and getattr(args, "metrics_report", False):
         print("\nper-stage metrics (accumulated over all steps):")
         print(registry.report())
     if getattr(args, "export_perfetto", None):
@@ -354,6 +354,31 @@ def train_actor(args) -> list[float]:
             f"not {args.schedule!r}")
     # NB: name must not shadow the module-level arch ``registry`` used above
     metrics_reg = _obs_registry(args)
+    scheduler = None
+    if args.adaptive:
+        if mode != "hint":
+            raise SystemExit("--adaptive re-synthesizes the hint table; it "
+                             "requires --schedule rrfp")
+        if args.replay_trace:
+            raise SystemExit("--adaptive changes the hint table between "
+                             "steps; combining it with --replay-trace is "
+                             "undefined")
+        from repro.obs import MetricsRegistry
+        from repro.runtime.adaptive import AdaptiveConfig, AdaptiveScheduler
+
+        if metrics_reg is None:
+            metrics_reg = MetricsRegistry(args.stages)
+        # synthesis prices tables on an expected cost model; the registry's
+        # measured EWMAs (real stage timings) overwrite it cell by cell
+        base_costs = CostModel.uniform(args.stages)
+        if split:
+            base_costs = base_costs.with_split_backward()
+        scheduler = AdaptiveScheduler(
+            spec, base_costs,
+            AdaptiveConfig(resynth_every=args.resynth_every,
+                           swap_threshold=args.swap_threshold,
+                           hint=hint),
+            registry=metrics_reg)
     acfg = ActorConfig(mode=mode, hint=hint, fixed_order=fixed,
                        w_defer_cap=args.w_defer_cap,
                        deadlock_timeout=args.deadlock_timeout,
@@ -428,6 +453,12 @@ def train_actor(args) -> list[float]:
             getattr(args, "export_perfetto", None))) and step == start_step
         acfg_step = dataclasses.replace(acfg, respawn=respawn) \
             if args.recover else acfg
+        if scheduler is not None:
+            # iteration-boundary quiesce point: adopt the scheduler's
+            # current table (HINT_SWAP events mark mid-run adoptions only)
+            acfg_step = dataclasses.replace(
+                acfg_step, hint_table=scheduler.table,
+                hint_table_version=scheduler.version)
         driver = ActorDriver(
             spec, None,
             dataclasses.replace(acfg_step, record_trace=True) if record_this
@@ -456,17 +487,28 @@ def train_actor(args) -> list[float]:
                       f"-> {args.record_trace}")
         bd = result.breakdown()
         new_table = monitor.observe_result(result)
+        swap_note = ""
+        if scheduler is not None:
+            decision = scheduler.maybe_resynthesize(step)
+            if decision.swapped:
+                swap_note = (f"  [hint-swap v{scheduler.version} "
+                             f"ratio={decision.ratio:.3f}]")
         dt = time.time() - t0
         print(f"step {step:4d}  loss {loss:8.4f}  lr {float(lr):.2e}  "
               f"{dt*1e3:7.1f} ms  makespan {result.makespan*1e3:7.1f} ms  "
               f"blocking {bd['blocking']*1e3:6.1f} ms"
-              + ("  [replan]" if new_table is not None else ""))
+              + ("  [replan]" if new_table is not None else "")
+              + swap_note)
         if store and (step + 1) % args.ckpt_every == 0:
             store.save(step + 1,
                        {"params": params, "m": mstate, "v": vstate},
                        meta={"arch": args.arch, "step": step + 1})
     if monitor.replans:
         print(f"straggler monitor triggered {monitor.replans} replan(s)")
+    if scheduler is not None and scheduler.swaps:
+        print(f"adaptive scheduler swapped the hint table "
+              f"{len(scheduler.swaps)} time(s) at step(s) {scheduler.swaps} "
+              f"(table v{scheduler.version})")
     _obs_finish(args, metrics_reg, obs_trace)
     return losses
 
@@ -534,6 +576,19 @@ def main() -> None:
                     help="actor runtime: export the step-0 trace as Chrome "
                          "trace-event JSON (open at ui.perfetto.dev); "
                          "implies step-0 recording")
+    ap.add_argument("--adaptive", action="store_true",
+                    help="actor runtime, --schedule rrfp: close the "
+                         "schedule loop — accumulate measured per-stage "
+                         "timings, re-synthesize the hint table every "
+                         "--resynth-every steps, and hot-swap it at the "
+                         "iteration boundary when the drift detector fires "
+                         "(docs/adaptive.md)")
+    ap.add_argument("--resynth-every", type=int, default=1,
+                    help="--adaptive: drift-detector cadence in steps")
+    ap.add_argument("--swap-threshold", type=float, default=1.03,
+                    help="--adaptive: required predicted-makespan "
+                         "improvement factor (active/candidate) before a "
+                         "check counts toward the swap hysteresis")
     ap.add_argument("--recover", action="store_true",
                     help="actor runtime: treat a fail-stop fault (--chaos "
                          "fail_stage=S[,fail_kind=kill|permanent_stall,"
@@ -560,6 +615,10 @@ def main() -> None:
     if args.recover and not (args.runtime == "actor"
                              and args.workload == "language"):
         raise SystemExit("--recover drives the thread-per-stage actor "
+                         "runtime; add --runtime actor (language workload)")
+    if args.adaptive and not (args.runtime == "actor"
+                              and args.workload == "language"):
+        raise SystemExit("--adaptive drives the thread-per-stage actor "
                          "runtime; add --runtime actor (language workload)")
     if args.workload == "multimodal":
         args.runtime = "actor"  # the DAG only runs on the actor runtime

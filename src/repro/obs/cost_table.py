@@ -70,6 +70,17 @@ class Ewma:
         self._value = value
         self._count = count
 
+    def downweight(self, keep: int = 1) -> None:
+        """Collapse history to a weak prior (recovery boundaries).
+
+        The current value survives as a prior worth ``keep`` samples, so
+        post-recovery observations dominate quickly while cold cells still
+        have a sane starting point.  No-op on an empty cell.
+        """
+        self._fold()
+        if self._value is not None:
+            self._count = min(self._count, max(0, keep))
+
     def __repr__(self) -> str:
         return f"Ewma(alpha={self.alpha}, value={self.value}, count={self.count})"
 
@@ -119,19 +130,28 @@ class OnlineCostTable:
         COMPLETE events are consumed in logical-clock order (the EWMA is
         order-sensitive); SEND→DELIVER pairs match on envelope ``seq``, so
         chaos-duplicated copies each contribute their own latency sample.
+
+        Recovered traces need epoch hygiene: a FENCEd delivery is a
+        stale-epoch envelope the mailbox rejected, and a SEND→DELIVER pair
+        straddling an epoch bump spans the recovery outage itself — neither
+        is a transport-latency sample.  Only same-epoch, non-fenced pairs
+        feed the comm EWMA.
         """
         from repro.runtime.rrfp import trace as _tr
 
-        sends: dict[int, float] = {}
+        fenced = {int(ev.info["seq"]) for ev in trace.events
+                  if ev.kind == _tr.FENCE and "seq" in ev.info}
+        sends: dict[int, tuple[float, int]] = {}
         for ev in trace.events:
             if ev.kind == _tr.COMPLETE and "dur" in ev.info:
                 self.observe(ev.stage, ev.task.kind, float(ev.info["dur"]))
             elif ev.kind == _tr.SEND and "seq" in ev.info:
-                sends.setdefault(int(ev.info["seq"]), ev.t)
+                sends.setdefault(int(ev.info["seq"]), (ev.t, ev.epoch))
             elif ev.kind == _tr.DELIVER and "seq" in ev.info:
-                t0 = sends.get(int(ev.info["seq"]))
-                if t0 is not None:
-                    self.observe_comm(ev.t - t0)
+                seq = int(ev.info["seq"])
+                rec = sends.get(seq)
+                if rec is not None and rec[1] == ev.epoch and seq not in fenced:
+                    self.observe_comm(ev.t - rec[0])
         return self
 
     # ---- reading -----------------------------------------------------------

@@ -55,8 +55,9 @@ from repro.core.taskgraph import Kind, Task
 
 from repro.obs.cost_table import Ewma, OnlineCostTable
 
-#: arbitration-path labels, fixed order for stable reports
-PATHS = ("hint", "backpressure", "wcap", "precommitted")
+#: arbitration-path labels, fixed order for stable reports ("table" =
+#: synthesized-rank table consumed as a non-binding hint, see docs/adaptive.md)
+PATHS = ("hint", "table", "backpressure", "wcap", "precommitted")
 
 #: default duration buckets: 1 µs .. 100 s, 8 buckets per decade
 DURATION_EDGES = None  # computed below (module import time, once)
@@ -299,21 +300,38 @@ class MetricsRegistry:
 
     def __init__(self, num_stages: int = 0, alpha: float = 0.1):
         self.alpha = alpha
-        self._shards: list[StageShard] = [
-            StageShard(s, alpha) for s in range(num_stages)]
+        #: keyed by *logical* stage — a respawned/remapped incarnation
+        #: reuses its logical stage's shard, so co-hosted stages never
+        #: merge their durations into one cell (cost-table correctness)
+        self._shards: dict[int, StageShard] = {
+            s: StageShard(s, alpha) for s in range(num_stages)}
 
     @property
     def num_stages(self) -> int:
-        return len(self._shards)
+        return max(self._shards) + 1 if self._shards else 0
 
     def shard(self, stage: int) -> StageShard:
-        """The single-writer shard for ``stage`` (created on first use)."""
-        while stage >= len(self._shards):
-            self._shards.append(StageShard(len(self._shards), self.alpha))
-        return self._shards[stage]
+        """The single-writer shard for logical ``stage`` (created on first
+        use).  Sparse creation is fine: rows are keyed, not positional."""
+        sh = self._shards.get(stage)
+        if sh is None:
+            sh = self._shards[stage] = StageShard(stage, self.alpha)
+        return sh
 
     def shards(self) -> list[StageShard]:
-        return list(self._shards)
+        return [self._shards[s] for s in sorted(self._shards)]
+
+    def on_recovery(self, stage: int, keep: int = 1) -> None:
+        """RECOVERY_END boundary: the new incarnation may run at a
+        different speed (cold caches, remapped device time-sharing) —
+        collapse the stage's EWMAs to weak priors so post-recovery
+        samples dominate instead of averaging across incarnations."""
+        sh = self._shards.get(stage)
+        if sh is None:
+            return
+        for e in sh.cost_ewma:
+            e.downweight(keep)
+        sh.comm_ewma.downweight(keep)
 
     # ---- sync-point aggregation -------------------------------------------
     def totals(self) -> dict:
@@ -321,7 +339,7 @@ class MetricsRegistry:
         paths = {p: 0 for p in PATHS}
         div = [0, 0, 0]
         tp_admits = tp_holds = tp_dups = bp = wcap = fanin = 0
-        for sh in self._shards:
+        for sh in self.shards():
             for k in Kind:
                 disp[k.name] += sh.dispatches[k]
             for p in PATHS:
@@ -344,8 +362,8 @@ class MetricsRegistry:
         """Snapshot the live per-(stage, kind) EWMAs as an
         :class:`~repro.obs.cost_table.OnlineCostTable` (ROADMAP item 3's
         input for hint re-synthesis)."""
-        table = OnlineCostTable(len(self._shards), alpha=self.alpha)
-        for sh in self._shards:
+        table = OnlineCostTable(self.num_stages, alpha=self.alpha)
+        for sh in self.shards():
             for k in Kind:
                 e = sh.cost_ewma[k]
                 if e.count:
@@ -355,7 +373,7 @@ class MetricsRegistry:
         return table
 
     def to_json(self) -> dict:
-        return {"stages": [sh.to_json() for sh in self._shards],
+        return {"stages": [sh.to_json() for sh in self.shards()],
                 "totals": self.totals()}
 
     def report(self) -> str:
@@ -369,7 +387,7 @@ class MetricsRegistry:
         def fmt(v: float | None) -> str:
             return f"{v * 1e3:.3f}ms" if v is not None else "-"
 
-        for sh in self._shards:
+        for sh in self.shards():
             disp = sum(sh.dispatches)
             fbw = "/".join(str(sh.dispatches[k]) for k in Kind)
             lines.append(

@@ -13,8 +13,9 @@ Layering (bottom-up):
   transport -- SimTransport (virtual clock, injectable heavy-tailed latency)
                / ThreadTransport (thread-per-stage, real callables)
   chaos     -- CRN-keyed fault injection: per-edge latency, reorder,
-               duplication, stragglers, transient stalls, fail-stop faults
-               (kill / permanent_stall) — both substrates
+               duplication, stragglers, transient stalls, drifting costs
+               (``drift_chaos``: the adaptive-rescheduling regime),
+               fail-stop faults (kill / permanent_stall) — both substrates
   actor     -- ready-set arbitration + App. C backpressure + thread loop
   driver    -- builds/wires everything; emits core.engine.RunResult traces,
                records event traces, replays recorded runs; with
@@ -27,12 +28,14 @@ recorded traces and how to record/replay a run.
 from repro.runtime.rrfp.actor import StageActor, TaskTrace
 from repro.runtime.rrfp.chaos import (
     CHAOS_LEVELS,
+    DRIFT_PROFILES,
     FAIL_KINDS,
     MODALITY_PROFILE_NAMES,
     ChaosConfig,
     ChaosEngine,
     ChaosThreadTransport,
     StageFailure,
+    drift_chaos,
     modality_profile,
     parse_chaos,
 )
@@ -65,6 +68,7 @@ __all__ = [
     "Admission",
     "CHAOS_LEVELS",
     "ChaosConfig",
+    "DRIFT_PROFILES",
     "ChaosEngine",
     "ChaosThreadTransport",
     "EdgePayloads",
@@ -85,6 +89,7 @@ __all__ = [
     "TraceEvent",
     "TraceRecorder",
     "average_makespan_actor",
+    "drift_chaos",
     "engine_replay_config",
     "envelopes_for",
     "parse_chaos",

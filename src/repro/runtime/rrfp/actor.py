@@ -32,6 +32,7 @@ from repro.core.hints import (
     ReadySet,
     backpressure_drain,
     pick,
+    table_ranks,
 )
 from repro.core.taskgraph import Kind, PipelineSpec, Task
 
@@ -70,19 +71,36 @@ class StageActor:
         reference_arbitration: bool = False,
         trace_full_ready: bool = False,
         metrics=None,
+        table: list[Task] | None = None,
+        table_version: int = 0,
     ):
         if mode not in ("hint", "precommitted"):
             raise ValueError(f"unknown mode {mode!r}")
         if mode == "precommitted" and order is None:
             raise ValueError("precommitted mode needs a per-stage order")
+        if table is not None and mode != "hint":
+            raise ValueError("a rank table is a hint-mode consumption knob")
         self.idx = idx
         self.spec = spec
         self.mailbox = mailbox
         self.recorder = mailbox.recorder
         self.mode = mode
         self.arbiter = HintArbiter(hint)
+        #: synthesized-schedule-as-data: when set, the arbiter serves the
+        #: minimum-rank ready task under this table instead of the
+        #: directional round structure (still non-binding; see
+        #: docs/adaptive.md).  Hot-swapped mid-run via set_hint_table().
+        self.table_version = table_version
+        if table is not None:
+            self.arbiter.table = table_ranks(table)
         self.order = order
         self.order_pos = 0
+        #: thread-substrate swap trigger (driver-armed): adopt swap_table
+        #: after this stage's swap_after-th completion — a per-stage
+        #: quiesce point (no task in flight when it fires)
+        self.swap_table: list[Task] | None = None
+        self.swap_after: int | None = None
+        self._n_complete = 0
         self.buffer_limit = buffer_limit
         self.w_defer_cap = w_defer_cap
         #: verification knob: arbitrate via the reference sort-then-rank
@@ -95,7 +113,7 @@ class StageActor:
         #: (:class:`repro.obs.metrics.StageShard`), or None = zero-cost
         self.metrics = metrics
         self.arrived: set[Task] = set()
-        self.ready = ReadySet()
+        self.ready = ReadySet(table=self.arbiter.table)
         self.done: set[Task] = set()
         #: ready-set additions since the last recorded dispatch (diff-mode
         #: trace snapshots; maintained only while a recorder is attached)
@@ -164,6 +182,27 @@ class StageActor:
                 and self.w_defer_cap > 0
                 and self.w_backlog() >= self.w_defer_cap)
 
+    def set_hint_table(self, order: list[Task], now: float = 0.0,
+                       version: int | None = None) -> None:
+        """Hot-swap a re-synthesized rank table into the live arbiter.
+
+        Schedules are data: the swap replaces a priority table (O(ready)
+        heap rebuild), no recompilation, no draining of in-flight work
+        beyond the caller's quiesce point — the sim driver fires it
+        between heap events, the thread loop under the mailbox condition
+        right after a completion.  Recorded as a HINT_SWAP trace event
+        (with the full new order) so replay and the conformance
+        table-faithfulness check reconstruct the active table exactly."""
+        ranks = table_ranks(order)
+        self.arbiter.set_table(ranks)
+        self.ready.set_table(ranks)
+        self.table_version = (self.table_version + 1 if version is None
+                              else version)
+        if self.recorder is not None:
+            self.recorder.record(
+                _tr.HINT_SWAP, self.idx, t=now, version=self.table_version,
+                order=[_tr.task_key(t) for t in order])
+
     def select(self) -> Task | None:
         """Pick the next task to dispatch from the *currently* ready set."""
         return self.select_traced()[0]
@@ -218,6 +257,10 @@ class StageActor:
         task = self.arbiter.select(sorted(self.ready) if ref else self.ready)
         if not obs or task is None:
             return task, None
+        if self.arbiter.table is not None:
+            # rank-table consumption: no directional round structure, so
+            # no order/slot — faithfulness is checked against the table
+            return task, {"path": "table", "tv": self.table_version}
         info: dict = {"path": "hint"}
         if rec:
             info["order"] = [
@@ -370,6 +413,11 @@ class StageActor:
             self.stats.compute += end - start
             with self.mailbox.cond:
                 succs = self.complete(task, now=end, dur=end - start)
+                self._n_complete += 1
+                if (self.swap_table is not None
+                        and self._n_complete == self.swap_after):
+                    # quiesce point: this stage holds no in-flight task
+                    self.set_hint_table(self.swap_table, now=end)
                 self.mailbox.touch()
             self.traces.append(TaskTrace(task, start, end))
             idle_since = end

@@ -29,6 +29,11 @@ Perturbations (all off by default):
 * **transient stalls** — with ``stall_prob`` per task, the stage blocks for
   an Exp(``stall_scale``) pause before executing (a GC pause / preemption
   analog);
+* **drifting costs** — per-stage compute slowdowns that develop *across
+  training steps* (``drift_profile``: a slow ramp or a step change),
+  deterministic in (config, stage, step): the regime where a
+  statically-synthesized schedule decays and adaptive re-synthesis
+  (``runtime.adaptive``) holds its speedup;
 * **fail-stop faults** — a stage *dies*: ``kill`` (the actor vanishes
   mid-task; its in-memory state is lost) or ``permanent_stall`` (the actor
   hangs forever — indistinguishable from death to the control plane, which
@@ -56,6 +61,10 @@ from repro.runtime.rrfp.messages import Envelope
 
 #: fail-stop fault kinds
 FAIL_KINDS = ("kill", "permanent_stall")
+
+#: drifting-cost profiles ("" = off): how a stage's compute slowdown
+#: develops over training steps (see ChaosConfig.drift_scale)
+DRIFT_PROFILES = ("", "ramp", "step")
 
 
 class StageFailure(RuntimeError):
@@ -107,23 +116,58 @@ class ChaosConfig:
     #: fail-stop fault: CRN-sampled — each stage independently dies with
     #: this probability, at a death point drawn from (seed, stage)
     fail_prob: float = 0.0
+    #: ---- drifting compute costs (adaptive-scheduling scenarios) ----------
+    #: "" (off) | "ramp" (slowdown grows linearly over drift_period steps,
+    #: then holds) | "step" (slowdown switches on at step == drift_period)
+    drift_profile: str = ""
+    #: per-stage drift targets: ((stage, peak_factor), ...), factor >= 1 —
+    #: the stage's compute slowdown once the drift has fully developed
+    drift: tuple[tuple[int, float], ...] = ()
+    #: steps to full ramp / the step-change point
+    drift_period: int = 8
+    #: the current training iteration — the drift's time axis.  The caller
+    #: advances it between runs (``dataclasses.replace(chaos, step=k)``);
+    #: within one run the scale is constant, so CRN keying is untouched.
+    step: int = 0
 
     def __post_init__(self):
         if self.fail_kind not in FAIL_KINDS:
             raise ValueError(
                 f"fail_kind must be one of {FAIL_KINDS}, "
                 f"got {self.fail_kind!r}")
+        if self.drift_profile not in DRIFT_PROFILES:
+            raise ValueError(
+                f"drift_profile must be one of {DRIFT_PROFILES}, "
+                f"got {self.drift_profile!r}")
 
     def active(self) -> bool:
         return (self.latency_base > 0 or self.reorder_prob > 0
                 or self.duplicate_prob > 0 or bool(self.straggler)
                 or self.stall_prob > 0 or self.fail_stage >= 0
-                or self.fail_prob > 0)
+                or self.fail_prob > 0
+                or bool(self.drift_profile and self.drift))
+
+    def drift_scale(self, stage: int) -> float:
+        """Deterministic per-stage compute slowdown at ``self.step``.
+
+        A pure function of (config, stage, step): no RNG draw, so drift
+        composes with CRN chaos keying and replays exactly."""
+        if not self.drift_profile:
+            return 1.0
+        mag = dict(self.drift).get(stage)
+        if mag is None:
+            return 1.0
+        if self.drift_profile == "ramp":
+            f = min(1.0, self.step / max(1, self.drift_period))
+        else:  # "step"
+            f = 1.0 if self.step >= self.drift_period else 0.0
+        return 1.0 + (mag - 1.0) * f
 
     def to_json(self) -> dict:
         d = dataclasses.asdict(self)
         d["edge_scale"] = [[list(k), v] for k, v in self.edge_scale]
         d["straggler"] = [list(kv) for kv in self.straggler]
+        d["drift"] = [list(kv) for kv in self.drift]
         return d
 
 
@@ -199,6 +243,34 @@ def modality_profile(
         f"available: {MODALITY_PROFILE_NAMES}")
 
 
+def drift_chaos(
+    profile: str,
+    targets: dict[int, float] | tuple[tuple[int, float], ...] | list[tuple[int, float]],
+    period: int = 8,
+    level: str | ChaosConfig = "C0",
+    seed: int | None = None,
+) -> ChaosConfig:
+    """A drifting-cost scenario on top of a chaos intensity level.
+
+    ``profile`` is ``"ramp"`` (slow creep — thermal throttling, a failing
+    NIC's retransmits, a co-tenant warming up) or ``"step"`` (regime change
+    — a remapped stage landing on a time-shared device, a frequency cap
+    kicking in).  ``targets`` names the stages that slow down and their
+    peak factors; the drift develops over ``period`` steps, advanced by
+    the caller via ``dataclasses.replace(chaos, step=k)`` per iteration.
+    This is the regime where a statically-synthesized hint decays and the
+    adaptive re-synthesizer earns its keep (benchmarks/adaptive_compare).
+    """
+    base = CHAOS_LEVELS[level] if isinstance(level, str) else level
+    if seed is not None:
+        base = dataclasses.replace(base, seed=seed)
+    pairs = targets.items() if isinstance(targets, dict) else targets
+    return dataclasses.replace(
+        base, drift_profile=profile,
+        drift=tuple((int(s), float(f)) for s, f in pairs),
+        drift_period=int(period))
+
+
 def parse_chaos(spec: str) -> ChaosConfig:
     """CLI syntax: a level name and/or comma-separated key=value overrides.
 
@@ -222,15 +294,16 @@ def parse_chaos(spec: str) -> ChaosConfig:
                 f"bad chaos spec {part!r}: expected a level in "
                 f"{sorted(CHAOS_LEVELS)} or key=value")
         key, val = part.split("=", 1)
-        if key == "straggler":
+        if key in ("straggler", "drift"):
             pairs = tuple(
                 (int(s), float(f))
                 for s, f in (kv.split(":") for kv in val.split("+")))
-            cfg = dataclasses.replace(cfg, straggler=pairs)
-        elif key in ("seed", "max_duplicates", "fail_stage", "fail_after"):
+            cfg = dataclasses.replace(cfg, **{key: pairs})
+        elif key in ("seed", "max_duplicates", "fail_stage", "fail_after",
+                     "drift_period", "step"):
             cfg = dataclasses.replace(cfg, **{key: int(val)})
-        elif key == "fail_kind":
-            cfg = dataclasses.replace(cfg, fail_kind=val)
+        elif key in ("fail_kind", "drift_profile"):
+            cfg = dataclasses.replace(cfg, **{key: val})
         else:
             cfg = dataclasses.replace(cfg, **{key: float(val)})
     return cfg
@@ -290,7 +363,9 @@ class ChaosEngine:
 
     # ---- compute -----------------------------------------------------------
     def compute_scale(self, stage: int) -> float:
-        return self._straggler.get(stage, 1.0)
+        """Static straggler factor x the drift profile's step-``k`` factor
+        (both deterministic; the product is what realized durations see)."""
+        return self._straggler.get(stage, 1.0) * self.cfg.drift_scale(stage)
 
     def stall(self, task: Task) -> float:
         """Transient stage stall before executing ``task`` (seconds)."""

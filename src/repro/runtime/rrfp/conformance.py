@@ -28,6 +28,10 @@ mode under *any* variability, which is the paper's §3 correctness claim):
   order only when the hinted task is unready: no ready task of a preferred
   direction is skipped, and within a direction the App. A minimum ready
   candidate is picked;
+* **table faithfulness** — under an (adaptively re-synthesized) rank
+  table, each table-path dispatch serves the minimum-rank ready task of
+  the table active at that logical clock (initial table from trace meta,
+  mid-run swaps replayed from ``HINT_SWAP`` events);
 * **wcap path** — dispatches forced by the W cap actually retire a W;
 * **recovery exactly-once** — on a trace with recovery windows
   (:meth:`Trace.recovery_windows`), no microbatch is lost or doubled across
@@ -228,6 +232,47 @@ def check_hint_faithful(trace: tr.Trace, spec: PipelineSpec) -> None:
             f"priority prefers ready {best}")
 
 
+def check_table_faithful(trace: tr.Trace, spec: PipelineSpec) -> None:
+    """Table-path dispatches serve the minimum-rank ready task.
+
+    The active rank table is reconstructed from the trace itself: the
+    meta-recorded initial ``hint_table`` plus every HINT_SWAP event (each
+    carries the stage's full new order), applied in logical-clock
+    sequence — so the check is exact across mid-run hot-swaps and
+    recovery re-adoptions.  For each dispatch on the ``table`` path the
+    dispatched task must be the minimum of the recorded ready snapshot
+    under the active table's total order (ranked tasks by position,
+    unranked ones after, by the App. A key) — i.e. the table, like the
+    directional hints, is deviated from only through unreadiness.
+    """
+    from repro.core.hints import _table_key, table_ranks
+
+    active: dict[int, dict] = {}
+    meta_tbl = trace.meta.get("hint_table")
+    if meta_tbl is not None:
+        for s, order in enumerate(meta_tbl):
+            active[s] = table_ranks([tr.task_from_key(k) for k in order])
+    snapshots = None
+    for ev in trace.events:
+        if ev.kind == tr.HINT_SWAP:
+            active[ev.stage] = table_ranks(
+                [tr.task_from_key(k) for k in ev.info["order"]])
+            continue
+        if ev.kind != tr.DISPATCH or ev.info.get("path") != "table":
+            continue
+        ranks = active.get(ev.stage)
+        assert ranks is not None, (
+            f"lc={ev.lc}: table-path dispatch on stage {ev.stage} with no "
+            f"active table (no meta hint_table, no prior HINT_SWAP)")
+        if snapshots is None:
+            snapshots = trace.ready_sets()
+        ready = snapshots[ev.lc]
+        best = min(ready, key=lambda t: _table_key(ranks, t))
+        assert best == ev.task, (
+            f"lc={ev.lc}: dispatched {ev.task} but the active rank table "
+            f"(version {ev.info.get('tv')}) prefers ready {best}")
+
+
 def check_wcap_path(trace: tr.Trace) -> None:
     """Dispatches forced by the W cap must actually retire a W task."""
     for ev in trace.select(tr.DISPATCH):
@@ -252,6 +297,7 @@ def check_all(trace: tr.Trace, spec: PipelineSpec, config) -> None:
     check_w_cap(trace, config.w_defer_cap, config.mode)
     check_backpressure(trace, spec, config.buffer_limit, config.mode)
     check_hint_faithful(trace, spec)
+    check_table_faithful(trace, spec)
     check_wcap_path(trace)
 
 

@@ -166,6 +166,21 @@ class ActorConfig:
     #: stage's program (e.g. params restored via CheckpointStore); None
     #: reuses the original work_fn (stateless programs)
     respawn: Callable[[int], Any] | None = None
+    #: ---- adaptive scheduling (schedules are data; docs/adaptive.md) -----
+    #: hint-mode rank table: per-stage synthesized orders consumed as a
+    #: *non-binding* priority table from t=0 (dispatch path "table").
+    #: Replaces the directional hint without recompilation.
+    hint_table: list[list[Task]] | None = None
+    #: version stamp of hint_table (bumped by the adaptive re-synthesizer
+    #: across iteration-boundary swaps; recorded in trace meta)
+    hint_table_version: int = 0
+    #: mid-run hot-swap target: per-stage orders every live stage adopts
+    #: at its quiesce point, recorded as HINT_SWAP trace events
+    swap_table: list[list[Task]] | None = None
+    #: sim substrate: virtual time of the swap (a dedicated heap event)
+    swap_at: float | None = None
+    #: thread substrate: per-stage completion count triggering the swap
+    swap_after: int | None = None
 
 
 def _compute_rng(seed: int, task: Task) -> np.random.Generator:
@@ -183,10 +198,22 @@ class ActorDriver:
             raise ValueError("cost model / spec stage mismatch")
         if (spec.split_backward and config.mode == "hint"
                 and config.replay is None
-                and config.hint != HintKind.BFW):
+                and config.hint != HintKind.BFW
+                and config.hint_table is None):
             raise ValueError(
                 f"hint mode on a split-backward spec requires HintKind.BFW "
                 f"(got {config.hint}): only the BFW hint dispatches W tasks")
+        for name in ("hint_table", "swap_table"):
+            tbl = getattr(config, name)
+            if tbl is not None and len(tbl) != spec.num_stages:
+                raise ValueError(
+                    f"{name} has {len(tbl)} stage orders for a "
+                    f"{spec.num_stages}-stage spec")
+        if (config.swap_table is not None and config.replay is None
+                and config.swap_at is None and config.swap_after is None):
+            raise ValueError(
+                "swap_table needs a quiesce trigger: swap_at (sim virtual "
+                "time) or swap_after (thread per-stage completion count)")
         self.spec = spec
         self.costs = costs
         self.config = config
@@ -216,6 +243,14 @@ class ActorDriver:
             **({"recover": True, "recovery_mode": cfg.recovery_mode,
                 "hb_deadline": cfg.hb_deadline,
                 "restore_cost": cfg.restore_cost} if cfg.recover else {}),
+            **({"hint_table": [[_tr.task_key(t) for t in o]
+                               for o in cfg.hint_table],
+                "hint_table_version": cfg.hint_table_version}
+               if cfg.hint_table is not None else {}),
+            **({"swap_table": [[_tr.task_key(t) for t in o]
+                               for o in cfg.swap_table],
+                "swap_at": cfg.swap_at, "swap_after": cfg.swap_after}
+               if cfg.swap_table is not None else {}),
         }
 
     def _effective_config(self, substrate: str) -> ActorConfig:
@@ -229,6 +264,12 @@ class ActorDriver:
         if cfg.replay is None:
             return cfg
         meta = cfg.replay.meta
+        def _orders(key: str) -> list[list[Task]] | None:
+            v = meta.get(key)
+            if v is None:
+                return None
+            return [[_tr.task_from_key(k) for k in o] for o in v]
+
         cfg = dataclasses.replace(
             cfg,
             mode=meta.get("mode", cfg.mode),
@@ -237,6 +278,13 @@ class ActorDriver:
             w_defer_cap=meta.get("w_defer_cap", cfg.w_defer_cap),
             tp_degree=meta.get("tp_degree", cfg.tp_degree),
             chaos=None,  # realized durations/arrivals already include chaos
+            # adaptive tables: the recorded run's active table (+ any
+            # mid-run swap) re-derives the same decisions on sim replay
+            hint_table=_orders("hint_table"),
+            hint_table_version=meta.get("hint_table_version", 0),
+            swap_table=_orders("swap_table"),
+            swap_at=meta.get("swap_at"),
+            swap_after=meta.get("swap_after"),
         )
         if substrate == "thread" or cfg.mode == "precommitted":
             # order-exact replay: realized orders become the schedule
@@ -265,11 +313,15 @@ class ActorDriver:
         mb = Mailbox(s, cfg.tp_degree, recorder=recorder,
                      fan_in=spec.fan_in, metrics=shard)
         mb.epoch = epoch
+        table = (cfg.hint_table[s]
+                 if cfg.hint_table is not None and cfg.mode == "hint"
+                 else None)
         actor = StageActor(
             s, spec, mb, mode=cfg.mode, hint=cfg.hint, order=order,
             buffer_limit=cfg.buffer_limit, w_defer_cap=cfg.w_defer_cap,
             reference_arbitration=cfg.reference_arbitration,
-            trace_full_ready=cfg.trace_full_ready, metrics=shard)
+            trace_full_ready=cfg.trace_full_ready, metrics=shard,
+            table=table, table_version=cfg.hint_table_version)
         return mb, actor
 
     def _build_actors(
@@ -462,6 +514,13 @@ class ActorDriver:
         def co_hosted(h: int) -> list[int]:
             return [s2 for s2 in range(spec.num_stages) if host_of[s2] == h]
 
+        swap_done = False
+        if (cfg.mode == "hint" and cfg.swap_table is not None
+                and cfg.swap_at is not None):
+            # pushed before the first dispatch so the event's heap seq (and
+            # therefore its order among same-time events) is replay-stable
+            push(cfg.swap_at, "hint_swap", None)
+
         for s in range(spec.num_stages):
             try_dispatch(s, 0.0)
 
@@ -486,6 +545,18 @@ class ActorDriver:
                 if adm is not None:
                     actors[s].sync_mailbox()
                     try_dispatch(s, now)
+            elif ekind == "hint_swap":
+                # quiesce point: between heap events no stage holds an
+                # un-completed decision — adopt the new table everywhere,
+                # then re-arbitrate (priorities changed, readiness didn't)
+                swap_done = True
+                for s2 in range(spec.num_stages):
+                    if s2 not in dead:
+                        actors[s2].set_hint_table(
+                            cfg.swap_table[s2], now=now,
+                            version=cfg.hint_table_version + 1)
+                for s2 in range(spec.num_stages):
+                    try_dispatch(s2, now)
             elif ekind == "detect":
                 # ---- recovery coordinator -----------------------------
                 s = payload
@@ -510,6 +581,11 @@ class ActorDriver:
                 # re-enter through local enablement and message replay
                 done_s = {t for t in end if t.stage == s}
                 self._restore_progress(actor, done_s)
+                if swap_done and cfg.swap_table is not None:
+                    # the fleet swapped while this stage was down: the new
+                    # incarnation adopts the active table, not the stale one
+                    actor.set_hint_table(cfg.swap_table[s], now=now,
+                                         version=cfg.hint_table_version + 1)
                 t_up = now + cfg.restore_cost
                 for task_, rank_, src_ in sorted(
                         e for e in sent_log
@@ -536,6 +612,10 @@ class ActorDriver:
                     recorder.record(_tr.RECOVERY_END, s, t=now,
                                     mode=cfg.recovery_mode,
                                     mttr=now - fail_time[s])
+                if cfg.metrics is not None:
+                    # incarnation boundary: old-speed samples become a
+                    # weak prior so re-synthesis tracks the new regime
+                    cfg.metrics.on_recovery(s)
                 actors[s].sync_mailbox()
                 try_dispatch(s, now)
 
@@ -589,6 +669,11 @@ class ActorDriver:
         chaos = (ChaosEngine(cfg.chaos)
                  if cfg.chaos is not None and cfg.chaos.active() else None)
         mailboxes, actors = self._build_actors(cfg, recorder)
+        if (cfg.mode == "hint" and cfg.swap_table is not None
+                and cfg.swap_after is not None):
+            for a in actors:
+                a.swap_table = cfg.swap_table[a.idx]
+                a.swap_after = cfg.swap_after
         t0 = _time.perf_counter()
         clock = lambda: _time.perf_counter() - t0  # noqa: E731
 
@@ -776,6 +861,8 @@ class ActorDriver:
             if recorder is not None:
                 recorder.record(_tr.RECOVERY_END, s, t=t_up, mode="respawn",
                                 mttr=mttr)
+            if cfg.metrics is not None:
+                cfg.metrics.on_recovery(s)
             recoveries.append({
                 "stage": s, "fail_kind": death.fail_kind,
                 "t_fail": fail_time[s], "t_detect": t_detect, "t_up": t_up,

@@ -57,9 +57,10 @@ FAIL = "fail"          # fail-stop fault: a stage died (kill/permanent_stall)
 RECOVERY_BEGIN = "recovery_begin"  # coordinator detected the death; quiesce
 RECOVERY_END = "recovery_end"      # stage respawned/re-mapped; epoch bumped
 FENCE = "fence"        # stale (pre-recovery epoch) envelope dropped
+HINT_SWAP = "hint_swap"  # adaptive: a stage adopted a re-synthesized table
 EVENT_KINDS = (SEND, DELIVER, TP_HOLD, TP_ADMIT, TP_DUP, ENQUEUE, DEQUEUE,
                DISPATCH, COMPLETE, STALL, FANIN_HOLD, FAIL, RECOVERY_BEGIN,
-               RECOVERY_END, FENCE)
+               RECOVERY_END, FENCE, HINT_SWAP)
 
 
 def task_key(t: Task) -> list[int]:

@@ -1,0 +1,149 @@
+"""Adaptive hot-swap conformance: HINT_SWAP record/replay determinism.
+
+The adaptive runtime's claim is that swapping the hint table mid-run is a
+*recorded scheduling decision* like any other: the swap happens at a
+quiesce point, is stamped into the trace as per-stage ``HINT_SWAP`` events,
+and therefore
+
+* a sim-substrate run with a mid-run swap replays **time-exactly** (the
+  replayed trace is bit-for-bit the recorded one, surviving a save/load
+  roundtrip);
+* a thread-substrate run with a mid-run swap replays **order-exactly**,
+  reproducing an eager float32 reduction's loss and weight-gradient bits;
+* every table-path dispatch obeys the table that was active at its logical
+  clock (``check_table_faithful``), across the swap boundary.
+"""
+import dataclasses
+
+import pytest
+
+from harness import NumpyStageProgram, make_scenario, sim_costs
+
+from repro.core.hints import HintKind
+from repro.core.synthesis import synthesize
+from repro.core.taskgraph import PipelineSpec
+from repro.runtime.rrfp import ActorConfig, ActorDriver, Trace
+from repro.runtime.rrfp import trace as _tr
+from repro.runtime.rrfp.conformance import check_all, check_table_faithful
+
+# one fused (BF) and one split-backward (BFW) scenario; both num_chunks == 1
+# (schedule synthesis does not price interleaved baselines)
+SWAP_SEEDS = [9, 17]
+
+
+def _tables(spec, seed):
+    """Two genuinely different tables: synthesized on the base costs and on
+    a drifted copy (one stage 2x slower)."""
+    costs = sim_costs(spec, seed)
+    hint = HintKind.BFW if spec.split_backward else HintKind.BF
+    drifted = dataclasses.replace(
+        costs, b_cost=costs.b_cost * [
+            2.0 if s == spec.num_stages // 2 else 1.0
+            for s in range(spec.num_stages)])
+    old = synthesize(spec, costs, hint=hint).stage_orders
+    new = synthesize(spec, drifted, hint=hint).stage_orders
+    return costs, old, new
+
+
+def _swap_scenario(seed):
+    """A hint-mode scenario armed with a mid-run table swap."""
+    sc = make_scenario(seed)
+    spec = sc.spec
+    costs, old, new = _tables(spec, seed)
+    probe = ActorDriver(spec, costs, dataclasses.replace(
+        sc.config, mode="hint", hint_table=old, record_trace=False)).run()
+    cfg = dataclasses.replace(
+        sc.config, mode="hint", hint_table=old, hint_table_version=0,
+        swap_table=new, swap_at=probe.makespan * 0.5,
+        swap_after=spec.num_microbatches // 2)
+    return spec, costs, cfg
+
+
+@pytest.mark.parametrize("seed", SWAP_SEEDS)
+def test_sim_hint_swap_replays_exactly(tmp_path, seed):
+    spec, costs, cfg = _swap_scenario(seed)
+    driver = ActorDriver(spec, costs, cfg)
+    result = driver.run()
+    trace = driver.trace
+    swaps = trace.select(_tr.HINT_SWAP)
+    assert len(swaps) == spec.num_stages
+    assert all(ev.info["version"] == 1 for ev in swaps)
+
+    path = tmp_path / "swap_trace.jsonl"
+    trace.save(str(path))
+    loaded = Trace.load(str(path))
+    assert loaded.signature() == trace.signature()
+
+    rdriver = ActorDriver(
+        spec, None, ActorConfig(record_trace=True, replay=loaded))
+    replayed = rdriver.run()
+    assert replayed.makespan == result.makespan
+    assert rdriver.trace.signature(include_time=True) == \
+        trace.signature(include_time=True)
+
+
+@pytest.mark.parametrize("seed", SWAP_SEEDS)
+def test_thread_hint_swap_replay_reproduces_loss_bits(seed):
+    sc = make_scenario(seed, substrate="thread")
+    spec = sc.spec
+    S = spec.num_stages
+    _, old, new = _tables(spec, seed)
+    cfg = dataclasses.replace(
+        sc.config, mode="hint",
+        hint=HintKind.BFW if spec.split_backward else HintKind.BF,
+        hint_table=old, swap_table=new,
+        swap_after=max(1, spec.num_microbatches // 2))
+
+    first = [NumpyStageProgram(s, spec, seed, deterministic=False)
+             for s in range(S)]
+    driver = ActorDriver(spec, None, cfg)
+    driver.run_threaded(list(first))
+    trace = driver.trace
+    assert len(trace.select(_tr.HINT_SWAP)) == S
+    assert any(ev.info.get("path") == "table"
+               for ev in trace.select(_tr.DISPATCH))
+
+    second = [NumpyStageProgram(s, spec, seed, deterministic=False)
+              for s in range(S)]
+    rdriver = ActorDriver(
+        spec, None,
+        ActorConfig(record_trace=True, replay=trace,
+                    deadlock_timeout=sc.config.deadlock_timeout))
+    rdriver.run_threaded(list(second))
+    assert rdriver.trace.dispatch_orders(S) == trace.dispatch_orders(S)
+    for a, b in zip(first, second):
+        assert a.loss.tobytes() == b.loss.tobytes()
+        assert a.d_w.tobytes() == b.d_w.tobytes()
+
+
+@pytest.mark.parametrize("seed", SWAP_SEEDS)
+def test_table_faithfulness_across_swap(seed):
+    spec, costs, cfg = _swap_scenario(seed)
+    driver = ActorDriver(spec, costs, cfg)
+    driver.run()
+    check_all(driver.trace, spec, cfg)  # includes check_table_faithful
+
+
+def test_table_faithfulness_detects_violation():
+    """Corrupting one table-path dispatch must trip the checker."""
+    spec = PipelineSpec(3, 6)
+    costs = sim_costs(spec, 5)
+    table = synthesize(spec, costs, hint=HintKind.BF).stage_orders
+    driver = ActorDriver(spec, costs, ActorConfig(
+        mode="hint", hint_table=table, record_trace=True))
+    driver.run()
+    trace = driver.trace
+    check_table_faithful(trace, spec)
+
+    dispatches = [i for i, ev in enumerate(trace.events)
+                  if ev.kind == _tr.DISPATCH
+                  and ev.info.get("path") == "table"
+                  and len(ev.info.get("radd", ())) > 1]
+    assert dispatches, "need a contended dispatch to corrupt"
+    i = dispatches[-1]
+    ev = trace.events[i]
+    other = next(_tr.task_from_key(k) for k in ev.info["radd"]
+                 if _tr.task_from_key(k) != ev.task)
+    trace.events[i] = dataclasses.replace(ev, task=other)
+    with pytest.raises(AssertionError):
+        check_table_faithful(trace, spec)

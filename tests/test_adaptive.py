@@ -1,0 +1,290 @@
+"""Adaptive scheduling (repro.runtime.adaptive) + drifting-cost chaos.
+
+Pins the PR-level acceptance invariants:
+
+* the scheduler's initial table is exactly what offline synthesis ships;
+* the drift detector's gates — cold-table sample floor, resynth cadence,
+  improvement threshold, hysteresis streak (including reset on a
+  non-improving check) — each fire deterministically;
+* a stationary closed loop never swaps (no flapping), a drifting one swaps
+  and its post-swap makespan beats the decayed static table;
+* ``drift_scale`` is the documented pure function of (profile, stage, step)
+  and composes multiplicatively with static stragglers;
+* ``price_orders`` prices a table at the makespan the actor runtime
+  realizes for it on the same expected costs;
+* ``synthesize`` prices split-backward specs against the ZB baseline
+  (1F1B is undefined once the backward is split).
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core import CostModel, HintKind, Kind, PipelineSpec
+from repro.core.costs import JitterModel
+from repro.core.synthesis import price_orders, synthesize
+from repro.obs import MetricsRegistry
+from repro.runtime.adaptive import AdaptiveConfig, AdaptiveScheduler
+from repro.runtime.rrfp import ActorConfig, ActorDriver
+from repro.runtime.rrfp.chaos import ChaosConfig, drift_chaos, parse_chaos
+
+
+def _split_workload(S=4, M=8, comm=0.3, base=None):
+    spec = PipelineSpec(S, M, split_backward=True)
+    base = np.asarray(base if base is not None
+                      else np.linspace(1.0, 1.3, S))
+    costs = CostModel(
+        f_cost=base, b_cost=base, w_cost=base, comm_base=comm,
+        compute_jitter=JitterModel(), comm_jitter=JitterModel())
+    return spec, costs
+
+
+# heterogeneous per-stage costs where a 2x drift on stage 4 changes the
+# best table (the benchmark's pp6_step cell)
+_B6 = (1.0, 1.2, 0.9, 1.3, 0.8, 1.1)
+
+
+def _seed_registry(reg, spec, costs, scale=None):
+    """Seed every (stage, kind) EWMA as if ``min_samples`` completions at
+    the scaled base cost had been observed — a deterministic stand-in for
+    a measured run."""
+    scale = scale or {}
+    kinds = [Kind.F, Kind.B] + ([Kind.W] if spec.split_backward else [])
+    per_kind = {Kind.F: costs.f_cost, Kind.B: costs.b_cost,
+                Kind.W: costs.w_cost}
+    for s in range(spec.num_stages):
+        for k in kinds:
+            reg.shard(s).cost_ewma[k].seed(
+                float(per_kind[k][s]) * scale.get(s, 1.0), 4)
+    return reg
+
+
+class TestAdaptiveScheduler:
+    def test_initial_table_matches_offline_synthesis(self):
+        spec, costs = _split_workload()
+        sched = AdaptiveScheduler(
+            spec, costs, AdaptiveConfig(hint=HintKind.BFW))
+        syn = synthesize(spec, costs, hint=HintKind.BFW)
+        assert sched.table == syn.stage_orders
+        assert sched.version == 0 and sched.swaps == []
+
+    def test_cold_table_skips_check(self):
+        spec, costs = _split_workload()
+        sched = AdaptiveScheduler(
+            spec, costs, AdaptiveConfig(hint=HintKind.BFW, min_samples=4))
+        d = sched.maybe_resynthesize(0)
+        assert not d.checked and not d.swapped
+        assert "cold" in d.reason
+        assert sched.version == 0
+
+    def test_partial_samples_still_cold(self):
+        # one warm stage is not enough: *every* stage needs min_samples
+        spec, costs = _split_workload()
+        sched = AdaptiveScheduler(
+            spec, costs, AdaptiveConfig(hint=HintKind.BFW, min_samples=4))
+        for k in (Kind.F, Kind.B, Kind.W):
+            sched.registry.shard(0).cost_ewma[k].seed(1.0, 4)
+        assert not sched.maybe_resynthesize(0).checked
+
+    def test_off_cadence_skips_check(self):
+        spec, costs = _split_workload()
+        sched = AdaptiveScheduler(
+            spec, costs,
+            AdaptiveConfig(hint=HintKind.BFW, resynth_every=4))
+        _seed_registry(sched.registry, spec, costs)
+        for step in range(3):
+            d = sched.maybe_resynthesize(step)
+            assert not d.checked and d.reason == "off-cadence"
+        assert sched.maybe_resynthesize(3).checked  # (3+1) % 4 == 0
+
+    def test_stationary_costs_never_swap(self):
+        # measured == synthesis costs: candidate re-derives the active
+        # table, ratio pins to ~1.0, detector must stay quiet
+        spec, costs = _split_workload()
+        sched = AdaptiveScheduler(
+            spec, costs, AdaptiveConfig(hint=HintKind.BFW, hysteresis=1))
+        _seed_registry(sched.registry, spec, costs)
+        for step in range(4):
+            d = sched.maybe_resynthesize(step)
+            assert d.checked and not d.swapped
+            assert d.ratio == pytest.approx(1.0)
+        assert sched.swaps == [] and sched.version == 0
+
+    def test_hysteresis_streak_and_reset(self):
+        # drifted -> streak 1; back to base -> reset; drifted, drifted ->
+        # swap fires only on the second consecutive improving check
+        spec, costs = _split_workload(S=6, M=18, comm=0.4, base=_B6)
+        drift = {4: 2.0}
+        sched = AdaptiveScheduler(
+            spec, costs,
+            AdaptiveConfig(hint=HintKind.BFW, swap_threshold=1.02,
+                           hysteresis=2))
+
+        _seed_registry(sched.registry, spec, costs, scale=drift)
+        d = sched.maybe_resynthesize(0)
+        assert d.checked and not d.swapped and d.streak == 1
+
+        _seed_registry(sched.registry, spec, costs)  # drift vanishes
+        d = sched.maybe_resynthesize(1)
+        assert not d.swapped and d.streak == 0
+
+        _seed_registry(sched.registry, spec, costs, scale=drift)
+        assert sched.maybe_resynthesize(2).streak == 1
+        d = sched.maybe_resynthesize(3)
+        assert d.swapped and d.reason == "swapped"
+        assert sched.version == 1 and sched.swaps == [3]
+        assert d.streak == 0  # streak consumed by the swap
+
+    def test_high_threshold_blocks_swap(self):
+        spec, costs = _split_workload(S=6, M=18, comm=0.4, base=_B6)
+        sched = AdaptiveScheduler(
+            spec, costs,
+            AdaptiveConfig(hint=HintKind.BFW, swap_threshold=100.0,
+                           hysteresis=1))
+        _seed_registry(sched.registry, spec, costs, scale={4: 2.0})
+        for step in range(3):
+            d = sched.maybe_resynthesize(step)
+            assert d.checked and not d.swapped
+            assert d.reason == "below threshold"
+        assert sched.swaps == []
+
+    def test_closed_loop_drift_swaps_and_beats_static(self):
+        # the benchmark's pp6_step cell in miniature, driven end-to-end
+        # through real ActorDriver runs feeding the registry
+        spec = PipelineSpec(6, 12, split_backward=True)
+        base = np.asarray((1.0, 1.2, 0.9, 1.3, 0.8, 1.1))
+        costs = CostModel(
+            f_cost=base, b_cost=base, w_cost=base, comm_base=0.4,
+            compute_jitter=JitterModel(), comm_jitter=JitterModel())
+        chaos0 = drift_chaos("step", {4: 2.0}, period=3)
+        sched = AdaptiveScheduler(
+            spec, costs,
+            AdaptiveConfig(hint=HintKind.BFW, swap_threshold=1.02,
+                           hysteresis=2))
+        static = [list(o) for o in sched.table]
+        mk_a, mk_s = [], []
+        for k in range(8):
+            ch = dataclasses.replace(chaos0, step=k)
+            mk_a.append(ActorDriver(spec, costs, ActorConfig(
+                mode="hint", hint=HintKind.BFW, hint_table=sched.table,
+                hint_table_version=sched.version, chaos=ch,
+                metrics=sched.registry)).run().makespan)
+            sched.maybe_resynthesize(k)
+            mk_s.append(ActorDriver(spec, costs, ActorConfig(
+                mode="hint", hint=HintKind.BFW, hint_table=static,
+                chaos=ch)).run().makespan)
+        assert sched.swaps, "drift never detected"
+        assert sched.version >= 1
+        assert mk_a[-1] < mk_s[-1], (mk_a, mk_s)
+
+    def test_closed_loop_stationary_never_swaps(self):
+        spec, costs = _split_workload(S=4, M=8)
+        sched = AdaptiveScheduler(
+            spec, costs,
+            AdaptiveConfig(hint=HintKind.BFW, swap_threshold=1.02,
+                           hysteresis=1))
+        mks = []
+        for k in range(5):
+            mks.append(ActorDriver(spec, costs, ActorConfig(
+                mode="hint", hint=HintKind.BFW, hint_table=sched.table,
+                hint_table_version=sched.version,
+                metrics=sched.registry)).run().makespan)
+            sched.maybe_resynthesize(k)
+        assert sched.swaps == [] and sched.version == 0
+        assert len(set(mks)) == 1  # jitter-free: bitwise-identical steps
+
+    def test_to_json_roundtrips_decisions(self):
+        spec, costs = _split_workload()
+        sched = AdaptiveScheduler(
+            spec, costs, AdaptiveConfig(hint=HintKind.BFW))
+        sched.maybe_resynthesize(0)
+        blob = sched.to_json()
+        assert blob["version"] == 0
+        assert blob["config"]["hint"] == HintKind.BFW.value
+        assert blob["decisions"][0]["reason"].startswith("cold")
+
+
+class TestDriftChaos:
+    def test_step_profile_scale(self):
+        ch = drift_chaos("step", {1: 3.0}, period=5)
+        for k, want in ((0, 1.0), (4, 1.0), (5, 3.0), (9, 3.0)):
+            assert dataclasses.replace(ch, step=k).drift_scale(1) == want
+        assert dataclasses.replace(ch, step=7).drift_scale(0) == 1.0
+
+    def test_ramp_profile_scale(self):
+        ch = drift_chaos("ramp", ((2, 2.0),), period=4)
+        got = [dataclasses.replace(ch, step=k).drift_scale(2)
+               for k in range(6)]
+        assert got == [1.0, 1.25, 1.5, 1.75, 2.0, 2.0]
+
+    def test_dict_and_pair_targets_equivalent(self):
+        a = drift_chaos("ramp", {0: 1.5, 2: 2.0}, period=3)
+        b = drift_chaos("ramp", ((0, 1.5), (2, 2.0)), period=3)
+        assert a.drift == b.drift
+
+    def test_drift_alone_makes_chaos_active(self):
+        assert not ChaosConfig().active()
+        assert drift_chaos("step", {0: 2.0}).active()
+        # a profile with no targets is still inert
+        assert not drift_chaos("step", ()).active()
+
+    def test_bad_profile_rejected(self):
+        with pytest.raises(ValueError, match="drift_profile"):
+            ChaosConfig(drift_profile="sawtooth")
+
+    def test_parse_chaos_drift_syntax(self):
+        ch = parse_chaos(
+            "drift_profile=ramp,drift=1:2.5+3:4.0,drift_period=6,step=2")
+        assert ch.drift_profile == "ramp"
+        assert ch.drift == ((1, 2.5), (3, 4.0))
+        assert ch.drift_period == 6 and ch.step == 2
+        assert ch.drift_scale(1) == pytest.approx(1.0 + 1.5 * (2 / 6))
+
+    def test_compute_scale_composes_with_straggler(self):
+        from repro.runtime.rrfp.chaos import ChaosEngine
+
+        ch = drift_chaos("step", {1: 2.0}, period=0,
+                         level=ChaosConfig(straggler=((1, 3.0),)))
+        assert ChaosEngine(ch).compute_scale(1) == pytest.approx(6.0)
+        assert ChaosEngine(ch).compute_scale(0) == 1.0
+
+
+class TestPricing:
+    def test_price_orders_matches_actor_realization(self):
+        # pricing a table with the DES engine must predict exactly what
+        # the (jitter-free) actor runtime realizes for that table
+        spec, costs = _split_workload(S=4, M=8)
+        table = synthesize(spec, costs, hint=HintKind.BFW).stage_orders
+        priced = price_orders(spec, table, costs)
+        realized = ActorDriver(spec, costs, ActorConfig(
+            mode="hint", hint=HintKind.BFW,
+            hint_table=table)).run().makespan
+        assert priced == pytest.approx(realized)
+
+    def test_price_orders_ranks_tables_under_drift(self):
+        # after a 2x drift on stage 4, the table synthesized against the
+        # drifted costs must price no worse than the stale one
+        spec = PipelineSpec(6, 18, split_backward=True)
+        base = np.asarray((1.0, 1.2, 0.9, 1.3, 0.8, 1.1))
+        costs = CostModel(
+            f_cost=base, b_cost=base, w_cost=base, comm_base=0.4,
+            compute_jitter=JitterModel(), comm_jitter=JitterModel())
+        scale = np.where(np.arange(6) == 4, 2.0, 1.0)
+        drifted = dataclasses.replace(
+            costs, f_cost=base * scale, b_cost=base * scale,
+            w_cost=base * scale)
+        old = synthesize(spec, costs, hint=HintKind.BFW).stage_orders
+        new = synthesize(spec, drifted, hint=HintKind.BFW).stage_orders
+        p_old = price_orders(spec, old, drifted)
+        p_new = price_orders(spec, new, drifted)
+        assert p_new < p_old
+
+    def test_synthesize_split_backward_uses_zb_baseline(self):
+        # 1F1B is undefined for BFW specs; synthesis must not raise and
+        # its baseline must be the ZB fixed order's makespan
+        spec, costs = _split_workload(S=3, M=6)
+        syn = synthesize(spec, costs, hint=HintKind.BFW)
+        zb = ActorDriver(spec, costs, ActorConfig(
+            mode="precommitted", fixed_order="zb")).run()
+        assert syn.baseline_makespan == pytest.approx(zb.makespan)
+        assert syn.predicted_speedup > 0

@@ -446,3 +446,204 @@ class TestMetricsRecordReplay:
             lc=10**9, kind=_tr.COMPLETE, stage=ev.stage, task=ev.task,
             t=ev.t, info={"dur": ev.info["dur"] + 123.0}))
         assert forged.durations() == durs
+
+
+# ---------------------------------------------------------------------------
+# adaptive-loop inputs: EWMA properties, epoch hygiene, recovery downweight
+# ---------------------------------------------------------------------------
+try:
+    from hypothesis import given, settings, strategies as st
+except ModuleNotFoundError:  # deterministic fallback (tests/_hyp_stub.py)
+    from _hyp_stub import given, settings, strategies as st
+
+
+class TestEwmaFoldProperty:
+    @given(seed=st.integers(min_value=0, max_value=2**31 - 1),
+           n=st.integers(min_value=1, max_value=64))
+    @settings(max_examples=25, deadline=None)
+    def test_deferred_equals_eager_for_any_sequence(self, seed, n):
+        # the lazy-fold observe path must be observationally identical to
+        # the textbook recurrence for *every* sample sequence, not just the
+        # handful of fixtures above — the adaptive re-synthesizer trusts
+        # these values as its measured cost model
+        import numpy as _np
+
+        xs = _np.random.default_rng(seed).exponential(size=n) + 1e-9
+        e = Ewma(alpha=0.1)
+        for x in xs:
+            e.observe(float(x))
+        v = None
+        for x in xs:
+            v = float(x) if v is None else 0.9 * v + 0.1 * float(x)
+        assert e.value == pytest.approx(v)
+        assert e.count == n
+
+    @given(seed=st.integers(min_value=0, max_value=2**31 - 1))
+    @settings(max_examples=25, deadline=None)
+    def test_interleaved_observe_seed_read(self, seed):
+        # reads force a fold of the pending samples; folding mid-stream
+        # must leave the same state as never having read at all, and seed
+        # must discard whatever was pending at that point
+        import numpy as _np
+
+        rng = _np.random.default_rng(seed)
+        e = Ewma(alpha=0.1)
+        v, c = None, 0
+        for _ in range(40):
+            op = int(rng.integers(4))
+            if op == 0:
+                x = float(rng.exponential()) + 1e-9
+                e.observe(x)
+                v = x if v is None else 0.9 * v + 0.1 * x
+                c += 1
+            elif op == 1:
+                x, n = float(rng.uniform(0.1, 10.0)), int(rng.integers(20))
+                e.seed(x, n)
+                v, c = x, n
+            elif op == 2:
+                assert (e.value is None) == (v is None)
+                if v is not None:
+                    assert e.value == pytest.approx(v)
+            else:
+                assert e.count == c
+        if v is None:
+            assert e.value is None
+        else:
+            assert e.value == pytest.approx(v)
+        assert e.count == c
+
+    def test_downweight_keeps_value_collapses_count(self):
+        e = Ewma(alpha=0.1)
+        for x in (1.0, 2.0, 3.0):
+            e.observe(x)
+        v = e.value
+        e.downweight(keep=1)
+        assert e.value == pytest.approx(v)
+        assert e.count == 1
+        e.downweight(keep=0)
+        assert e.count == 0
+
+    def test_downweight_empty_is_noop(self):
+        e = Ewma(alpha=0.1)
+        e.downweight()
+        assert e.value is None and e.count == 0
+
+    def test_downweight_never_raises_count(self):
+        e = Ewma(alpha=0.1)
+        e.observe(5.0)
+        e.downweight(keep=100)
+        assert e.count == 1
+
+
+class TestEpochAwareTraceFold:
+    """update_from_trace's recovery hygiene on a hand-built trace."""
+
+    def _ev(self, lc, kind, stage=0, t=0.0, epoch=0, **info):
+        return _tr.TraceEvent(lc=lc, kind=kind, stage=stage,
+                              task=Task(Kind.F, stage, 0),
+                              t=t, epoch=epoch, info=info)
+
+    def test_same_epoch_pair_feeds_comm(self):
+        trace = Trace(meta={}, events=[
+            self._ev(0, _tr.SEND, t=1.0, seq=7),
+            self._ev(1, _tr.DELIVER, stage=1, t=1.5, seq=7),
+        ])
+        table = OnlineCostTable(2).update_from_trace(trace)
+        assert table.comm.value == pytest.approx(0.5)
+        assert table.comm.count == 1
+
+    def test_cross_epoch_pair_excluded(self):
+        # SEND in epoch 0, DELIVER in epoch 1: the gap spans the recovery
+        # outage, not the transport — must not poison the comm EWMA
+        trace = Trace(meta={}, events=[
+            self._ev(0, _tr.SEND, t=1.0, seq=7),
+            self._ev(1, _tr.RECOVERY_END, stage=1, t=5.0, epoch=1),
+            self._ev(2, _tr.DELIVER, stage=1, t=6.0, epoch=1, seq=7),
+        ])
+        table = OnlineCostTable(2).update_from_trace(trace)
+        assert table.comm.count == 0
+
+    def test_fenced_seq_excluded(self):
+        # a FENCEd envelope was rejected by the mailbox as stale; even if
+        # a same-epoch DELIVER for that seq exists it is not a latency
+        # sample
+        trace = Trace(meta={}, events=[
+            self._ev(0, _tr.SEND, t=1.0, seq=9),
+            self._ev(1, _tr.FENCE, stage=1, t=2.0, seq=9),
+            self._ev(2, _tr.DELIVER, stage=1, t=2.0, seq=9),
+        ])
+        table = OnlineCostTable(2).update_from_trace(trace)
+        assert table.comm.count == 0
+
+    def test_mixed_trace_counts_only_clean_pairs(self):
+        trace = Trace(meta={}, events=[
+            self._ev(0, _tr.SEND, t=0.0, seq=1),
+            self._ev(1, _tr.DELIVER, stage=1, t=0.25, seq=1),   # clean
+            self._ev(2, _tr.SEND, t=1.0, seq=2),
+            self._ev(3, _tr.FENCE, stage=1, t=1.1, seq=2),      # fenced
+            self._ev(4, _tr.DELIVER, stage=1, t=1.1, seq=2),
+            self._ev(5, _tr.SEND, t=2.0, seq=3),
+            self._ev(6, _tr.DELIVER, stage=1, t=9.0, epoch=1, seq=3),
+            self._ev(7, _tr.COMPLETE, t=3.0, dur=1.5),          # durations
+        ])                                                      # unaffected
+        table = OnlineCostTable(2).update_from_trace(trace)
+        assert table.comm.count == 1
+        assert table.comm.value == pytest.approx(0.25)
+        assert table.samples(0, Kind.F) == 1
+        assert table.value(0, Kind.F) == pytest.approx(1.5)
+
+    def test_recovered_run_end_to_end_excludes_outage(self):
+        # a real fail-stop run: every comm sample the table folded must be
+        # small (transport-scale), never recovery-outage-scale
+        from repro.runtime.rrfp.chaos import ChaosConfig
+
+        spec = PipelineSpec(3, 6)
+        cm = det_costs(3)
+        cfg = ActorConfig(
+            mode="hint", hint=HintKind.BF, record_trace=True,
+            chaos=ChaosConfig(fail_stage=1, fail_after=4),
+            recover=True, restore_cost=0.05)
+        driver = ActorDriver(spec, cm, cfg)
+        driver.run()
+        trace = driver.trace
+        assert trace.select(_tr.RECOVERY_END), "recovery never happened"
+        table = OnlineCostTable(3).update_from_trace(trace)
+        assert table.comm.count > 0
+        # outage-spanning pairs would be >= restore_cost; clean transport
+        # latencies on this workload are ~comm_base
+        assert table.comm.value < 0.05
+
+
+class TestRegistryRecovery:
+    def test_logical_stage_keying_survives_remap(self):
+        # shards are keyed by logical stage: observations for stage 2 land
+        # in shard 2 no matter which incarnation/host reported them
+        reg = MetricsRegistry(3)
+        reg.shard(2).on_complete(Task(Kind.F, 2, 0), 1.0)
+        reg.on_recovery(2)
+        reg.shard(2).on_complete(Task(Kind.F, 2, 1), 3.0)
+        assert reg.shard(2) is reg._shards[2]
+        assert reg.cost_table().samples(2, Kind.F) == 2
+
+    def test_on_recovery_downweights_stage_ewmas(self):
+        reg = MetricsRegistry(2)
+        sh = reg.shard(1)
+        for _ in range(50):
+            sh.on_complete(Task(Kind.B, 1, 0), 4.0)
+        sh.comm_ewma.observe(0.1)
+        sh.comm_ewma.observe(0.1)
+        reg.on_recovery(1, keep=1)
+        assert sh.cost_ewma[Kind.B].value == pytest.approx(4.0)
+        assert sh.cost_ewma[Kind.B].count == 1
+        assert sh.comm_ewma.count == 1
+        # the recurrence itself is untouched; what collapses is the sample
+        # *weight* — cost_table() snapshots seed with (value, count), so a
+        # post-recovery merge sees a 1-sample prior, not 50 stale votes
+        sh.on_complete(Task(Kind.B, 1, 1), 8.0)
+        assert sh.cost_ewma[Kind.B].count == 2
+        assert sh.cost_ewma[Kind.B].value == pytest.approx(4.4)
+
+    def test_on_recovery_unknown_stage_is_noop(self):
+        reg = MetricsRegistry(2)
+        reg.on_recovery(7)  # never observed; must not create a shard
+        assert 7 not in reg._shards
