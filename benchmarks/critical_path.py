@@ -1,0 +1,252 @@
+"""Critical-path benchmark: explain the makespan, then PROVE the
+explanation predicts.
+
+Two gated parts, one committed artifact (``BENCH_critpath.json``):
+
+**Part 1 — exact reconstruction.**  For every cell in a chain + DAG x
+consumption-mode x chaos-level (C0..C3, with and without an armed
+fail-stop fault and recovery) matrix, record a sim trace, lower it
+through ``repro.obs.critpath.ExecGraph`` and check the longest path
+reconstructs the recorded makespan **bit-exactly**, the category
+decomposition sums exactly to the makespan, and slack is >= 0
+everywhere.  CI fails if any cell is inexact.
+
+**Part 2 — causal what-if validation.**  On the no-fault cells, apply
+virtual speedups (each stage's compute, each op class, the comm latency
+class) to the critical-path graph (Coz-style, zero re-execution) and
+*also* realize each speedup in an actual DES rerun with the scaled cost
+model (same CRN seed — multiplicative jitter scales proportionally).
+Gate: the **median** |predicted - realized| / realized across all
+experiments stays under ``MEDIAN_ERR_GATE`` (5%; a generous smoke
+ceiling under ``REPRO_SMOKE=1`` keeps the CI signal about wiring, not
+workload size).
+
+    PYTHONPATH=src python -m benchmarks.run --backend actor --critpath
+    REPRO_SMOKE=1 PYTHONPATH=src python -m benchmarks.critical_path
+
+Emits ``BENCH_critpath.json``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import statistics
+
+from repro.core import CostModel, HintKind, PipelineSpec, StageGraph
+from repro.obs.critpath import CP_CATEGORIES, ExecGraph
+from repro.obs.whatif import Speedup, apply_to_cost_model, predict
+from repro.runtime.rrfp import CHAOS_LEVELS, ActorConfig, ActorDriver
+
+SEED = 7
+LEVELS = ("C0", "C1", "C2", "C3")
+#: full-size gate on the median predicted-vs-realized makespan error
+MEDIAN_ERR_GATE = 0.05
+#: smoke runs shrink microbatch counts; arbitration shifts weigh heavier,
+#: so the smoke ceiling only guards against gross wiring regressions
+MEDIAN_ERR_GATE_SMOKE = 0.20
+WHATIF_FACTOR = 0.75
+
+
+def _smoke() -> bool:
+    return bool(os.environ.get("REPRO_SMOKE"))
+
+
+def _branch_dag(num_stages: int = 5) -> StageGraph:
+    # encoder pair -> fusion -> LM chain (the multimodal shape, small)
+    return StageGraph(num_stages, ((0, 2), (1, 2), (2, 3), (3, 4)))
+
+
+def workloads(microbatches: int) -> dict[str, tuple[PipelineSpec, CostModel,
+                                                    ActorConfig]]:
+    """The benchmark's workload matrix: chain and DAG, fused and split."""
+    chain = PipelineSpec(4, microbatches)
+    chain_split = PipelineSpec(6, max(4, microbatches // 2),
+                               split_backward=True)
+    dag = PipelineSpec(5, microbatches, graph=_branch_dag())
+    return {
+        "chain-4s/hint-bf": (
+            chain,
+            CostModel.uniform(4, f=1.0, b=2.0, w=0.0, comm_base=1e-3,
+                              seed=SEED),
+            ActorConfig(mode="hint", hint=HintKind.BF)),
+        "chain-6s-split/hint-bfw": (
+            chain_split,
+            CostModel.uniform(6, f=1.0, b=2.0, w=1.0, comm_base=1e-3,
+                              seed=SEED),
+            ActorConfig(mode="hint", hint=HintKind.BFW, w_defer_cap=2)),
+        "dag-5s/hint-bf": (
+            dag,
+            CostModel.uniform(5, f=1.0, b=2.0, w=0.0, comm_base=1e-3,
+                              seed=SEED),
+            ActorConfig(mode="precommitted", fixed_order="1f1b")),
+    }
+
+
+def _trace(spec, cm, cfg):
+    cfg = dataclasses.replace(cfg, record_trace=True, seed=SEED)
+    return ActorDriver(spec, cm, cfg).run().trace
+
+
+def _reconstruction_cell(name: str, spec, cm, cfg) -> dict:
+    trace = _trace(spec, cm, cfg)
+    g = ExecGraph.build(trace, spec)
+    mk = float(trace.meta["makespan"])
+    rep = g.decompose()
+    cat_sum = sum(rep.categories[c] for c in CP_CATEGORIES)
+    slacks = g.slack()
+    return {
+        "cell": name,
+        "makespan": mk,
+        "graph_makespan": g.makespan,
+        "reconstruct_exact": g.makespan == mk,
+        "decomposition_exact": cat_sum == mk,
+        "min_slack": min(slacks.values()),
+        "verify_rel_err": g.verify(),
+        "recovery_windows": g.num_recovery_windows,
+        "categories": rep.categories,
+        "fractions": rep.fractions(),
+        "top_category": rep.top_category(),
+    }
+
+
+def reconstruction_cells(microbatches: int) -> list[dict]:
+    """Part 1: chain + DAG x chaos level x (no fault | armed fault)."""
+    out = []
+    for wname, (spec, cm, cfg) in workloads(microbatches).items():
+        for level in LEVELS:
+            chaos = dataclasses.replace(CHAOS_LEVELS[level], seed=SEED)
+            c = dataclasses.replace(cfg, chaos=chaos)
+            out.append(_reconstruction_cell(
+                f"{wname}/{level}", spec, cm, c))
+        # armed fail-stop fault + elastic recovery, respawn and remap
+        for mode in ("respawn", "remap"):
+            chaos = dataclasses.replace(
+                CHAOS_LEVELS["C2"], seed=SEED, fail_stage=spec.num_stages - 1,
+                fail_kind="kill",
+                fail_after=max(1, spec.num_tasks_per_stage() // 3))
+            c = dataclasses.replace(cfg, chaos=chaos, recover=True,
+                                    recovery_mode=mode)
+            out.append(_reconstruction_cell(
+                f"{wname}/C2+fail-{mode}", spec, cm, c))
+    return out
+
+
+def _experiments(spec, graph) -> list[list[Speedup]]:
+    """The validated what-if sweep for one workload: every stage's
+    compute, the op classes present, and the comm latency class."""
+    ops = sorted({n.op for n in graph.nodes.values() if n.task is not None})
+    exps = [[Speedup(factor=WHATIF_FACTOR, stage=s)]
+            for s in range(spec.num_stages)]
+    exps += [[Speedup(factor=WHATIF_FACTOR, op=op)] for op in ops]
+    exps.append([Speedup(factor=WHATIF_FACTOR, comm=True)])
+    return exps
+
+
+def whatif_cells(microbatches: int) -> list[dict]:
+    """Part 2: predicted-vs-realized makespan per virtual speedup."""
+    out = []
+    for wname, (spec, cm, cfg) in workloads(microbatches).items():
+        base = _trace(spec, cm, cfg)
+        graph = ExecGraph.build(base, spec)
+        for speedups in _experiments(spec, graph):
+            predicted = predict(graph, speedups)
+            realized = float(
+                _trace(spec, apply_to_cost_model(cm, speedups),
+                       cfg).meta["makespan"])
+            out.append({
+                "cell": wname,
+                "speedup": " + ".join(s.describe() for s in speedups),
+                "base_makespan": graph.makespan,
+                "predicted_makespan": predicted,
+                "realized_makespan": realized,
+                "rel_error": abs(predicted - realized) / realized,
+            })
+    return out
+
+
+def run_critpath_benchmark() -> dict:
+    microbatches = 8 if _smoke() else 24
+    rec = reconstruction_cells(microbatches)
+    wi = whatif_cells(microbatches)
+    errors = [c["rel_error"] for c in wi]
+    gate = MEDIAN_ERR_GATE_SMOKE if _smoke() else MEDIAN_ERR_GATE
+    return {
+        "spec": {
+            "seed": SEED, "microbatches": microbatches,
+            "categories": list(CP_CATEGORIES), "levels": list(LEVELS),
+            "whatif_factor": WHATIF_FACTOR,
+            "median_err_gate": gate, "smoke": _smoke(),
+        },
+        "reconstruction": rec,
+        "whatif": wi,
+        "summary": {
+            "cells": len(rec),
+            "all_reconstruct_exact": all(c["reconstruct_exact"]
+                                         for c in rec),
+            "all_decompositions_exact": all(c["decomposition_exact"]
+                                            for c in rec),
+            "min_slack": min(c["min_slack"] for c in rec),
+            "whatif_experiments": len(wi),
+            "whatif_median_rel_error": statistics.median(errors),
+            "whatif_max_rel_error": max(errors),
+        },
+    }
+
+
+def emit_json(path: str = "BENCH_critpath.json") -> dict:
+    report = run_critpath_benchmark()
+    with open(path, "w") as f:
+        json.dump(report, f, indent=2)
+    return report
+
+
+def critpath_rows(
+    json_path: str = "BENCH_critpath.json",
+) -> list[tuple[str, float, str]]:
+    """CSV rows for ``benchmarks.run``; raises on a failed gate."""
+    report = emit_json(json_path)
+    out = []
+    for c in report["reconstruction"]:
+        out.append((
+            f"critpath/{c['cell']}",
+            c["makespan"] * 1e6,
+            f"exact={c['reconstruct_exact']},top={c['top_category']},"
+            f"recoveries={c['recovery_windows']}",
+        ))
+    for c in report["whatif"]:
+        out.append((
+            f"whatif/{c['cell']}/{c['speedup'].replace(' ', '')}",
+            c["predicted_makespan"] * 1e6,
+            f"realized={c['realized_makespan'] * 1e6:.1f}us,"
+            f"err={c['rel_error']:.2%}",
+        ))
+    s = report["summary"]
+    gate = report["spec"]["median_err_gate"]
+    if not s["all_reconstruct_exact"]:
+        bad = [c["cell"] for c in report["reconstruction"]
+               if not c["reconstruct_exact"]]
+        raise SystemExit(
+            f"critical path failed to reconstruct the recorded makespan "
+            f"bit-exactly on: {', '.join(bad)}")
+    if not s["all_decompositions_exact"]:
+        bad = [c["cell"] for c in report["reconstruction"]
+               if not c["decomposition_exact"]]
+        raise SystemExit(
+            f"critical-path category decomposition does not sum exactly "
+            f"to the makespan on: {', '.join(bad)}")
+    if s["min_slack"] < 0:
+        raise SystemExit(
+            f"negative scheduling slack: {s['min_slack']!r}")
+    if s["whatif_median_rel_error"] > gate:
+        raise SystemExit(
+            f"what-if median predicted-vs-realized error "
+            f"{s['whatif_median_rel_error']:.2%} exceeds the "
+            f"{gate:.0%} gate across {s['whatif_experiments']} experiments")
+    return out
+
+
+if __name__ == "__main__":
+    print("name,us_per_call,derived")
+    for name, us, derived in critpath_rows():
+        print(f"{name},{us:.1f},{derived}")

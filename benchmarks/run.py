@@ -20,9 +20,14 @@ per-run conformance-invariant checks, emitting ``BENCH_chaos.json``.
 bubble_decomposition``, emits ``BENCH_bubbles.json``); ``--adaptive`` runs
 the adaptive-scheduling benchmark (``benchmarks.adaptive_compare``): static
 hint decay vs online re-synthesis + hot-swap under drifting costs, emitting
-``BENCH_adaptive.json``; ``--metrics-report`` / ``--export-perfetto PATH``
-run a single metrics-instrumented probe and print the telemetry table /
-write a Chrome-trace JSON.
+``BENCH_adaptive.json``; ``--critpath`` runs the critical-path benchmark
+(``benchmarks.critical_path``): exact makespan reconstruction plus the
+causal what-if prediction gate, emitting ``BENCH_critpath.json``;
+``--metrics-report`` / ``--export-perfetto PATH`` run a single
+metrics-instrumented probe and print the telemetry table / write a
+Chrome-trace JSON; ``--explain TRACE`` prints the one-shot critical-path
+health report for a recorded trace (same output as
+``python -m repro.obs.report``).
 """
 from __future__ import annotations
 
@@ -77,6 +82,18 @@ def main() -> None:
                          "conformance (emits BENCH_adaptive.json; exits "
                          "nonzero if adaptive fails to beat static on a "
                          "drifting cell or flaps on a stationary one)")
+    ap.add_argument("--critpath", action="store_true",
+                    help="actor backend: critical-path benchmark — exact "
+                         "makespan reconstruction across chain/DAG x chaos "
+                         "x recovery cells, plus the causal what-if "
+                         "predicted-vs-realized gate (emits "
+                         "BENCH_critpath.json; exits nonzero if any cell "
+                         "is inexact or the median prediction error "
+                         "exceeds the gate)")
+    ap.add_argument("--explain", metavar="TRACE", default=None,
+                    help="print the critical-path health report for a "
+                         "recorded trace (.jsonl) and exit — bottleneck, "
+                         "what-if ranking, stragglers, bubble cross-check")
     ap.add_argument("--metrics-report", action="store_true",
                     help="actor backend: run one metrics-instrumented probe "
                          "(heavy-encoder DAG under BFW) and print the "
@@ -90,6 +107,11 @@ def main() -> None:
                          "BENCH_bfw.json for the BFW sweep)")
     args = ap.parse_args()
 
+    if args.explain:
+        from repro.obs.report import main as report_main
+
+        raise SystemExit(report_main([args.explain]))
+
     if args.backend == "actor":
         if args.tables:
             print(f"# --backend actor ignores table names {args.tables}",
@@ -101,13 +123,13 @@ def main() -> None:
                 "needs W tasks, which only exist under split backward")
         probe = args.metrics_report or args.export_perfetto
         if sum([args.chaos, args.recovery, bfw, args.multimodal,
-                args.dispatch, args.bubbles, args.adaptive,
+                args.dispatch, args.bubbles, args.adaptive, args.critpath,
                 bool(probe)]) > 1:
             raise SystemExit("--chaos, --recovery, the BFW sweep, "
                              "--multimodal, --dispatch, --bubbles, "
-                             "--adaptive and the telemetry probe "
-                             "(--metrics-report/--export-perfetto) are "
-                             "separate reports; run them as separate "
+                             "--adaptive, --critpath and the telemetry "
+                             "probe (--metrics-report/--export-perfetto) "
+                             "are separate reports; run them as separate "
                              "invocations")
         if probe:
             from benchmarks.bubble_decomposition import telemetry_probe
@@ -142,6 +164,11 @@ def main() -> None:
 
             json_out = args.json_out or "BENCH_adaptive.json"
             label = "adaptive"
+        elif args.critpath:
+            from benchmarks.critical_path import critpath_rows as rows_fn
+
+            json_out = args.json_out or "BENCH_critpath.json"
+            label = "critpath"
         elif args.chaos:
             from benchmarks.chaos_sweep import chaos_rows as rows_fn
 

@@ -98,6 +98,15 @@ def _obs_registry(args):
     return MetricsRegistry()
 
 
+def _obs_record_step0(args, step: int, first: int = 0) -> bool:
+    """Record the first step's trace when any end-of-run consumer needs
+    it (Perfetto export, the --explain health report, or --record-trace)."""
+    return step == first and (
+        bool(args.record_trace)
+        or bool(getattr(args, "export_perfetto", None))
+        or bool(getattr(args, "explain", False)))
+
+
 def _obs_finish(args, registry, trace) -> None:
     """End-of-run sync point: print the summary table, export Perfetto."""
     if registry is not None and getattr(args, "metrics_report", False):
@@ -111,6 +120,12 @@ def _obs_finish(args, registry, trace) -> None:
         export_perfetto(trace, args.export_perfetto)
         print(f"perfetto export ({len(trace.events)} events) -> "
               f"{args.export_perfetto}  (open at ui.perfetto.dev)")
+    if getattr(args, "explain", False):
+        from repro.obs.report import explain
+        if trace is None:
+            raise SystemExit(
+                "--explain: no trace was recorded to analyze")
+        print("\n" + explain(trace).format())
 
 
 # ---------------------------------------------------------------------------
@@ -208,8 +223,7 @@ def train_multimodal(args) -> list[float]:
         history = []
         obs_trace = None
         for step in range(args.steps):
-            record_this = (bool(args.record_trace) or bool(
-                getattr(args, "export_perfetto", None))) and step == 0
+            record_this = _obs_record_step0(args, step)
             cfg_i = dataclasses.replace(acfg, seed=args.seed + 1000 * step,
                                         record_trace=record_this)
             driver = ActorDriver(spec, costs, cfg_i)
@@ -254,8 +268,7 @@ def train_multimodal(args) -> list[float]:
             for s in range(cfg.num_stages)
         ]
         t0 = time.time()
-        record_this = (bool(args.record_trace) or bool(
-            getattr(args, "export_perfetto", None))) and step == 0
+        record_this = _obs_record_step0(args, step)
         driver = ActorDriver(
             spec, None,
             dataclasses.replace(acfg, record_trace=True) if record_this
@@ -449,8 +462,7 @@ def train_actor(args) -> list[float]:
         t0 = time.time()
         # recording costs lock traffic on the dispatch path: enable it only
         # for the step whose trace is actually saved
-        record_this = (bool(args.record_trace) or bool(
-            getattr(args, "export_perfetto", None))) and step == start_step
+        record_this = _obs_record_step0(args, step, first=start_step)
         acfg_step = dataclasses.replace(acfg, respawn=respawn) \
             if args.recover else acfg
         if scheduler is not None:
@@ -576,6 +588,11 @@ def main() -> None:
                     help="actor runtime: export the step-0 trace as Chrome "
                          "trace-event JSON (open at ui.perfetto.dev); "
                          "implies step-0 recording")
+    ap.add_argument("--explain", action="store_true",
+                    help="actor runtime: print the one-shot critical-path "
+                         "health report of the step-0 trace (binding "
+                         "bottleneck, what-if ranking, stragglers, bubble "
+                         "cross-check); implies step-0 recording")
     ap.add_argument("--adaptive", action="store_true",
                     help="actor runtime, --schedule rrfp: close the "
                          "schedule loop — accumulate measured per-stage "
@@ -629,10 +646,10 @@ def main() -> None:
     if args.runtime == "actor":
         train_actor(args)
         return
-    if args.metrics_report or args.export_perfetto:
-        raise SystemExit("--metrics-report / --export-perfetto instrument "
-                         "the actor runtime; add --runtime actor (or "
-                         "--workload multimodal)")
+    if args.metrics_report or args.export_perfetto or args.explain:
+        raise SystemExit("--metrics-report / --export-perfetto / --explain "
+                         "instrument the actor runtime; add --runtime actor "
+                         "(or --workload multimodal)")
 
     data = args.devices // args.stages
     assert data >= 1, "need devices >= stages"

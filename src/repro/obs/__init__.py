@@ -10,6 +10,12 @@ imports this package except lazily from ``Trace.to_perfetto``):
                  (the online input for ROADMAP item 3 hint re-synthesis)
   bubbles     -- idle-time decomposition over recorded traces: warmup,
                  dependency-wait, starvation, TP-gate, backpressure, drain
+  critpath    -- critical-path engine: the execution DAG whose longest
+                 path reconstructs the makespan exactly, with per-node
+                 slack and a 100%-accounted category decomposition
+  whatif      -- Coz-style causal what-if profiling: virtual speedups on
+                 the critical-path graph predict the new makespan
+  report      -- one-shot explain(trace) health report + CLI
   export      -- Chrome trace-event / Perfetto JSON rendering of traces
 
 See ``docs/observability.md`` for the metric catalogue and semantics.
@@ -23,6 +29,11 @@ from repro.obs.bubbles import (
     spec_from_meta,
 )
 from repro.obs.cost_table import Ewma, OnlineCostTable
+from repro.obs.critpath import (
+    CP_CATEGORIES,
+    CritPathReport,
+    ExecGraph,
+)
 from repro.obs.export import export_perfetto, to_perfetto, validate_chrome_trace
 from repro.obs.metrics import (
     DEPTH_EDGES,
@@ -32,22 +43,38 @@ from repro.obs.metrics import (
     StageShard,
     log_edges,
 )
+from repro.obs.report import ExplainReport, explain
+from repro.obs.whatif import (
+    Speedup,
+    apply_to_cost_model,
+    candidate_speedups,
+    predict,
+)
 
 __all__ = [
     "BubbleReport",
     "CATEGORIES",
+    "CP_CATEGORIES",
+    "CritPathReport",
     "DEPTH_EDGES",
     "DURATION_EDGES",
     "Ewma",
+    "ExecGraph",
+    "ExplainReport",
     "Histogram",
     "MetricsRegistry",
     "OnlineCostTable",
+    "Speedup",
     "StageBubbles",
     "StageShard",
+    "apply_to_cost_model",
+    "candidate_speedups",
     "compare",
     "decompose",
+    "explain",
     "export_perfetto",
     "log_edges",
+    "predict",
     "spec_from_meta",
     "to_perfetto",
     "validate_chrome_trace",

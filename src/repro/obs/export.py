@@ -40,12 +40,48 @@ def _slice_name(task, split_backward: bool) -> str:
     return name
 
 
-def to_perfetto(trace: _tr.Trace) -> dict:
-    """Convert a recorded trace to a Chrome trace-event JSON object."""
+def to_perfetto(trace: _tr.Trace, critical_path: bool = False) -> dict:
+    """Convert a recorded trace to a Chrome trace-event JSON object.
+
+    With ``critical_path=True`` (opt-in: the default output stays
+    byte-stable) the export additionally runs ``obs.critpath`` over the
+    trace and (a) shades every task slice by its scheduling slack —
+    critical-path slices red (``cname: terrible``), near-critical ones
+    progressively lighter, with ``slack_s``/``critical`` in the slice args
+    — and (b) appends a dedicated "critical path" track (one synthetic
+    process after the per-stage ones) holding only the binding chain,
+    recovery windows included, so the bounding sequence reads left-to-right
+    at ui.perfetto.dev.
+    """
     meta = trace.meta
     split = bool(meta.get("split_backward", False))
     num_stages = int(meta.get("num_stages", 0) or
                      1 + max((ev.stage for ev in trace.events), default=0))
+    cp_by_dlc: dict[int, tuple[float, bool]] = {}
+    cp_path: list = []
+    if critical_path:
+        # lazy import: export must stay loadable without the engine
+        from repro.obs.critpath import ROOT_KEY, ExecGraph
+
+        graph = ExecGraph.build(trace)
+        slacks = graph.slack()
+        mk = max(graph.makespan, 1e-300)
+        on_path = {n.key for n, _ in graph.critical_path()}
+        for key, node in graph.nodes.items():
+            if key == ROOT_KEY or node.dispatch_lc < 0:
+                continue
+            cp_by_dlc[node.dispatch_lc] = (slacks[key], key in on_path)
+        cp_path = [(n, e) for n, e in graph.critical_path()
+                   if n.key != ROOT_KEY]
+
+        def _shade(slack: float, critical: bool) -> str | None:
+            if critical:
+                return "terrible"
+            if slack < 0.05 * mk:
+                return "bad"
+            if slack < 0.20 * mk:
+                return "generally_bad"
+            return None
     events: list[dict] = []
     for s in range(num_stages):
         events.append({"ph": "M", "name": "process_name", "pid": s, "tid": 0,
@@ -72,11 +108,19 @@ def to_perfetto(trace: _tr.Trace) -> dict:
                     args["path"] = path
                 if "dur" in ev.info:
                     args["dur_s"] = ev.info["dur"]
-                events.append({
+                slice_ev = {
                     "ph": "X", "name": _slice_name(ev.task, split),
                     "cat": "task", "pid": ev.stage, "tid": 0,
                     "ts": d.t * _US, "dur": max(0.0, (ev.t - d.t) * _US),
-                    "args": args})
+                    "args": args}
+                if d.lc in cp_by_dlc:
+                    slack, critical = cp_by_dlc[d.lc]
+                    args["slack_s"] = slack
+                    args["critical"] = critical
+                    shade = _shade(slack, critical)
+                    if shade is not None:
+                        slice_ev["cname"] = shade
+                events.append(slice_ev)
             wb = ev.info.get("w_backlog")
             if wb is not None:
                 backlog_seen.add(ev.stage)
@@ -109,6 +153,27 @@ def to_perfetto(trace: _tr.Trace) -> dict:
                 "pid": ev.stage, "tid": 0, "ts": ts,
                 "dur": float(ev.info.get("dur", 0.0)) * _US,
                 "args": {"lc": ev.lc}})
+    if cp_path:
+        cp_pid = num_stages  # one synthetic process after the stage tracks
+        events.append({"ph": "M", "name": "process_name", "pid": cp_pid,
+                       "tid": 0, "args": {"name": "critical path"}})
+        events.append({"ph": "M", "name": "process_sort_index", "pid": cp_pid,
+                       "tid": 0, "args": {"sort_index": cp_pid}})
+        events.append({"ph": "M", "name": "thread_name", "pid": cp_pid,
+                       "tid": 0, "args": {"name": "binding chain"}})
+        for node, edge in cp_path:
+            if node.op == "recovery":
+                name = f"recovery s{node.stage}"
+            else:
+                name = f"{_slice_name(node.task, split)} s{node.stage}"
+            events.append({
+                "ph": "X", "name": name, "cat": "critical_path",
+                "pid": cp_pid, "tid": 0, "ts": node.dispatch_t * _US,
+                "dur": max(0.0, (node.end_t - node.dispatch_t) * _US),
+                "cname": "terrible",
+                "args": {"stage": node.stage, "op": node.op,
+                         "via": edge.kind if edge is not None else "root",
+                         "slack_s": 0.0, "critical": True}})
     return {
         "traceEvents": events,
         "displayTimeUnit": "ms",
@@ -116,10 +181,11 @@ def to_perfetto(trace: _tr.Trace) -> dict:
     }
 
 
-def export_perfetto(trace: _tr.Trace, path: str) -> None:
+def export_perfetto(trace: _tr.Trace, path: str,
+                    critical_path: bool = False) -> None:
     """Write the Chrome trace-event JSON for ``trace`` to ``path``."""
     with open(path, "w") as f:
-        json.dump(to_perfetto(trace), f)
+        json.dump(to_perfetto(trace, critical_path=critical_path), f)
 
 
 # ---- schema validation (used by tests and the conformance harness) --------

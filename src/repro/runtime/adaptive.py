@@ -73,6 +73,10 @@ class SwapDecision:
     predicted_candidate: float | None = None
     streak: int = 0        # improving-check streak after this evaluation
     reason: str = ""
+    #: when a swap fired: the critical-path category (obs.critpath) the
+    #: candidate table was predicted to shrink the most — which kind of
+    #: bound (compute / comm / gate / dispatch) the swap attacked
+    predicted_category: str | None = None
 
     @property
     def ratio(self) -> float | None:
@@ -89,6 +93,7 @@ class SwapDecision:
             "predicted_active": self.predicted_active,
             "predicted_candidate": self.predicted_candidate,
             "streak": self.streak, "reason": self.reason,
+            "predicted_category": self.predicted_category,
         }
 
 
@@ -174,19 +179,52 @@ class AdaptiveScheduler:
         swapped = False
         reason = "below threshold" if not improving else (
             f"improving ({self._streak}/{cfg.hysteresis})")
+        category = None
         if self._streak >= cfg.hysteresis:
+            old_table = self.table
             self.table = candidate
             self.version += 1
             self.swaps.append(step)
             self._streak = 0
             swapped = True
             reason = "swapped"
+            category = self._predicted_category(old_table, candidate,
+                                                measured)
         d = SwapDecision(step, checked=True, swapped=swapped,
                          predicted_active=p_active,
                          predicted_candidate=p_cand,
-                         streak=self._streak, reason=reason)
+                         streak=self._streak, reason=reason,
+                         predicted_category=category)
         self.decisions.append(d)
         return d
+
+    def _predicted_category(self, old_table, new_table,
+                            measured: CostModel) -> str | None:
+        """Which critical-path category the swap was predicted to shrink.
+
+        Prices both tables with recorded sim runs on the measured costs and
+        diffs their critical-path decompositions (``obs.critpath``) — pure
+        annotation on the swap decision, never part of the swap criterion;
+        best-effort (None when the probe runs cannot be priced).
+        """
+        try:
+            from repro.obs.critpath import ExecGraph
+            from repro.runtime.rrfp import ActorConfig, ActorDriver
+
+            cats = []
+            for table in (old_table, new_table):
+                cfg = ActorConfig(
+                    mode="hint", hint=self.config.hint,
+                    buffer_limit=self.config.buffer_limit,
+                    hint_table=table, record_trace=True, seed=0)
+                trace = ActorDriver(self.spec, measured, cfg).run().trace
+                cats.append(ExecGraph.build(trace, self.spec)
+                            .decompose().categories)
+            delta = {c: cats[0][c] - cats[1][c] for c in cats[0]}
+            best = max(delta, key=lambda c: delta[c])
+            return best if delta[best] > 0 else None
+        except Exception:
+            return None
 
     def to_json(self) -> dict:
         return {

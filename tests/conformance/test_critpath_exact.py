@@ -1,0 +1,143 @@
+"""Critical-path engine conformance: the longest path *is* the makespan.
+
+Property-checks ``repro.obs.critpath`` against randomized recorded runs
+(the same scenario generators the chaos/recovery conformance suites use):
+
+* the execution graph's longest path reconstructs the recorded sim
+  makespan **bit-exactly** — chain and DAG topologies, C0..C3 chaos,
+  with and without armed fail-stop faults (respawn and remap), and across
+  mid-run HINT_SWAP table swaps;
+* per-node slack is >= 0 everywhere and exactly 0 along the critical path;
+* the category decomposition (compute / comm / gate / dispatch / recovery)
+  sums *exactly* to the makespan — 100% accounted, no residue;
+* the what-if recurrence at factor 1.0 regenerates the recorded makespan,
+  and recovery windows are pinned: no virtual speedup shrinks MTTR.
+"""
+import dataclasses
+
+import pytest
+
+from harness import make_dag_scenario, make_scenario, sim_costs
+from test_adaptive_swap import _swap_scenario
+from test_recovery import _arm_fault
+
+from repro.obs.critpath import CP_CATEGORIES, ExecGraph
+from repro.obs.whatif import Speedup, predict, predict_ends
+from repro.runtime.rrfp import ActorDriver
+
+SEEDS_FAST = list(range(0, 8))
+SEEDS_SLOW = list(range(8, 24))
+
+
+def _run(spec, cfg, seed):
+    cfg = dataclasses.replace(cfg, record_trace=True)
+    res = ActorDriver(spec, sim_costs(spec, seed), cfg).run()
+    return res.trace
+
+
+def _check_exact(trace, spec):
+    """The tentpole invariants, asserted on one recorded trace."""
+    g = ExecGraph.build(trace, spec)
+    mk = float(trace.meta["makespan"])
+    assert g.makespan == mk, (g.makespan, mk)
+    assert g.verify() < 1e-9
+    slacks = g.slack()
+    assert min(slacks.values()) >= 0.0
+    for node, _ in g.critical_path():
+        assert slacks[node.key] == 0.0
+    rep = g.decompose()
+    assert sum(rep.categories[c] for c in CP_CATEGORIES) == mk
+    assert all(v >= 0.0 for v in rep.categories.values())
+    # compute splits are internally consistent (to float tolerance)
+    for split in (rep.compute_by_op, rep.compute_by_stage):
+        assert sum(split.values()) == pytest.approx(
+            rep.categories["compute"], rel=1e-9, abs=1e-12)
+    return g
+
+
+@pytest.mark.parametrize("seed", SEEDS_FAST)
+@pytest.mark.parametrize("make", [make_scenario, make_dag_scenario],
+                         ids=["chain", "dag"])
+def test_critical_path_reconstructs_makespan(make, seed):
+    sc = make(seed)
+    _check_exact(_run(sc.spec, sc.config, seed), sc.spec)
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("seed", SEEDS_SLOW)
+@pytest.mark.parametrize("make", [make_scenario, make_dag_scenario],
+                         ids=["chain", "dag"])
+def test_critical_path_reconstructs_makespan_slow(make, seed):
+    sc = make(seed)
+    _check_exact(_run(sc.spec, sc.config, seed), sc.spec)
+
+
+@pytest.mark.parametrize("seed", SEEDS_FAST)
+@pytest.mark.parametrize("make", [make_scenario, make_dag_scenario],
+                         ids=["chain", "dag"])
+def test_critical_path_exact_across_recovery(make, seed):
+    """Armed fail-stop fault (kill / permanent stall, respawn / remap):
+    the reconstruction stays bit-exact and the recovery category shows."""
+    sc = make(seed)
+    cfg, _ = _arm_fault(sc, seed)
+    trace = _run(sc.spec, cfg, seed)
+    g = _check_exact(trace, sc.spec)
+    if trace.recovery_windows():
+        assert g.num_recovery_windows >= 1
+        # MTTR is charged exactly when an outage bounds the makespan
+        on_path = any(n.op == "recovery" for n, _ in g.critical_path())
+        assert (g.decompose().categories["recovery"] > 0.0) == on_path
+
+
+@pytest.mark.parametrize("seed", [9, 17])
+def test_critical_path_exact_across_hint_swap(seed):
+    """Mid-run HINT_SWAP table swaps do not break the reconstruction."""
+    spec, costs, cfg = _swap_scenario(seed)
+    cfg = dataclasses.replace(cfg, record_trace=True)
+    trace = ActorDriver(spec, costs, cfg).run().trace
+    from repro.runtime.rrfp import trace as _tr
+    assert any(ev.kind == _tr.HINT_SWAP for ev in trace.events)
+    _check_exact(trace, spec)
+
+
+@pytest.mark.parametrize("seed", SEEDS_FAST[:4])
+def test_whatif_identity_at_factor_one(seed):
+    """factor == 1.0 leaves every predicted completion at its recording."""
+    sc = make_scenario(seed)
+    g = ExecGraph.build(_run(sc.spec, sc.config, seed), sc.spec)
+    assert predict(g, [Speedup(factor=1.0)]) == pytest.approx(
+        g.makespan, rel=1e-9)
+    assert predict(g, [Speedup(factor=1.0, comm=True)]) == pytest.approx(
+        g.makespan, rel=1e-9)
+
+
+@pytest.mark.parametrize("seed", SEEDS_FAST[:4])
+def test_whatif_speedup_never_hurts(seed):
+    """A virtual speedup (factor < 1) can only shrink the prediction; a
+    virtual slowdown can only grow it."""
+    sc = make_dag_scenario(seed)
+    g = ExecGraph.build(_run(sc.spec, sc.config, seed), sc.spec)
+    eps = 1e-9 * g.makespan
+    for s in (Speedup(factor=0.5), Speedup(factor=0.5, comm=True),
+              Speedup(factor=0.5, op="F")):
+        assert predict(g, [s]) <= g.makespan + eps
+    for s in (Speedup(factor=2.0), Speedup(factor=2.0, comm=True)):
+        assert predict(g, [s]) >= g.makespan - eps
+
+
+@pytest.mark.parametrize("seed", SEEDS_FAST)
+def test_whatif_recovery_windows_pinned(seed):
+    """MTTR is attributed, never 'sped up': recovery nodes keep their
+    recorded completion under any virtual speedup."""
+    sc = make_scenario(seed)
+    cfg, _ = _arm_fault(sc, seed)
+    trace = _run(sc.spec, cfg, seed)
+    if not trace.recovery_windows():
+        pytest.skip("fault did not produce a completed recovery window")
+    g = ExecGraph.build(trace, sc.spec)
+    rec_keys = [k for k, n in g.nodes.items() if n.op == "recovery"]
+    assert rec_keys
+    ends = predict_ends(g, [Speedup(factor=0.25),
+                            Speedup(factor=0.25, comm=True)])
+    for k in rec_keys:
+        assert ends[k] == g.nodes[k].end_t

@@ -135,6 +135,27 @@ class TestAdaptiveScheduler:
         assert sched.version == 1 and sched.swaps == [3]
         assert d.streak == 0  # streak consumed by the swap
 
+    def test_swap_records_predicted_category(self):
+        # a fired swap annotates which critical-path category the new
+        # table was predicted to shrink; non-swaps carry None
+        from repro.obs.critpath import CP_CATEGORIES
+
+        spec, costs = _split_workload(S=6, M=18, comm=0.4, base=_B6)
+        sched = AdaptiveScheduler(
+            spec, costs,
+            AdaptiveConfig(hint=HintKind.BFW, swap_threshold=1.02,
+                           hysteresis=1))
+        _seed_registry(sched.registry, spec, costs, scale={4: 2.0})
+        d = sched.maybe_resynthesize(0)
+        assert d.swapped
+        assert (d.predicted_category is None
+                or d.predicted_category in CP_CATEGORIES)
+        assert d.to_json()["predicted_category"] == d.predicted_category
+        # the annotation never appears on a decision that did not swap
+        _seed_registry(sched.registry, spec, costs)
+        d2 = sched.maybe_resynthesize(1)
+        assert not d2.swapped and d2.predicted_category is None
+
     def test_high_threshold_blocks_swap(self):
         spec, costs = _split_workload(S=6, M=18, comm=0.4, base=_B6)
         sched = AdaptiveScheduler(

@@ -1,0 +1,261 @@
+"""Critical-path engine + what-if profiler + explain report (unit level).
+
+Deterministic small-pipeline checks of ``repro.obs.critpath`` /
+``whatif`` / ``report`` semantics — the randomized chaos/recovery
+property matrix lives in ``tests/conformance/test_critpath.py``:
+
+* graph construction: exact makespan, 100%-accounted decomposition,
+  slack semantics on a trace small enough to reason about;
+* ``Speedup`` validation and ``apply_to_cost_model`` row scaling (the
+  bridge the predicted-vs-realized benchmark gate rides on);
+* ``explain()`` report assembly: bottleneck phrasing, what-if ranking,
+  straggler flags, bubble cross-check — plus the CLI round trip;
+* Perfetto export: the default output is byte-stable with the engine
+  present, and ``critical_path=True`` adds a valid highlighted track.
+"""
+import dataclasses
+import json
+
+import numpy as np
+import pytest
+
+from repro.core import CostModel, HintKind, JitterModel, Kind, PipelineSpec
+from repro.obs import (
+    CP_CATEGORIES,
+    ExecGraph,
+    Speedup,
+    apply_to_cost_model,
+    candidate_speedups,
+    explain,
+    predict,
+    to_perfetto,
+    validate_chrome_trace,
+)
+from repro.obs.report import main as report_main
+from repro.obs.whatif import rank
+from repro.runtime.rrfp import ActorConfig, ActorDriver
+
+
+def det_costs(S, f=1.0, b=2.0, w=0.0, comm=1e-3, **kw):
+    return CostModel.uniform(
+        S, f=f, b=b, w=w, comm_base=comm,
+        compute_jitter=JitterModel(), comm_jitter=JitterModel(), **kw)
+
+
+def run_recorded(spec, cm, **cfg_kw):
+    cfg = ActorConfig(record_trace=True, **cfg_kw)
+    driver = ActorDriver(spec, cm, cfg)
+    driver.run()
+    return driver.trace
+
+
+@pytest.fixture(scope="module")
+def chain():
+    spec = PipelineSpec(4, 6)
+    trace = run_recorded(spec, det_costs(4), mode="hint", hint=HintKind.BF)
+    return spec, trace
+
+
+# ---------------------------------------------------------------------------
+# graph construction
+# ---------------------------------------------------------------------------
+def test_exec_graph_exact_makespan(chain):
+    spec, trace = chain
+    g = ExecGraph.build(trace, spec)
+    assert g.makespan == float(trace.meta["makespan"])
+    assert g.verify() < 1e-12
+    assert len(g.nodes) == spec.total_tasks() + 1  # + the root
+
+
+def test_decomposition_sums_exactly(chain):
+    spec, trace = chain
+    rep = ExecGraph.build(trace, spec).decompose()
+    assert sum(rep.categories[c] for c in CP_CATEGORIES) == rep.makespan
+    fr = rep.fractions()
+    assert sum(fr.values()) == pytest.approx(1.0)
+    # a deterministic no-fault chain is compute-bound
+    assert rep.top_category() == "compute"
+    assert rep.categories["recovery"] == 0.0
+    assert rep.path_nodes > 0 and len(rep.path) == rep.path_nodes
+    assert "compute" in rep.table()
+
+
+def test_slack_zero_on_path_positive_off(chain):
+    spec, trace = chain
+    g = ExecGraph.build(trace, spec)
+    slacks = g.slack()
+    on_path = {n.key for n, _ in g.critical_path()}
+    assert all(slacks[k] == 0.0 for k in on_path)
+    assert min(slacks.values()) >= 0.0
+    off = [slacks[k] for k in g.nodes if k not in on_path]
+    assert off and max(off) > 0.0  # a 4x6 chain has genuinely idle nodes
+
+
+# ---------------------------------------------------------------------------
+# what-if: Speedup spec + prediction + cost-model bridge
+# ---------------------------------------------------------------------------
+def test_speedup_validation():
+    with pytest.raises(ValueError):
+        Speedup(factor=0.0)
+    with pytest.raises(ValueError):
+        Speedup(factor=-1.0, op="F")
+    with pytest.raises(ValueError):
+        Speedup(factor=0.5, comm=True, op="F")
+    with pytest.raises(ValueError):
+        Speedup(factor=0.5, comm=True, stage=1)
+    with pytest.raises(ValueError):
+        Speedup(factor=0.5, op="Q")
+    assert Speedup(factor=0.5, op="dX", stage=2).describe() == \
+        "dX @ stage 2 x0.5"
+    assert Speedup(factor=0.5, comm=True).describe() == "comm x0.5"
+
+
+def test_whatif_identity_and_composition(chain):
+    spec, trace = chain
+    g = ExecGraph.build(trace, spec)
+    assert predict(g, []) == pytest.approx(g.makespan, rel=1e-12)
+    assert predict(g, [Speedup(factor=1.0)]) == pytest.approx(
+        g.makespan, rel=1e-12)
+    # op speedups compose conjunctively with stage filters
+    all_b = predict(g, [Speedup(factor=0.5, op="B")])
+    one_b = predict(g, [Speedup(factor=0.5, op="B", stage=0)])
+    assert all_b <= one_b <= g.makespan + 1e-12
+
+
+def test_apply_to_cost_model_scales_rows():
+    cm = det_costs(4, f=1.0, b=2.0, w=1.5)
+    out = apply_to_cost_model(cm, [Speedup(factor=0.5, op="B"),
+                                   Speedup(factor=0.25, stage=1, op="F"),
+                                   Speedup(factor=2.0, comm=True)])
+    assert np.allclose(out.b_cost, cm.b_cost * 0.5)
+    assert out.f_cost[1] == pytest.approx(0.25 * cm.f_cost[1])
+    assert np.allclose(out.f_cost[[0, 2, 3]], cm.f_cost[[0, 2, 3]])
+    assert np.allclose(out.w_cost, cm.w_cost)
+    assert out.comm_base == pytest.approx(2.0 * cm.comm_base)
+    # the input model is untouched
+    assert cm.b_cost[0] == 2.0
+    # split-backward labels scale the same underlying rows
+    out2 = apply_to_cost_model(cm, [Speedup(factor=0.5, op="dX")])
+    assert np.allclose(out2.b_cost, cm.b_cost * 0.5)
+    # stage-only speedups scale every compute row of that stage
+    out3 = apply_to_cost_model(cm, [Speedup(factor=0.5, stage=2)])
+    for row in ("f_cost", "b_cost", "w_cost"):
+        assert getattr(out3, row)[2] == pytest.approx(
+            0.5 * getattr(cm, row)[2])
+
+
+def test_candidate_speedups_and_rank(chain):
+    spec, trace = chain
+    g = ExecGraph.build(trace, spec)
+    cands = candidate_speedups(g, factor=0.75)
+    assert sum(1 for s in cands if s.comm) == 1
+    assert {s.stage for s in cands if s.stage is not None} == set(range(4))
+    assert {s.op for s in cands if s.op is not None} == {"F", "B"}
+    rows = rank(g, factor=0.75)
+    assert len(rows) == len(cands)
+    gains = [r["gain"] for r in rows]
+    assert gains == sorted(gains, reverse=True)
+    for r in rows:
+        assert r["predicted_makespan"] == pytest.approx(
+            g.makespan - r["gain"], rel=1e-12)
+        assert 0.0 <= r["gain_frac"] <= 1.0
+    # on a b=2f chain, speeding B up beats speeding comm up
+    b_row = next(r for r in rows if r["op"] == "B")
+    comm_row = next(r for r in rows if r["comm"])
+    assert b_row["gain"] > comm_row["gain"]
+
+
+# ---------------------------------------------------------------------------
+# explain report + CLI
+# ---------------------------------------------------------------------------
+def test_explain_report_structure(chain):
+    spec, trace = chain
+    rep = explain(trace, spec)
+    assert rep.makespan == float(trace.meta["makespan"])
+    assert "compute" in rep.bottleneck
+    assert rep.ranking and rep.ranking[0]["gain"] >= rep.ranking[-1]["gain"]
+    doc = rep.to_json()
+    json.dumps(doc)  # serializable end-to-end
+    assert set(doc["critical_path"]["categories"]) == set(CP_CATEGORIES)
+    txt = rep.format()
+    assert "makespan explained" in txt and "what-if" in txt
+    assert "bubble cross-check" in txt
+
+
+def test_explain_flags_stragglers():
+    spec = PipelineSpec(4, 6)
+    cm = det_costs(4)
+    slow = dataclasses.replace(
+        cm, b_cost=cm.b_cost * np.array([1.0, 1.0, 3.0, 1.0]))
+    rep = explain(run_recorded(spec, slow, mode="hint", hint=HintKind.BF),
+                  spec)
+    flagged = {(s["stage"], s["op"]) for s in rep.stragglers}
+    assert (2, "B") in flagged
+    s = next(s for s in rep.stragglers if s["stage"] == 2 and s["op"] == "B")
+    assert s["ratio"] == pytest.approx(3.0, rel=0.05)
+    assert "stage 2" in rep.format()
+
+
+def test_explain_with_baseline_crosscheck(chain):
+    spec, trace = chain
+    # a starved baseline: same pipeline under 4x comm latency
+    base = run_recorded(spec, det_costs(4, comm=4e-1), mode="hint",
+                        hint=HintKind.BF)
+    rep = explain(trace, spec, baseline=base)
+    assert rep.crosscheck["baseline"] is True
+    assert rep.crosscheck["speedup"] > 1.0
+    assert "top_removed_bubble" in rep.crosscheck
+    assert "vs baseline" in rep.format()
+
+
+def test_report_cli_round_trip(tmp_path, capsys):
+    spec = PipelineSpec(3, 4)
+    trace = run_recorded(spec, det_costs(3), mode="hint", hint=HintKind.BF)
+    p = tmp_path / "t.trace.jsonl"
+    trace.save(str(p))
+    assert report_main([str(p)]) == 0
+    out = capsys.readouterr().out
+    assert "makespan explained" in out and "binding bottleneck" in out
+    pf = tmp_path / "t.perfetto.json"
+    assert report_main([str(p), "--json", "--perfetto", str(pf)]) == 0
+    doc = json.loads(capsys.readouterr().out)
+    assert doc["makespan"] == pytest.approx(float(trace.meta["makespan"]))
+    exported = json.load(open(pf))
+    validate_chrome_trace(exported)
+    assert any(e.get("cat") == "critical_path"
+               for e in exported["traceEvents"])
+
+
+# ---------------------------------------------------------------------------
+# Perfetto export: byte-stable default, highlighted opt-in
+# ---------------------------------------------------------------------------
+def test_perfetto_default_output_unchanged(chain):
+    spec, trace = chain
+    plain = to_perfetto(trace)
+    assert json.dumps(plain) == json.dumps(
+        to_perfetto(trace, critical_path=False))
+    for ev in plain["traceEvents"]:
+        assert "slack_s" not in ev.get("args", {})
+        assert ev.get("cat") != "critical_path"
+
+
+def test_perfetto_critical_path_track(chain):
+    spec, trace = chain
+    doc = to_perfetto(trace, critical_path=True)
+    validate_chrome_trace(doc)
+    evs = doc["traceEvents"]
+    cp = [e for e in evs if e.get("cat") == "critical_path"]
+    g = ExecGraph.build(trace, spec)
+    path = [n for n, _ in g.critical_path() if n.op != "root"]
+    assert len(cp) == len(path)
+    assert all(e["cname"] == "terrible" for e in cp)
+    names = {e["name"] for e in evs if e["ph"] == "M"}
+    assert "process_name" in names
+    pid = max(e["pid"] for e in evs if "pid" in e)
+    assert all(e["pid"] == pid for e in cp)  # own synthetic track
+    # task slices carry slack annotations; on-path ones are flagged
+    annotated = [e for e in evs if e.get("cat") == "task"
+                 and "slack_s" in e.get("args", {})]
+    assert annotated
+    assert any(e["args"]["critical"] for e in annotated)
+    assert all(e["args"]["slack_s"] >= 0.0 for e in annotated)
