@@ -1,0 +1,202 @@
+"""Lossy-network benchmark: goodput, MTTR and exactly-once under drops,
+partitions and concurrent faults (emits ``BENCH_lossy.json``).
+
+Three cell families, all on the sim substrate (virtual clock -> deterministic,
+CRN-seeded), all with the reliable-delivery layer on:
+
+* **goodput vs drop rate** — p ∈ {0, 0.01, 0.05, 0.2} i.i.d. per-transmission
+  drop (plus 1% detectable corruption at p > 0): completed tasks per virtual
+  second, normalized to the p=0 cell, alongside the retransmission and dedup
+  counters that explain the slope;
+* **MTTR under partition** — a bidirectional link blackout longer than the
+  retry budget: the transport escalates the unhealable edge to a link-failure
+  event and the recovery coordinator respawns the unreachable stage (the
+  partition is the *detector* here — no heartbeat wait);
+* **MTTR under concurrent double-kill** — two overlapping stage deaths inside
+  one iteration (cascading recovery windows, total epoch fencing across
+  both).  This cell also dumps its recovered trace and a Perfetto timeline
+  under ``_artifacts/`` for the CI lossy smoke job to upload.
+
+Every cell is **self-asserting**: the row carries ``exactly_once_ok`` (full
+conformance including ``check_reliable_delivery``) and ``parity_ok``
+(bitwise loss/grad equality against the same seed's unfailed run through
+deterministic numpy stage programs), and the bench raises if either is ever
+False — the JSON is a record of invariants that *held*, not a scoreboard.
+
+    PYTHONPATH=src python -m benchmarks.run --backend actor --lossy
+
+Set ``REPRO_SMOKE=1`` to shrink the sweep for CI smoke runs.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import pathlib
+import sys
+
+import numpy as np
+
+from repro.core import CostModel, PipelineSpec
+from repro.runtime.rrfp import (
+    ActorConfig,
+    ActorDriver,
+    ChaosConfig,
+    ReliableConfig,
+)
+from repro.runtime.rrfp.conformance import holds as invariants_hold
+
+# the parity harness lives with the conformance suite; the bench reuses it
+# rather than duplicating the float32 stage programs
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1]
+                       / "tests" / "conformance"))
+from harness import execute_complete_order  # noqa: E402
+
+S, M = 4, 16
+DROP_RATES = (0.0, 0.01, 0.05, 0.2)
+RELIABLE = ReliableConfig(rto=0.5)
+ARTIFACT_DIR = pathlib.Path("_artifacts")
+
+
+def _workload() -> tuple[PipelineSpec, CostModel]:
+    spec = PipelineSpec(S, M)
+    costs = CostModel.uniform(S, f=1.0, b=2.0, comm_base=1e-3, seed=0)
+    return spec, costs
+
+
+def _parity_ok(trace, calm_trace, spec: PipelineSpec, seed: int) -> bool:
+    got = execute_complete_order(trace, spec, seed)
+    want = execute_complete_order(calm_trace, spec, seed)
+    return all(
+        want[s].loss == got[s].loss and np.array_equal(want[s].d_w,
+                                                       got[s].d_w)
+        for s in range(spec.num_stages))
+
+
+def _run_cell(spec, costs, cfg, calm_trace, seed: int) -> tuple[dict, object]:
+    driver = ActorDriver(spec, costs, cfg)
+    result = driver.run()
+    trace = driver.trace
+    ok = invariants_hold(trace, spec, cfg)
+    parity = _parity_ok(trace, calm_trace, spec, seed)
+    stats = trace.meta.get("reliable_stats", {})
+    row = {
+        "makespan_s": result.makespan,
+        "goodput_tasks_per_s": spec.total_tasks() / result.makespan,
+        "sent": stats.get("sent", 0),
+        "retransmits": stats.get("retransmits", 0),
+        "dedup_drops": stats.get("dedup_drops", 0),
+        "corrupt_detected": stats.get("corrupt_detected", 0),
+        "link_failures": stats.get("link_failures", 0),
+        "exactly_once_ok": ok,
+        "parity_ok": parity,
+    }
+    return row, trace
+
+
+def run_lossy_bench() -> dict:
+    smoke = bool(os.environ.get("REPRO_SMOKE"))
+    drop_rates = (0.0, 0.05) if smoke else DROP_RATES
+    spec, costs = _workload()
+    seed = 0
+    base_cfg = ActorConfig(record_trace=True, seed=seed, reliable=RELIABLE)
+    calm = ActorDriver(spec, costs,
+                       dataclasses.replace(base_cfg, reliable=None))
+    calm.run()
+    rows = []
+
+    # ---- goodput vs drop rate ---------------------------------------------
+    base_goodput = None
+    for p in drop_rates:
+        chaos = (ChaosConfig(seed=101, drop_prob=p, corrupt_prob=0.01)
+                 if p > 0 else None)
+        cfg = dataclasses.replace(base_cfg, chaos=chaos)
+        row, _ = _run_cell(spec, costs, cfg, calm.trace, seed)
+        if base_goodput is None:
+            base_goodput = row["goodput_tasks_per_s"]
+        row.update({
+            "cell": f"goodput/drop={p}",
+            "drop_prob": p,
+            "relative_goodput": row["goodput_tasks_per_s"] / base_goodput,
+        })
+        rows.append(row)
+
+    # ---- MTTR under a partition (link-failure escalation, then heal) ------
+    chaos = ChaosConfig(seed=202, partitions=((1, 2, 5.0, 10.0),))
+    cfg = dataclasses.replace(
+        base_cfg, chaos=chaos,
+        reliable=ReliableConfig(rto=0.2, max_retries=4), recover=True)
+    row, trace = _run_cell(spec, costs, cfg, calm.trace, seed)
+    wins = trace.recovery_windows()
+    row.update({
+        "cell": "mttr/partition",
+        "recoveries": len(wins),
+        "fail_kinds": sorted({w["fail_kind"] for w in wins}),
+        "mttr_s": float(np.mean([w["t_end"] - w["t_fail"] for w in wins]))
+        if wins else 0.0,
+    })
+    assert row["link_failures"] >= 1, "partition cell never escalated"
+    rows.append(row)
+
+    # ---- MTTR under concurrent double-kill (+ drops) ----------------------
+    chaos = ChaosConfig(seed=303, drop_prob=0.05,
+                        fail_stages=((1, "kill", 5), (2, "kill", 7)))
+    cfg = dataclasses.replace(base_cfg, chaos=chaos, recover=True)
+    row, trace = _run_cell(spec, costs, cfg, calm.trace, seed)
+    wins = trace.recovery_windows()
+    row.update({
+        "cell": "mttr/double_kill",
+        "recoveries": len(wins),
+        "fail_kinds": sorted({w["fail_kind"] for w in wins}),
+        "mttr_s": float(np.mean([w["t_end"] - w["t_fail"] for w in wins]))
+        if wins else 0.0,
+    })
+    assert len(wins) >= 2, "double-kill cell produced < 2 recovery windows"
+    rows.append(row)
+    # recovered-trace artifacts for the CI lossy smoke job (gitignored dir)
+    ARTIFACT_DIR.mkdir(exist_ok=True)
+    trace.save(str(ARTIFACT_DIR / "lossy_doublekill_trace.jsonl"))
+    try:
+        from repro.obs.export import export_perfetto
+
+        export_perfetto(trace,
+                        str(ARTIFACT_DIR / "lossy_doublekill.perfetto.json"))
+    except Exception as exc:  # pragma: no cover - visualization best-effort
+        print(f"# perfetto export skipped: {exc}", file=sys.stderr)
+
+    # the bench is a gate, not just a report
+    bad = [r["cell"] for r in rows
+           if not (r["exactly_once_ok"] and r["parity_ok"])]
+    assert not bad, f"invariant columns failed on cells: {bad}"
+    return {
+        "spec": {"stages": S, "microbatches": M,
+                 "drop_rates": list(drop_rates),
+                 "reliable": dataclasses.asdict(RELIABLE),
+                 "smoke": smoke},
+        "rows": rows,
+    }
+
+
+def emit_json(path: str = "BENCH_lossy.json") -> dict:
+    report = run_lossy_bench()
+    with open(path, "w") as f:
+        json.dump(report, f, indent=2)
+    return report
+
+
+def lossy_rows(json_path: str = "BENCH_lossy.json") -> list[tuple]:
+    """CSV rows for ``benchmarks.run``."""
+    report = emit_json(json_path)
+    out = []
+    for r in report["rows"]:
+        if r["cell"].startswith("goodput"):
+            derived = (f"rel_goodput={r['relative_goodput']:.3f},"
+                       f"retx={r['retransmits']},dedup={r['dedup_drops']}")
+        else:
+            derived = (f"recoveries={r['recoveries']},"
+                       f"mttr={r['mttr_s'] * 1e3:.1f}ms,"
+                       f"linkfail={r['link_failures']}")
+        derived += (f",exactly_once={r['exactly_once_ok']},"
+                    f"parity={r['parity_ok']}")
+        out.append((f"lossy/{r['cell']}", r["makespan_s"] * 1e6, derived))
+    return out

@@ -56,6 +56,12 @@ def main() -> None:
                          "MTTR, post-recovery throughput and exactly-once "
                          "conformance across chaos levels × workloads × "
                          "respawn/remap (emits BENCH_recovery.json)")
+    ap.add_argument("--lossy", action="store_true",
+                    help="actor backend: run the lossy-network sweep — "
+                         "goodput vs drop rate, MTTR under partitions and "
+                         "concurrent double-kill, exactly-once + bitwise "
+                         "parity gates on every cell (emits "
+                         "BENCH_lossy.json)")
     ap.add_argument("--multimodal", action="store_true",
                     help="actor backend: run the multimodal DAG sweep — "
                          "readiness-driven vs pre-committed fixed order on "
@@ -122,10 +128,10 @@ def main() -> None:
                 "--hint bfw and --split-backward go together: the BFW hint "
                 "needs W tasks, which only exist under split backward")
         probe = args.metrics_report or args.export_perfetto
-        if sum([args.chaos, args.recovery, bfw, args.multimodal,
-                args.dispatch, args.bubbles, args.adaptive, args.critpath,
-                bool(probe)]) > 1:
-            raise SystemExit("--chaos, --recovery, the BFW sweep, "
+        if sum([args.chaos, args.recovery, args.lossy, bfw,
+                args.multimodal, args.dispatch, args.bubbles, args.adaptive,
+                args.critpath, bool(probe)]) > 1:
+            raise SystemExit("--chaos, --recovery, --lossy, the BFW sweep, "
                              "--multimodal, --dispatch, --bubbles, "
                              "--adaptive, --critpath and the telemetry "
                              "probe (--metrics-report/--export-perfetto) "
@@ -179,6 +185,11 @@ def main() -> None:
 
             json_out = args.json_out or "BENCH_recovery.json"
             label = "recovery"
+        elif args.lossy:
+            from benchmarks.lossy_network import lossy_rows as rows_fn
+
+            json_out = args.json_out or "BENCH_lossy.json"
+            label = "lossy"
         elif bfw:
             from benchmarks.bfw_compare import bfw_rows as rows_fn
 

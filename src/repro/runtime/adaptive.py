@@ -198,6 +198,58 @@ class AdaptiveScheduler:
         self.decisions.append(d)
         return d
 
+    def note_remap(self, host_of: list[int],
+                   recovery_cost: float = 0.0) -> SwapDecision:
+        """Re-synthesize against a post-remap topology (elastic recovery).
+
+        A re-map is a *known* regime shift, not measured drift: stages that
+        now time-share a host run slower by their cohabitation factor, and
+        the drift detector's hysteresis would leave the pipeline on a table
+        priced for the dead topology for several iterations.  So this prices
+        the remap directly — each stage's compute costs are scaled by the
+        number of stages its host now carries, ``recovery_cost`` (restore +
+        replay time, from the measured recovery window) is folded in as a
+        uniform per-stage compute surcharge — and the candidate table is
+        adopted *immediately* when it prices better than the active one.
+
+        The caller (the recovery coordinator / training loop) passes the
+        ``host_of`` map the remap produced, and arms the returned table for
+        the post-recovery iterations exactly like a drift swap.
+        """
+        import collections
+
+        load = collections.Counter(host_of)
+        factors = [float(load[host_of[s]])
+                   for s in range(self.spec.num_stages)]
+        measured = self.measured_costs() if not self._cold() \
+            else self.base_costs
+        surcharge = recovery_cost / max(1, self.spec.num_microbatches)
+        degraded = dataclasses.replace(
+            measured,
+            f_cost=measured.f_cost * factors + surcharge,
+            b_cost=measured.b_cost * factors + surcharge,
+            w_cost=measured.w_cost * factors,
+        )
+        candidate = synthesize(
+            self.spec, degraded, hint=self.config.hint,
+            buffer_limit=self.config.buffer_limit).stage_orders
+        p_active = price_orders(self.spec, self.table, degraded)
+        p_cand = price_orders(self.spec, candidate, degraded)
+        swapped = p_cand < p_active
+        if swapped:
+            self.table = candidate
+            self.version += 1
+            # no hysteresis: the topology change already happened
+            self._streak = 0
+        d = SwapDecision(step=-1, checked=True, swapped=swapped,
+                         predicted_active=p_active,
+                         predicted_candidate=p_cand,
+                         streak=self._streak,
+                         reason="remap" if swapped
+                         else "remap (active table still best)")
+        self.decisions.append(d)
+        return d
+
     def _predicted_category(self, old_table, new_table,
                             measured: CostModel) -> str | None:
         """Which critical-path category the swap was predicted to shrink.

@@ -46,27 +46,40 @@ def plan_remesh(alive_devices: int, prefer_model: int = 16,
     return best
 
 
-def remap_stages(num_stages: int, dead: int) -> list[int]:
-    """Host assignment after losing the device hosting stage ``dead``.
+def remap_stages(num_stages: int, dead) -> list[int]:
+    """Host assignment after losing the device(s) hosting ``dead`` stage(s).
 
     The re-map recovery path (no spare device to respawn onto): every stage
-    keeps its logical identity, the dead stage's actor is re-hosted on the
-    nearest surviving neighbor's device, and the pair time-share that
-    device.  ``plan_remesh`` validates that the surviving device set still
-    admits a mesh at all (the same feasibility rule full re-meshing uses);
-    the minimal-movement fold keeps every other stage's state in place so
-    only the dead stage restores from checkpoint.
+    keeps its logical identity, each dead stage's actor is re-hosted on the
+    nearest *surviving* neighbor's device, and the cohabitants time-share
+    that device.  ``plan_remesh`` validates that the surviving device set
+    still admits a mesh at all (the same feasibility rule full re-meshing
+    uses); the minimal-movement fold keeps every other stage's state in
+    place so only the dead stages restore from checkpoint.
+
+    ``dead`` is a stage index or an iterable of them (concurrent faults —
+    the cumulative dead set across overlapping recovery windows).  With
+    several dead stages each folds onto its nearest survivor (ties break
+    toward the lower index), so e.g. losing stages 1 and 2 of four folds
+    1 -> 0 and 2 -> 3 rather than chaining onto a dead neighbor.
 
     Returns ``host_of``: stage index -> hosting device (device ids are the
-    original stage indices; ``dead`` appears as nobody's host).
+    original stage indices; dead stages appear as nobody's host).
     """
-    if not (0 <= dead < num_stages):
-        raise ValueError(f"dead stage {dead} outside 0..{num_stages - 1}")
-    if num_stages < 2:
-        raise ValueError("cannot re-map a 1-stage pipeline")
-    plan_remesh(num_stages - 1, prefer_model=num_stages - 1, min_model=1)
+    dead_set = {dead} if isinstance(dead, int) else set(dead)
+    for d in dead_set:
+        if not (0 <= d < num_stages):
+            raise ValueError(f"dead stage {d} outside 0..{num_stages - 1}")
+    alive = num_stages - len(dead_set)
+    if alive < 1 or num_stages < 2:
+        raise ValueError(
+            f"cannot re-map {num_stages}-stage pipeline with "
+            f"{len(dead_set)} dead stages")
+    plan_remesh(alive, prefer_model=alive, min_model=1)
+    survivors = [s for s in range(num_stages) if s not in dead_set]
     host_of = list(range(num_stages))
-    host_of[dead] = dead - 1 if dead > 0 else dead + 1
+    for d in dead_set:
+        host_of[d] = min(survivors, key=lambda s: (abs(s - d), s))
     return host_of
 
 

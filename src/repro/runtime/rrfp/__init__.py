@@ -11,11 +11,16 @@ Layering (bottom-up):
   tp_group  -- §4.2 all-ranks admission barrier (duplicate-idempotent)
   mailbox   -- thread-safe per-kind arrival buffers
   transport -- SimTransport (virtual clock, injectable heavy-tailed latency)
-               / ThreadTransport (thread-per-stage, real callables)
+               / ThreadTransport (thread-per-stage, real callables) /
+               ReliableChannel + ReliableThreadTransport (per-edge seqnos,
+               checksums, ACK/NACK, CRN-keyed retransmission: exactly-once
+               delivery over a lossy wire, on both substrates)
   chaos     -- CRN-keyed fault injection: per-edge latency, reorder,
                duplication, stragglers, transient stalls, drifting costs
                (``drift_chaos``: the adaptive-rescheduling regime),
-               fail-stop faults (kill / permanent_stall) — both substrates
+               fail-stop faults (kill / permanent_stall, concurrent and
+               cascading via ``fail_stages``), and the lossy-network model
+               (drop / corrupt / partition) — both substrates
   actor     -- ready-set arbitration + App. C backpressure + thread loop
   driver    -- builds/wires everything; emits core.engine.RunResult traces,
                records event traces, replays recorded runs; with
@@ -60,12 +65,23 @@ from repro.runtime.rrfp.trace import (
     TraceRecorder,
     engine_replay_config,
 )
-from repro.runtime.rrfp.transport import SimTransport, ThreadTransport
+from repro.runtime.rrfp.transport import (
+    Ack,
+    ReliableChannel,
+    ReliableConfig,
+    ReliableThreadTransport,
+    SimTransport,
+    ThreadTransport,
+)
 
 __all__ = [
+    "Ack",
     "ActorConfig",
     "ActorDriver",
     "Admission",
+    "ReliableChannel",
+    "ReliableConfig",
+    "ReliableThreadTransport",
     "CHAOS_LEVELS",
     "ChaosConfig",
     "DRIFT_PROFILES",

@@ -132,6 +132,13 @@ class StageActor:
         #: executing.  The recovery coordinator's watchdog reads this to
         #: detect a permanently-stalled stage by heartbeat staleness.
         self.exec_since: float | None = None
+        #: thread substrate: set (under the mailbox condition) by the
+        #: recovery coordinator to kill a *live* incarnation — e.g. the
+        #: victim of a link failure, which is healthy but unreachable.  The
+        #: run loop re-checks it at both quiesce points (the wait loop and
+        #: immediately before recording a completion), so a halted actor can
+        #: never commit state after its successor incarnation exists.
+        self.halted = False
 
     # ---- readiness bookkeeping (call under the mailbox lock) ---------------
     def _is_ready(self, t: Task) -> bool:
@@ -383,6 +390,8 @@ class StageActor:
             with self.mailbox.cond:
                 task = None
                 while True:
+                    if self.halted:
+                        return
                     self.sync_mailbox()
                     task, sel_info = self.select_traced()
                     if task is not None or self.finished():
@@ -412,6 +421,11 @@ class StageActor:
             end = clock()
             self.stats.compute += end - start
             with self.mailbox.cond:
+                if self.halted:
+                    # killed mid-execution (link failure on a live stage):
+                    # the successor incarnation re-executes this task, so
+                    # committing it here would double-complete it
+                    return
                 succs = self.complete(task, now=end, dur=end - start)
                 self._n_complete += 1
                 if (self.swap_table is not None

@@ -39,12 +39,24 @@ Perturbations (all off by default):
   hangs forever — indistinguishable from death to the control plane, which
   must detect it by heartbeat deadline rather than by a closed connection).
   Either an explicit injection point (``fail_stage`` dies at its
-  ``fail_after``-th dispatch) or CRN-sampled per stage via ``fail_prob``,
+  ``fail_after``-th dispatch), a multi-fault plan (``fail_stages``: several
+  stages — or the same stage twice, death-during-recovery — each with its
+  own kind and dispatch index), or CRN-sampled per stage via ``fail_prob``,
   keyed by (seed, stage) so a scenario's death point is a reproducible
   function of the config.  With ``ActorConfig.recover`` the driver's
   recovery coordinator survives the fault; without it, the fault is
   *promoted to a detectable failure*: the run raises :class:`StageFailure`
   instead of hanging.
+* **lossy network** — ``drop_prob`` silently discards a wire transmission;
+  ``corrupt_prob`` flips the envelope checksum in flight (detectable — the
+  reliable receiver NACKs it, it is never admitted); ``partitions`` are
+  bidirectional link blackouts ``(a, b, t_start, duration)`` during which
+  every transmission (data and ACK) between stages ``a`` and ``b`` is
+  dropped, healing at ``t_start + duration``.  All three require the
+  reliable-delivery layer (``ActorConfig.reliable``) — without
+  retransmission a dropped message is a silent hang — and every draw is
+  keyed by (seed, task, rank, src, attempt), so retries re-roll the loss
+  while record/replay of the whole scenario stays exact.
 """
 from __future__ import annotations
 
@@ -116,6 +128,21 @@ class ChaosConfig:
     #: fail-stop fault: CRN-sampled — each stage independently dies with
     #: this probability, at a death point drawn from (seed, stage)
     fail_prob: float = 0.0
+    #: multi-fault plan: ((stage, kind, after), ...) — overlapping faults
+    #: (concurrent deaths, or the same stage listed twice for
+    #: death-during-recovery; ``after`` counts the stage's dispatches
+    #: *across incarnations*, so a second entry must exceed the first)
+    fail_stages: tuple[tuple[int, str, int], ...] = ()
+    #: ---- lossy network (requires ActorConfig.reliable) -------------------
+    #: probability one wire transmission (one attempt x one chaos copy) is
+    #: silently dropped; ACK/NACK transmissions roll independently
+    drop_prob: float = 0.0
+    #: probability one wire transmission arrives with a corrupted checksum
+    corrupt_prob: float = 0.0
+    #: bidirectional link blackouts: ((a, b, t_start, duration), ...) in
+    #: substrate seconds — between t_start and t_start + duration nothing
+    #: crosses the a<->b edge in either direction
+    partitions: tuple[tuple[int, int, float, float], ...] = ()
     #: ---- drifting compute costs (adaptive-scheduling scenarios) ----------
     #: "" (off) | "ramp" (slowdown grows linearly over drift_period steps,
     #: then holds) | "step" (slowdown switches on at step == drift_period)
@@ -139,13 +166,31 @@ class ChaosConfig:
             raise ValueError(
                 f"drift_profile must be one of {DRIFT_PROFILES}, "
                 f"got {self.drift_profile!r}")
+        for entry in self.fail_stages:
+            s, kind, after = entry
+            if kind not in FAIL_KINDS:
+                raise ValueError(
+                    f"fail_stages entry {entry!r}: kind must be one of "
+                    f"{FAIL_KINDS}")
+        for entry in self.partitions:
+            if len(entry) != 4:
+                raise ValueError(
+                    f"partitions entry {entry!r}: expected "
+                    f"(stage_a, stage_b, t_start, duration)")
 
     def active(self) -> bool:
         return (self.latency_base > 0 or self.reorder_prob > 0
                 or self.duplicate_prob > 0 or bool(self.straggler)
                 or self.stall_prob > 0 or self.fail_stage >= 0
-                or self.fail_prob > 0
+                or self.fail_prob > 0 or bool(self.fail_stages)
+                or self.lossy()
                 or bool(self.drift_profile and self.drift))
+
+    def lossy(self) -> bool:
+        """True when messages can be lost or mangled outright — the regime
+        that requires the reliable-delivery layer (``ActorConfig.reliable``)."""
+        return (self.drop_prob > 0 or self.corrupt_prob > 0
+                or bool(self.partitions))
 
     def drift_scale(self, stage: int) -> float:
         """Deterministic per-stage compute slowdown at ``self.step``.
@@ -168,6 +213,8 @@ class ChaosConfig:
         d["edge_scale"] = [[list(k), v] for k, v in self.edge_scale]
         d["straggler"] = [list(kv) for kv in self.straggler]
         d["drift"] = [list(kv) for kv in self.drift]
+        d["fail_stages"] = [list(kv) for kv in self.fail_stages]
+        d["partitions"] = [list(kv) for kv in self.partitions]
         return d
 
 
@@ -271,15 +318,35 @@ def drift_chaos(
         drift_period=int(period))
 
 
+#: parse_chaos key grammar (everything else is rejected, loudly)
+_CHAOS_PAIR_KEYS = ("straggler", "drift")
+_CHAOS_INT_KEYS = ("seed", "max_duplicates", "fail_stage", "fail_after",
+                   "drift_period", "step")
+_CHAOS_STR_KEYS = ("fail_kind", "drift_profile")
+_CHAOS_FLOAT_KEYS = ("latency_base", "latency_sigma", "reorder_prob",
+                     "reorder_window", "duplicate_prob", "straggler_unit",
+                     "stall_prob", "stall_scale", "fail_prob", "drop_prob",
+                     "corrupt_prob")
+_CHAOS_STRUCT_KEYS = ("partition", "fail_stages")
+CHAOS_SPEC_KEYS = (_CHAOS_PAIR_KEYS + _CHAOS_INT_KEYS + _CHAOS_STR_KEYS
+                   + _CHAOS_FLOAT_KEYS + _CHAOS_STRUCT_KEYS)
+
+
 def parse_chaos(spec: str) -> ChaosConfig:
     """CLI syntax: a level name and/or comma-separated key=value overrides.
 
         --chaos C2
         --chaos C1,reorder_prob=0.5,seed=7
         --chaos latency_base=1e-3,straggler=1:2.5+3:4.0
+        --chaos drop_prob=0.05,corrupt_prob=0.01,partition=1:2:0.02:0.05
+        --chaos fail_stages=1:kill:2+3:kill:4
 
     The level (at most one) is the base config regardless of where it
-    appears; key=value parts override it in order.
+    appears; key=value parts override it in order.  ``partition`` entries
+    are ``a:b:t_start:duration`` (``+``-joined for several); ``fail_stages``
+    entries are ``stage:kind:after``.  Unknown keys and malformed values
+    fail fast with the list of valid keys — a typo must never silently
+    parse to "no chaos".
     """
     parts = list(filter(None, (p.strip() for p in spec.split(","))))
     levels = [p for p in parts if p in CHAOS_LEVELS]
@@ -292,20 +359,44 @@ def parse_chaos(spec: str) -> ChaosConfig:
         if "=" not in part:
             raise ValueError(
                 f"bad chaos spec {part!r}: expected a level in "
-                f"{sorted(CHAOS_LEVELS)} or key=value")
+                f"{sorted(CHAOS_LEVELS)} or key=value "
+                f"(keys: {sorted(CHAOS_SPEC_KEYS)})")
         key, val = part.split("=", 1)
-        if key in ("straggler", "drift"):
-            pairs = tuple(
-                (int(s), float(f))
-                for s, f in (kv.split(":") for kv in val.split("+")))
-            cfg = dataclasses.replace(cfg, **{key: pairs})
-        elif key in ("seed", "max_duplicates", "fail_stage", "fail_after",
-                     "drift_period", "step"):
-            cfg = dataclasses.replace(cfg, **{key: int(val)})
-        elif key in ("fail_kind", "drift_profile"):
-            cfg = dataclasses.replace(cfg, **{key: val})
-        else:
-            cfg = dataclasses.replace(cfg, **{key: float(val)})
+        if key not in CHAOS_SPEC_KEYS:
+            raise ValueError(
+                f"unknown chaos key {key!r} in {part!r}; valid keys: "
+                f"{sorted(CHAOS_SPEC_KEYS)}")
+        try:
+            if key in _CHAOS_PAIR_KEYS:
+                pairs = tuple(
+                    (int(s), float(f))
+                    for s, f in (kv.split(":") for kv in val.split("+")))
+                cfg = dataclasses.replace(cfg, **{key: pairs})
+            elif key == "partition":
+                quads = tuple(
+                    (int(a), int(b), float(t0), float(d))
+                    for a, b, t0, d in
+                    (kv.split(":") for kv in val.split("+")))
+                cfg = dataclasses.replace(cfg, partitions=quads)
+            elif key == "fail_stages":
+                triples = tuple(
+                    (int(s), kind, int(k))
+                    for s, kind, k in
+                    (kv.split(":") for kv in val.split("+")))
+                cfg = dataclasses.replace(cfg, fail_stages=triples)
+            elif key in _CHAOS_INT_KEYS:
+                cfg = dataclasses.replace(cfg, **{key: int(val)})
+            elif key in _CHAOS_STR_KEYS:
+                cfg = dataclasses.replace(cfg, **{key: val})
+            else:
+                cfg = dataclasses.replace(cfg, **{key: float(val)})
+        except ValueError as exc:
+            # __post_init__ rejections (bad fail_kind etc.) are already
+            # descriptive; wrap only raw conversion failures
+            if "chaos" in str(exc) or "must be one of" in str(exc):
+                raise
+            raise ValueError(
+                f"bad chaos value in {part!r}: {exc}") from exc
     return cfg
 
 
@@ -402,6 +493,77 @@ class ChaosEngine:
             if rng.random() < cfg.fail_prob:
                 return (cfg.fail_kind, int(rng.integers(0, max(1, n_tasks))))
         return None
+
+    def fail_points(self, stage: int, n_tasks: int) -> list[tuple[str, int]]:
+        """All fail-stop faults planned for ``stage``, in dispatch order.
+
+        Supersets :meth:`fail_point` with the ``fail_stages`` multi-fault
+        plan: the same stage may appear several times (death-during-recovery)
+        and several stages may carry overlapping windows.  Each entry's
+        dispatch index is clamped into range so an armed fault always fires;
+        duplicate indices on one stage are collapsed (a stage can only die
+        once per dispatch)."""
+        pts: list[tuple[str, int]] = []
+        single = self.fail_point(stage, n_tasks)
+        if single is not None:
+            pts.append(single)
+        for s, kind, after in self.cfg.fail_stages:
+            if s == stage:
+                pts.append((kind, min(max(0, after), max(0, n_tasks - 1))))
+        pts.sort(key=lambda p: p[1])
+        out: list[tuple[str, int]] = []
+        for kind, k in pts:
+            if not out or out[-1][1] != k:
+                out.append((kind, k))
+        return out
+
+    # ---- lossy network -----------------------------------------------------
+    def partitioned(self, a: int, b: int, now: float) -> bool:
+        """Is the a<->b link blacked out at substrate time ``now``?"""
+        for pa, pb, t0, dur in self.cfg.partitions:
+            if {pa, pb} == {a, b} and t0 <= now < t0 + dur:
+                return True
+        return False
+
+    def dropped(self, env: Envelope, now: float, attempt: int = 0,
+                copy: int = 0) -> bool:
+        """Is this wire transmission (one attempt x one copy) lost?
+
+        Partitions drop deterministically (a blackout loses everything on
+        the edge); otherwise ``drop_prob`` rolls per (task, rank, attempt,
+        copy, src) — a retransmission re-rolls its fate, which is what lets
+        bounded retry eventually get through a merely-lossy link while a
+        partition defeats it until it heals or retry escalates."""
+        if self.partitioned(env.src_stage, env.dst_stage, now):
+            return True
+        if self.cfg.drop_prob <= 0:
+            return False
+        rng = self._rng(f"drop:{attempt}:{copy}", env.task, env.rank,
+                        src=env.src_stage)
+        return bool(rng.random() < self.cfg.drop_prob)
+
+    def corrupted(self, env: Envelope, attempt: int = 0) -> bool:
+        """Does this transmission arrive with a mangled checksum?"""
+        if self.cfg.corrupt_prob <= 0:
+            return False
+        rng = self._rng(f"corrupt:{attempt}", env.task, env.rank,
+                        src=env.src_stage)
+        return bool(rng.random() < self.cfg.corrupt_prob)
+
+    def ack_dropped(self, env: Envelope, now: float,
+                    attempt: int = 0) -> bool:
+        """Is the ACK/NACK for this (env, attempt) lost on the way back?
+
+        ACKs traverse the same lossy wire (reverse direction of the data
+        edge) but carry no reliability of their own — a lost ACK is healed
+        by the sender's retransmission plus receiver-side dedup."""
+        if self.partitioned(env.src_stage, env.dst_stage, now):
+            return True
+        if self.cfg.drop_prob <= 0:
+            return False
+        rng = self._rng(f"ackdrop:{attempt}", env.task, env.rank,
+                        src=env.src_stage)
+        return bool(rng.random() < self.cfg.drop_prob)
 
 
 class ChaosThreadTransport:

@@ -281,6 +281,66 @@ def check_wcap_path(trace: tr.Trace) -> None:
                 f"lc={ev.lc}: wcap path dispatched non-W task {ev.task}")
 
 
+def check_reliable_delivery(trace: tr.Trace, spec: PipelineSpec) -> None:
+    """Exactly-once delivery under a lossy wire (reliable transport on).
+
+    Keys on the per-edge sequence number (``eseq``) the reliable channel
+    stamps into SEND / DELIVER / FENCE / RDUP records; recovery *replay*
+    envelopes carry no eseq and are governed by the epoch-fencing checks
+    instead.  Asserts:
+
+    1. **dedup** — each (src, dst, eseq) reaches the destination mailbox at
+       most once (DELIVER + FENCE combined): redundant transmissions never
+       survive past the channel's dedup set;
+    2. **completeness** — every reliable SEND reaches the mailbox exactly
+       once, unless its edge escalated to LINK_FAIL or its destination
+       stage failed (recovery replay re-covers those);
+    3. **retransmit sanity** — RETRANSMIT records carry attempt >= 1;
+    4. **dup sanity** — every RDUP names a key that was first admitted;
+    5. **escalation** — every LINK_FAIL's destination stage has a FAIL
+       record (the fault was handed to recovery, not swallowed).
+    """
+    landed = Counter()
+    for kind in (tr.DELIVER, tr.FENCE):
+        for ev in trace.select(kind):
+            if "eseq" in ev.info:
+                landed[(int(ev.info["src"]), ev.stage,
+                        int(ev.info["eseq"]))] += 1
+    dups = {k: n for k, n in landed.items() if n > 1}
+    assert not dups, (
+        f"reliable dedup violated: {len(dups)} eseq key(s) reached a "
+        f"mailbox more than once: {sorted(dups)[:6]}")
+
+    failed_stages = {ev.stage for ev in trace.select(tr.FAIL)}
+    dead_edges = {(int(ev.info["src"]) if "src" in ev.info else ev.stage,
+                   int(ev.info["dst"]))
+                  for ev in trace.select(tr.LINK_FAIL)}
+    for ev in trace.select(tr.SEND):
+        if "eseq" not in ev.info:
+            continue
+        key = (ev.stage, ev.task.stage, int(ev.info["eseq"]))
+        if key in landed:
+            continue
+        assert (ev.stage, ev.task.stage) in dead_edges \
+            or ev.task.stage in failed_stages, (
+            f"reliable send lost: {key} ({ev.task}) never reached the "
+            f"mailbox and its edge never escalated")
+
+    for ev in trace.select(tr.RETRANSMIT):
+        assert int(ev.info["attempt"]) >= 1, (
+            f"lc={ev.lc}: RETRANSMIT with attempt "
+            f"{ev.info['attempt']} (first attempts are not retransmits)")
+    for ev in trace.select(tr.RDUP):
+        key = (int(ev.info["src"]), ev.stage, int(ev.info["eseq"]))
+        assert key in landed, (
+            f"lc={ev.lc}: duplicate {key} dropped but the key was never "
+            f"admitted in the first place")
+    for ev in trace.select(tr.LINK_FAIL):
+        assert int(ev.info["dst"]) in failed_stages, (
+            f"lc={ev.lc}: edge {ev.stage}->{ev.info['dst']} declared "
+            f"unhealable but stage {ev.info['dst']} has no FAIL record")
+
+
 def check_all(trace: tr.Trace, spec: PipelineSpec, config) -> None:
     """Every invariant, against one run's trace.  ``config`` is any object
     with ``mode`` / ``w_defer_cap`` / ``buffer_limit`` attributes
@@ -299,6 +359,8 @@ def check_all(trace: tr.Trace, spec: PipelineSpec, config) -> None:
     check_hint_faithful(trace, spec)
     check_table_faithful(trace, spec)
     check_wcap_path(trace)
+    if trace.meta.get("reliable"):
+        check_reliable_delivery(trace, spec)
 
 
 def holds(trace: tr.Trace, spec: PipelineSpec, config) -> bool:

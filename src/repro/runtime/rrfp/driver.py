@@ -87,7 +87,14 @@ from repro.runtime.rrfp.chaos import (
 from repro.runtime.rrfp.mailbox import Mailbox
 from repro.runtime.rrfp.messages import Envelope, envelopes_for, reset_seq
 from repro.runtime.rrfp.trace import ReplayOracle, Trace, TraceRecorder
-from repro.runtime.rrfp.transport import SimTransport, ThreadTransport
+from repro.runtime.rrfp.transport import (
+    ReliableChannel,
+    ReliableConfig,
+    ReliableThreadTransport,
+    SimTransport,
+    ThreadTransport,
+    rng_for,
+)
 
 
 class _StageDeath(Exception):
@@ -125,6 +132,11 @@ class ActorConfig:
     deadlock_timeout: float = 30.0
     #: fault injection scenario (None = no chaos)
     chaos: ChaosConfig | None = None
+    #: reliable-delivery layer (per-edge sequence numbers, checksums,
+    #: ACK/NACK, CRN-keyed retransmission, receiver-side dedup).  Required
+    #: whenever the chaos scenario is *lossy* (drop/corrupt/partition):
+    #: without retransmission a dropped message is a silent deadlock.
+    reliable: ReliableConfig | None = None
     #: record a structured event trace (driver.trace / RunResult.trace)
     record_trace: bool = False
     #: re-execute a recorded trace (time-exact on sim, order-exact threaded)
@@ -166,6 +178,11 @@ class ActorConfig:
     #: stage's program (e.g. params restored via CheckpointStore); None
     #: reuses the original work_fn (stateless programs)
     respawn: Callable[[int], Any] | None = None
+    #: an :class:`repro.runtime.adaptive.AdaptiveScheduler` (or None): on an
+    #: elastic re-map the driver calls ``note_remap(host_of)`` and, if the
+    #: re-synthesized table prices better on the degraded topology, hot-swaps
+    #: it into every live actor (recorded as HINT_SWAP events)
+    adaptive: Any | None = None
     #: ---- adaptive scheduling (schedules are data; docs/adaptive.md) -----
     #: hint-mode rank table: per-stage synthesized orders consumed as a
     #: *non-binding* priority table from t=0 (dispatch path "table").
@@ -214,6 +231,12 @@ class ActorDriver:
             raise ValueError(
                 "swap_table needs a quiesce trigger: swap_at (sim virtual "
                 "time) or swap_after (thread per-stage completion count)")
+        if (config.chaos is not None and config.chaos.lossy()
+                and config.reliable is None and config.replay is None):
+            raise ValueError(
+                "lossy chaos (drop_prob/corrupt_prob/partitions) requires "
+                "ActorConfig.reliable: without retransmission a dropped "
+                "message is a silent deadlock, not a detectable fault")
         self.spec = spec
         self.costs = costs
         self.config = config
@@ -240,6 +263,8 @@ class ActorDriver:
                       if spec.graph is not None else None),
             "chaos": cfg.chaos.to_json() if cfg.chaos is not None else None,
             "trace_ready": "full" if cfg.trace_full_ready else "diff",
+            **({"reliable": dataclasses.asdict(cfg.reliable)}
+               if cfg.reliable is not None else {}),
             **({"recover": True, "recovery_mode": cfg.recovery_mode,
                 "hb_deadline": cfg.hb_deadline,
                 "restore_cost": cfg.restore_cost} if cfg.recover else {}),
@@ -278,6 +303,7 @@ class ActorDriver:
             w_defer_cap=meta.get("w_defer_cap", cfg.w_defer_cap),
             tp_degree=meta.get("tp_degree", cfg.tp_degree),
             chaos=None,  # realized durations/arrivals already include chaos
+            reliable=None,  # recorded DELIVERs are post-dedup admissions
             # adaptive tables: the recorded run's active table (+ any
             # mid-run swap) re-derives the same decisions on sim replay
             hint_table=_orders("hint_table"),
@@ -383,19 +409,30 @@ class ActorDriver:
                  if cfg.chaos is not None and cfg.chaos.active() else None)
         mailboxes, actors = self._build_actors(cfg, recorder)
 
-        # fail-stop fault plan: a pure (CRN) function of the chaos config
-        fails: dict[int, tuple[str, int]] = {}
+        # fail-stop fault plan: a pure (CRN) function of the chaos config.
+        # Each stage carries a *list* of planned faults in dispatch order —
+        # the multi-fault generalization (concurrent deaths and
+        # death-during-recovery are just overlapping entries).
+        fails: dict[int, list[tuple[str, int]]] = {}
         if chaos is not None:
             for s in range(spec.num_stages):
-                fp = chaos.fail_point(s, spec.num_tasks_per_stage())
-                if fp is not None:
-                    fails[s] = fp
+                fps = chaos.fail_points(s, spec.num_tasks_per_stage())
+                if fps:
+                    fails[s] = fps
         epoch = 0  # recovery generation; stamps every outgoing envelope
         dead: set[int] = set()
+        #: per-stage incarnation counter: a "complete" heap event carries the
+        #: incarnation that scheduled it, so an in-flight completion of a
+        #: stage killed *mid-execution* (link failure on a live stage) is
+        #: discarded instead of committing zombie state
+        incarnation = [0] * spec.num_stages
         n_disp = [0] * spec.num_stages
         fail_time: dict[int, float] = {}
         fail_kind_of: dict[int, str] = {}
         recoveries: list[dict] = []
+        #: stages whose hosting device has been lost (cumulative across
+        #: overlapping recovery windows): the re-map fold's dead set
+        remapped: set[int] = set()
         #: (task, rank, src) of every envelope handed to the transport —
         #: the recovery coordinator's replay source (sim payloads are the
         #: fact of arrival, so identity is the whole message)
@@ -420,19 +457,99 @@ class ActorDriver:
 
         def record_send(env: Envelope, _lat: float) -> None:
             if recorder is not None:
+                rel = {"eseq": env.eseq} if env.eseq >= 0 else {}
                 recorder.record(_tr.SEND, env.src_stage, env.task,
-                                rank=env.rank, t=env.send_time, seq=env.seq)
+                                rank=env.rank, t=env.send_time, seq=env.seq,
+                                **rel)
 
         transport = SimTransport(
             costs, schedule=schedule_delivery, seed=cfg.seed,
             on_send=record_send) if oracle is None else None
 
+        # ---- reliable-delivery layer over a lossy virtual wire ----------
+        def link_fail(src: int, dst: int, env: Envelope, now: float) -> None:
+            """Retry budget exhausted on src->dst: escalate to a stage fault
+            on the unreachable receiver, detected immediately (the transport
+            itself is the failure detector — no heartbeat wait)."""
+            if dst in dead:
+                return  # already under recovery; its replay covers this edge
+            dead.add(dst)
+            fail_time[dst] = now
+            fail_kind_of[dst] = "link"
+            incarnation[dst] += 1  # discard any in-flight completion
+            busy_until[host_of[dst]] = float("inf")
+            if recorder is not None:
+                recorder.record(_tr.FAIL, dst, env.task, t=now,
+                                fail_kind="link", src=src)
+            if not cfg.recover:
+                if recorder is not None:
+                    self.trace = recorder.trace()
+                raise StageFailure(
+                    dst, "link",
+                    f"edge {src}->{dst} unhealable at t={now:.6g}")
+            push(now, "detect", dst)
+
+        def wire_transmit(env: Envelope, attempt: int, now: float) -> None:
+            copies = chaos.copies(env) if chaos is not None else 1
+            for copy in range(copies):
+                if chaos is not None and chaos.dropped(env, now, attempt,
+                                                       copy):
+                    if recorder is not None:
+                        recorder.record(_tr.DROP, env.src_stage, env.task,
+                                        rank=env.rank, t=now,
+                                        dst=env.dst_stage, eseq=env.eseq,
+                                        attempt=attempt, copy=copy)
+                    continue
+                arriving = env
+                if chaos is not None and chaos.corrupted(env, attempt):
+                    arriving = dataclasses.replace(
+                        env, checksum=env.checksum ^ (attempt + 1))
+                lat = costs.sample_comm(rng_for(cfg.seed, env))
+                if chaos is not None:
+                    lat += chaos.comm_delay(env, copy)
+                push(now + lat, "rdeliver", (arriving, attempt))
+
+        def wire_ack(ack, env: Envelope, now: float) -> None:
+            if chaos is not None and chaos.ack_dropped(env, now,
+                                                       ack.attempt):
+                return  # sender's RTO covers it; receiver dedups the retry
+            push(now + cfg.reliable.ack_latency, "call",
+                 lambda t, a=ack: channel.on_ack(a, t))
+
+        def wire_deliver(env: Envelope, now: float) -> None:
+            s = env.dst_stage
+            adm = mailboxes[s].deliver(env, now=now)
+            if adm is not None:
+                actors[s].sync_mailbox()
+                try_dispatch(s, now)
+
+        #: current virtual time (updated at every heap pop): the reliable
+        #: channel's RTO timers anchor to it when they re-arm
+        simnow = [0.0]
+
+        channel = None
+        if cfg.reliable is not None and oracle is None:
+            channel = ReliableChannel(
+                cfg.reliable,
+                transmit=wire_transmit,
+                send_ack=wire_ack,
+                set_timer=lambda delay, fn: push(
+                    simnow[0] + delay, "call", fn),
+                deliver=wire_deliver,
+                on_link_fail=link_fail,
+                recorder=recorder,
+                on_send=record_send,
+                seed=cfg.seed,
+            )
+
         def send_messages(succ: Task, src: int, now: float) -> None:
             for env in envelopes_for(succ, src, cfg.tp_degree, send_time=now,
                                      epoch=epoch):
-                if fails or dead:
+                if fails or dead or channel is not None:
                     sent_log.add((env.task, env.rank, env.src_stage))
-                if oracle is None:
+                if channel is not None:
+                    channel.send(env, now=now)
+                elif oracle is None:
                     transport.send(env, now=now)
                 else:
                     record_send(env, 0.0)
@@ -480,23 +597,28 @@ class ActorDriver:
             actor.begin(task, now=now, info=sel_info)
             k = n_disp[s]
             n_disp[s] += 1
-            fp = fails.get(s)
-            if fp is not None and k == fp[1]:
+            fps = fails.get(s)
+            if fps and k >= fps[0][1]:
                 # fail-stop: the stage dies executing this task — no
-                # COMPLETE, no outgoing messages, in-memory state lost
-                del fails[s]
+                # COMPLETE, no outgoing messages, in-memory state lost.
+                # ``n_disp`` counts across incarnations, so a second entry
+                # on the same stage fires on the *respawned* incarnation
+                # (death-during-recovery).
+                kind_f = fps.pop(0)[0]
+                if not fps:
+                    del fails[s]
                 dead.add(s)
                 fail_time[s] = now
-                fail_kind_of[s] = fp[0]
+                fail_kind_of[s] = kind_f
                 busy_until[h] = float("inf")
                 if recorder is not None:
                     recorder.record(_tr.FAIL, s, task, t=now,
-                                    fail_kind=fp[0])
+                                    fail_kind=kind_f)
                 if not cfg.recover:
                     if recorder is not None:
                         self.trace = recorder.trace()
                     raise StageFailure(
-                        s, fp[0], f"t={now:.6g}, dispatch #{k}")
+                        s, kind_f, f"t={now:.6g}, dispatch #{k}")
                 # heartbeat deadline: the coordinator declares the stage
                 # dead only after hb_deadline of silence
                 push(now + cfg.hb_deadline, "detect", s)
@@ -509,7 +631,7 @@ class ActorDriver:
             begin = now + coord
             start[task] = begin
             busy_until[h] = begin + dur
-            push(busy_until[h], "complete", task)
+            push(busy_until[h], "complete", (task, incarnation[s]))
 
         def co_hosted(h: int) -> list[int]:
             return [s2 for s2 in range(spec.num_stages) if host_of[s2] == h]
@@ -526,9 +648,16 @@ class ActorDriver:
 
         while events:
             now, _, ekind, payload = heapq.heappop(events)
+            simnow[0] = now
             if ekind == "complete":
-                task: Task = payload
+                task, inc = payload
                 s = task.stage
+                if inc != incarnation[s]:
+                    # a completion scheduled by an incarnation that was
+                    # since killed mid-execution (link failure): zombie
+                    # state, never committed — the successor incarnation
+                    # re-executes the task
+                    continue
                 end[task] = now
                 n_done += 1
                 succs = actors[s].complete(task, now=now, dur=now - start[task])
@@ -538,6 +667,15 @@ class ActorDriver:
                 idle_since[h] = now
                 for s2 in co_hosted(h):
                     try_dispatch(s2, now)
+            elif ekind == "call":
+                # reliable-transport timer/ack hop: invoke with fire time
+                payload(now)
+            elif ekind == "rdeliver":
+                # one wire transmission survived drop/partition: the channel
+                # verifies the checksum, dedups, acks, and (first admission
+                # only) delivers into the mailbox
+                env, attempt = payload
+                channel.on_wire(env, attempt, now)
             elif ekind == "deliver":
                 env: Envelope = payload
                 s = env.dst_stage
@@ -564,14 +702,19 @@ class ActorDriver:
                     recorder.record(_tr.RECOVERY_BEGIN, s, t=now,
                                     epoch_from=epoch, epoch_to=epoch + 1)
                 epoch += 1
+                incarnation[s] += 1
                 if recorder is not None:
                     recorder.epoch = epoch
                 if cfg.recovery_mode == "remap":
                     # no spare device: fold the dead stage onto a surviving
-                    # neighbor (feasibility-checked MeshPlan re-layout)
+                    # neighbor (feasibility-checked MeshPlan re-layout).
+                    # The dead set is cumulative across overlapping windows
+                    # — a second concurrent death folds onto a device that
+                    # is actually still alive, never onto a dead neighbor.
                     from repro.runtime.elastic import remap_stages
 
-                    host_of = remap_stages(spec.num_stages, s)
+                    remapped.add(s)
+                    host_of = remap_stages(spec.num_stages, remapped)
                 # respawn: fresh mailbox (fenced at the new epoch) + actor
                 mb, actor = self._make_stage(s, cfg, recorder, epoch=epoch)
                 mailboxes[s] = mb
@@ -586,6 +729,19 @@ class ActorDriver:
                     # incarnation adopts the active table, not the stale one
                     actor.set_hint_table(cfg.swap_table[s], now=now,
                                          version=cfg.hint_table_version + 1)
+                if (cfg.recovery_mode == "remap"
+                        and cfg.adaptive is not None and cfg.mode == "hint"):
+                    # re-synthesize against the post-remap topology: stages
+                    # now time-sharing a device price slower, and the
+                    # recovery cost folds into the candidate's pricing
+                    d = cfg.adaptive.note_remap(
+                        host_of, recovery_cost=cfg.restore_cost)
+                    if d.swapped:
+                        for s2 in range(spec.num_stages):
+                            a2 = actors[s2] if s2 != s else actor
+                            if s2 == s or s2 not in dead:
+                                a2.set_hint_table(
+                                    cfg.adaptive.table[s2], now=now)
                 t_up = now + cfg.restore_cost
                 for task_, rank_, src_ in sorted(
                         e for e in sent_log
@@ -637,6 +793,8 @@ class ActorDriver:
             recorder.meta["makespan"] = makespan
             if recoveries:
                 recorder.meta["recoveries"] = recoveries
+            if channel is not None:
+                recorder.meta["reliable_stats"] = channel.stats()
             self.trace = recorder.trace()
         return RunResult(
             makespan=makespan,
@@ -677,13 +835,16 @@ class ActorDriver:
         t0 = _time.perf_counter()
         clock = lambda: _time.perf_counter() - t0  # noqa: E731
 
-        # fail-stop fault plan (CRN: a pure function of the chaos config)
-        fail_points: dict[int, tuple[str, int]] = {}
+        # fail-stop fault plan (CRN: a pure function of the chaos config).
+        # Per-stage *lists* of planned faults in dispatch order: overlapping
+        # entries express concurrent deaths and death-during-recovery.
+        fail_points: dict[int, list[tuple[str, int]]] = {}
         if chaos is not None:
             for s in range(spec.num_stages):
-                fp = chaos.fail_point(s, spec.num_tasks_per_stage())
-                if fp is not None:
-                    fail_points[s] = fp
+                fps = chaos.fail_points(s, spec.num_tasks_per_stage())
+                if fps:
+                    fail_points[s] = fps
+        rcfg = cfg.reliable
         #: recovery generation; the transport shim stamps it on every
         #: outgoing envelope under ``gate``, so no send can interleave with
         #: a coordinator epoch bump
@@ -695,18 +856,63 @@ class ActorDriver:
         all_actors: list[StageActor] = list(actors)
         fail_time: dict[int, float] = {}
         recoveries: list[dict] = []
+        #: set once every stage thread has joined: late transport timers
+        #: (an RTO escalating after the run drained) must not wake the
+        #: recovery coordinator for a run that already finished
+        run_done = threading.Event()
+        abort = threading.Event()
+        errors: list[BaseException] = []
+        fail_q: _queue.Queue = _queue.Queue()
+        #: stage -> hosting device, and the cumulative lost-device set
+        #: (thread-substrate elastic remap)
+        host_of = list(range(spec.num_stages))
+        remapped: set[int] = set()
+        #: per-stage host lock: stages folded onto one device time-share it
+        #: by serializing their work_fns (assigned at remap time; absent =
+        #: the stage still has its own device, no serialization)
+        host_locks: dict[int, threading.Lock] = {}
 
         def record_send(env: Envelope, now: float) -> None:
             if recorder is not None:
+                rel = {"eseq": env.eseq} if env.eseq >= 0 else {}
                 recorder.record(_tr.SEND, env.src_stage, env.task,
-                                rank=env.rank, t=now, seq=env.seq)
+                                rank=env.rank, t=now, seq=env.seq, **rel)
+
+        def thread_link_fail(src: int, dst: int, env: Envelope,
+                             now: float) -> None:
+            """Reliable transport exhausted its retry budget on src->dst:
+            the unreachable receiver is treated as a failed stage."""
+            if run_done.is_set():
+                return  # the run already completed; nothing left to heal
+            fail_time[dst] = now
+            if recorder is not None:
+                recorder.record(_tr.FAIL, dst, env.task, t=now,
+                                fail_kind="link", src=src)
+            if cfg.recover:
+                fail_q.put(_StageDeath(dst, "link", env.task, t_fail=now))
+                return
+            errors.append(StageFailure(
+                dst, "link", f"edge {src}->{dst} unhealable at t={now:.6g}"))
+            abort.set()
+            for m in mailboxes:
+                m.stop()
 
         mb_map = {m.stage: m for m in mailboxes}
-        if chaos is not None:
+        if rcfg is not None:
+            base_transport = ReliableThreadTransport(
+                mb_map, rcfg, chaos=chaos, seed=cfg.seed, clock=clock,
+                recorder=recorder, on_send=record_send,
+                on_link_fail=thread_link_fail)
+        elif chaos is not None:
             base_transport = ChaosThreadTransport(mb_map, chaos,
                                                   on_send=record_send)
         else:
             base_transport = ThreadTransport(mb_map, on_send=record_send)
+
+        #: log sends whenever recovery might need to replay them: planned
+        #: faults, or a reliable transport whose link failures can escalate
+        #: into unplanned ones
+        log_sends = bool(fail_points) or rcfg is not None
 
         class _EpochTransport:
             """Stamp the current recovery epoch on every envelope (and log
@@ -719,12 +925,12 @@ class ActorDriver:
                 with gate:
                     if env.epoch != epoch_box[0]:
                         env = dataclasses.replace(env, epoch=epoch_box[0])
-                    if fail_points:
+                    if log_sends:
                         send_log[(env.task, env.rank, env.src_stage)] = \
                             env.payload
                     base_transport.send(env, now=now)
 
-        transport = _EpochTransport() if fail_points else base_transport
+        transport = _EpochTransport() if log_sends else base_transport
         base_fns = list(work_fn) if isinstance(work_fn, list) \
             else [work_fn] * spec.num_stages
         if chaos is not None:
@@ -741,29 +947,45 @@ class ActorDriver:
         else:
             chaotic = None
 
-        # fail-stop wrapper: the doomed dispatch never completes.  ``kill``
+        # fail-stop wrapper: a doomed dispatch never completes.  ``kill``
         # raises immediately; ``permanent_stall`` hangs inside work_fn until
         # the watchdog notices the stale execution heartbeat and releases it
-        # (the release is the moment of *detection*, not of death).
+        # (the release is the moment of *detection*, not of death).  The
+        # execution counter is shared across incarnations, so a later entry
+        # in a stage's fault list fires on the respawned incarnation —
+        # death-during-recovery and repeated deaths fall out naturally.
         exec_n = {s: 0 for s in fail_points}
-        fired: set[int] = set()
-        stall_release = {s: threading.Event()
-                         for s, (k, _) in fail_points.items()
-                         if k == "permanent_stall"}
+        fail_remaining = {s: list(pts) for s, pts in fail_points.items()}
+        stall_stages = {s for s, pts in fail_points.items()
+                        if any(k == "permanent_stall" for k, _ in pts)}
+        stall_release = {s: threading.Event() for s in stall_stages}
 
         def failing(fn, s: int):
-            kind_, k_die = fail_points[s]
-
             def wrapped(task, payload):
                 i = exec_n[s]
                 exec_n[s] = i + 1
-                if s not in fired and i == k_die:
-                    fired.add(s)
+                rem = fail_remaining[s]
+                if rem and i >= rem[0][1]:
+                    kind_ = rem.pop(0)[0]
                     t_fail = clock()
                     if kind_ == "permanent_stall":
                         stall_release[s].wait()
+                        stall_release[s] = threading.Event()  # re-arm
                     raise _StageDeath(s, kind_, task, t_fail=t_fail)
                 return fn(task, payload)
+            return wrapped
+
+        def hosted(fn, s: int):
+            """Serialize this stage's work_fn with its host's cohabitants
+            after an elastic remap folds stages onto one device.  Late-bound:
+            before any remap ``host_locks`` has no entry and the wrapper is
+            pass-through."""
+            def wrapped(task, payload):
+                lk = host_locks.get(s)
+                if lk is None:
+                    return fn(task, payload)
+                with lk:
+                    return fn(task, payload)
             return wrapped
 
         def stage_fn(s: int, respawned: bool = False):
@@ -772,13 +994,12 @@ class ActorDriver:
                 fn = cfg.respawn(s)
             if chaotic is not None:
                 fn = chaotic(fn)
-            if not respawned and s in fail_points:
+            fn = hosted(fn, s)
+            # the failing wrapper stays armed on respawn: remaining entries
+            # in the stage's fault list target later incarnations
+            if s in fail_points:
                 fn = failing(fn, s)
             return fn
-
-        abort = threading.Event()
-        errors: list[BaseException] = []
-        fail_q: _queue.Queue = _queue.Queue()
 
         def runner(actor: StageActor, fn):
             try:
@@ -821,6 +1042,19 @@ class ActorDriver:
             s = death.stage
             t_detect = clock()
             with gate:
+                if run_done.is_set():
+                    return  # late escalation: the run already finished
+                # Halt the old incarnation BEFORE the epoch bump.  A link
+                # failure can kill a *live* stage whose thread is mid-
+                # work_fn; halting under the old mailbox's condition makes
+                # any racing completion either see ``halted`` and abandon,
+                # or land entirely at the old epoch — never a zombie
+                # COMPLETE stamped with the new incarnation's epoch.
+                old_actor = actors[s]
+                old_mb = mb_map[s]
+                with old_mb.cond:
+                    old_actor.halted = True
+                    old_mb.cond.notify_all()
                 if recorder is not None:
                     recorder.record(_tr.RECOVERY_BEGIN, s, t=t_detect,
                                     epoch_from=epoch_box[0],
@@ -828,7 +1062,6 @@ class ActorDriver:
                 epoch_box[0] += 1
                 if recorder is not None:
                     recorder.epoch = epoch_box[0]
-                old_mb = mb_map[s]
                 mb, actor = self._make_stage(s, cfg, recorder,
                                              epoch=epoch_box[0])
                 mailboxes[s] = mb
@@ -836,6 +1069,25 @@ class ActorDriver:
                 actors[s] = actor
                 all_actors.append(actor)
                 old_mb.stop()
+                if cfg.recovery_mode == "remap":
+                    # elastic remap on the thread substrate: the dead
+                    # stage's device is gone for good; fold the respawned
+                    # actor onto the nearest survivor and serialize the
+                    # cohabitants' work_fns via a shared host lock
+                    from repro.runtime.elastic import remap_stages
+
+                    remapped.add(s)
+                    host_of[:] = remap_stages(spec.num_stages, remapped)
+                    for h in set(host_of):
+                        cohab = [s2 for s2 in range(spec.num_stages)
+                                 if host_of[s2] == h]
+                        if len(cohab) < 2:
+                            continue  # sole resident: no serialization
+                        lk = next((host_locks[s2] for s2 in cohab
+                                   if s2 in host_locks), None) \
+                            or threading.Lock()
+                        for s2 in cohab:
+                            host_locks[s2] = lk
                 # In-memory state (stashed activations) died with the stage:
                 # the incarnation re-executes from scratch.  Re-seed local
                 # inputs, then replay every logged send destined here at the
@@ -857,43 +1109,63 @@ class ActorDriver:
             th.start()  # start before publishing: the join loop may see it
             threads.append(th)
             t_up = clock()
-            mttr = t_up - fail_time[s]
+            mttr = t_up - fail_time.get(s, t_detect)
+            mode = cfg.recovery_mode
+            host = host_of[s] if mode == "remap" else s
             if recorder is not None:
-                recorder.record(_tr.RECOVERY_END, s, t=t_up, mode="respawn",
-                                mttr=mttr)
+                recorder.record(_tr.RECOVERY_END, s, t=t_up, mode=mode,
+                                mttr=mttr, host=host)
             if cfg.metrics is not None:
                 cfg.metrics.on_recovery(s)
             recoveries.append({
                 "stage": s, "fail_kind": death.fail_kind,
-                "t_fail": fail_time[s], "t_detect": t_detect, "t_up": t_up,
-                "epoch": epoch_box[0], "mode": "respawn", "mttr": mttr})
+                "t_fail": fail_time.get(s, t_detect), "t_detect": t_detect,
+                "t_up": t_up, "epoch": epoch_box[0], "mode": mode,
+                "host": host, "mttr": mttr})
+            if (mode == "remap" and cfg.adaptive is not None
+                    and cfg.mode == "hint"):
+                # re-price the hint table against the degraded (co-hosted)
+                # topology; adopt immediately on improvement — each live
+                # actor swaps under its own mailbox condition (its thread
+                # only touches the arbiter/ready-set under that lock)
+                d = cfg.adaptive.note_remap(
+                    host_of, recovery_cost=cfg.restore_cost)
+                if d.swapped:
+                    nowh = clock()
+                    for s2 in range(spec.num_stages):
+                        a2 = actors[s2]
+                        with a2.mailbox.cond:
+                            if not a2.halted:
+                                a2.set_hint_table(cfg.adaptive.table[s2],
+                                                  now=nowh)
 
         def coordinator() -> None:
             """Failure detection + recovery: drains the death queue (kills
-            announce themselves) and runs a heartbeat watchdog for armed
-            permanent stalls (silent deaths are detected by staleness)."""
-            pending = set(fail_points)
-            while pending and not abort.is_set():
+            and link failures announce themselves) and runs a heartbeat
+            watchdog for armed permanent stalls (silent deaths detected by
+            staleness).  Persistent — it outlives its planned fault list,
+            because reliable-transport link failures and later entries in a
+            stage's fault list can arrive at any time until the run ends."""
+            while not run_done.is_set() and not abort.is_set():
                 try:
                     death = fail_q.get(
                         timeout=max(cfg.hb_deadline / 4, 0.002))
                 except _queue.Empty:
-                    for s2 in list(pending):
-                        if fail_points[s2][0] != "permanent_stall":
-                            continue
+                    for s2 in stall_stages:
                         es = actors[s2].exec_since
                         if (es is not None
                                 and _time.monotonic() - es > cfg.hb_deadline):
                             stall_release[s2].set()
                     continue
-                pending.discard(death.stage)
                 recover_stage(death)
+                fail_q.task_done()
 
         coord_th = None
         # the coordinator doubles as the stall watchdog, so it also runs
         # without ``recover``: a released stall is then promoted to a
         # fail-fast StageFailure instead of a silent hang
-        if fail_points and (cfg.recover or stall_release):
+        if (fail_points and (cfg.recover or stall_release)) or \
+                (rcfg is not None and cfg.recover):
             coord_th = threading.Thread(
                 target=coordinator, name="recovery-coordinator", daemon=True)
             coord_th.start()
@@ -904,12 +1176,29 @@ class ActorDriver:
             while i < len(threads):
                 threads[i].join()
                 i += 1
-            if coord_th is None or not coord_th.is_alive():
+            if i == len(threads) and (
+                    coord_th is None or abort.is_set()
+                    or fail_q.unfinished_tasks == 0):
+                # every started thread joined and no recovery is queued or
+                # in flight (a recovery may still append a thread, which
+                # the outer loop then picks up)
                 break
-            coord_th.join(timeout=0.01)  # a respawn may still add threads
+            _time.sleep(0.002)
+        with gate:
+            run_done.set()  # under gate: no recovery can start after this
         if coord_th is not None:
             coord_th.join()
-        if isinstance(base_transport, ChaosThreadTransport):
+            while i < len(threads):
+                # a recovery that slipped in between the break above and
+                # run_done still spawned a thread; sweep it up
+                threads[i].join()
+                i += 1
+        if isinstance(base_transport, ReliableThreadTransport):
+            # land outstanding ACKs/retransmissions, then cancel timers so
+            # none outlives the run
+            base_transport.drain(timeout=cfg.deadlock_timeout)
+            base_transport.close()
+        elif isinstance(base_transport, ChaosThreadTransport):
             # chaos duplicates may still be in flight; land them before
             # stopping so no timer outlives the run
             base_transport.drain(timeout=cfg.deadlock_timeout)
@@ -939,6 +1228,8 @@ class ActorDriver:
             recorder.meta["makespan"] = makespan
             if recoveries:
                 recorder.meta["recoveries"] = recoveries
+            if isinstance(base_transport, ReliableThreadTransport):
+                recorder.meta["reliable_stats"] = base_transport.stats()
             self.trace = recorder.trace()
         return RunResult(
             makespan=makespan,

@@ -82,6 +82,10 @@ class Mailbox:
         makes a respawned incarnation's state independent of pre-failure
         stragglers still in flight."""
         with self.cond:
+            # reliable-transport envelopes stamp their per-edge sequence into
+            # the record (conformance's check_reliable_delivery keys on it);
+            # omitted when -1 so pre-reliable traces stay byte-identical
+            rel = {"eseq": env.eseq} if env.eseq >= 0 else {}
             if env.epoch < self.epoch:
                 self.fenced += 1
                 if self.recorder is not None:
@@ -89,12 +93,12 @@ class Mailbox:
                                          rank=env.rank, t=now, seq=env.seq,
                                          src=env.src_stage,
                                          env_epoch=env.epoch,
-                                         mailbox_epoch=self.epoch)
+                                         mailbox_epoch=self.epoch, **rel)
                 return None
             if self.recorder is not None:
                 self.recorder.record(_tr.DELIVER, self.stage, env.task,
                                      rank=env.rank, t=now, seq=env.seq,
-                                     src=env.src_stage)
+                                     src=env.src_stage, **rel)
             adm = self.group.offer(env, now)
             # Late duplicates of an already-admitted message must not re-stash
             # a payload the consumer has already popped (or never will pop).

@@ -15,6 +15,7 @@ from __future__ import annotations
 
 import dataclasses
 import itertools
+import zlib
 from typing import Any
 
 from repro.core.taskgraph import Task
@@ -59,6 +60,28 @@ class Envelope:
     payload: Any = None
     epoch: int = 0
     seq: int = dataclasses.field(default_factory=lambda: next(_seq))
+    #: reliable-transport per-edge sequence number (-1 = the envelope is not
+    #: travelling over a :class:`~repro.runtime.rrfp.transport.ReliableChannel`)
+    eseq: int = -1
+    #: CRC32 over the envelope's identity tuple (see :func:`envelope_checksum`);
+    #: a lossy wire may corrupt it in flight, and the reliable receiver
+    #: verifies it before admission (mismatch -> NACK, never delivered)
+    checksum: int = 0
+
+
+def envelope_checksum(env: "Envelope") -> int:
+    """Deterministic integrity checksum over the envelope identity.
+
+    Covers everything that determines what the receiver *does* with the
+    message (task, edge, rank, per-edge sequence, epoch).  The payload is
+    excluded: in simulation it is the fact of arrival, and on the thread
+    substrate hashing a device array per send would dominate the wire — the
+    identity tuple is what a corrupted header would scramble."""
+    t = env.task
+    return zlib.crc32(repr((
+        int(t.kind), t.stage, t.mb, t.chunk,
+        env.src_stage, env.dst_stage, env.rank, env.eseq, env.epoch,
+    )).encode())
 
 
 class EdgePayloads(dict):

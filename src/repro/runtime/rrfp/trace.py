@@ -58,9 +58,15 @@ RECOVERY_BEGIN = "recovery_begin"  # coordinator detected the death; quiesce
 RECOVERY_END = "recovery_end"      # stage respawned/re-mapped; epoch bumped
 FENCE = "fence"        # stale (pre-recovery epoch) envelope dropped
 HINT_SWAP = "hint_swap"  # adaptive: a stage adopted a re-synthesized table
+DROP = "drop"          # lossy wire: one transmission (attempt x copy) lost
+CORRUPT = "corrupt"    # lossy wire: checksum mismatch detected -> NACK
+RETRANSMIT = "retransmit"  # reliable sender re-sent after RTO/NACK
+RDUP = "rdup"          # reliable receiver deduplicated an already-seen eseq
+LINK_FAIL = "link_fail"  # retry budget exhausted: edge escalated to a fault
 EVENT_KINDS = (SEND, DELIVER, TP_HOLD, TP_ADMIT, TP_DUP, ENQUEUE, DEQUEUE,
                DISPATCH, COMPLETE, STALL, FANIN_HOLD, FAIL, RECOVERY_BEGIN,
-               RECOVERY_END, FENCE, HINT_SWAP)
+               RECOVERY_END, FENCE, HINT_SWAP, DROP, CORRUPT, RETRANSMIT,
+               RDUP, LINK_FAIL)
 
 
 def task_key(t: Task) -> list[int]:
@@ -191,15 +197,21 @@ class Trace:
         return Trace(meta=head.get("meta", {}), events=events)
 
     # ---- comparison --------------------------------------------------------
-    def signature(self, include_time: bool = True) -> list[tuple]:
+    def signature(self, include_time: bool = True,
+                  kinds: Iterable[str] | None = None) -> list[tuple]:
         """Hashable per-event identity for replay-equivalence checks.
 
         With ``include_time`` the virtual-clock timestamps must match too
         (sim replays are exact); without it only the event sequence is
-        compared (thread replays reproduce order, not wall time).
+        compared (thread replays reproduce order, not wall time).  ``kinds``
+        restricts the signature to a subset of event kinds (e.g. compare
+        only the wire-level DROP/RETRANSMIT realization of two lossy runs).
         """
+        want = set(kinds) if kinds is not None else None
         out = []
         for ev in self.events:
+            if want is not None and ev.kind not in want:
+                continue
             tk = tuple(task_key(ev.task)) if ev.task is not None else None
             key = (ev.kind, ev.stage, tk, ev.rank, ev.info.get("src", -1))
             if include_time:

@@ -1,0 +1,303 @@
+"""Lossy-network conformance: exactly-once delivery + multi-fault recovery.
+
+The acceptance scenario of the reliable-delivery layer: under drop=0.2 +
+payload corruption + a timed bidirectional partition (with heal) + two
+overlapping stage kills, training must still complete with exactly-once
+delivery (``check_all`` green, including ``check_reliable_delivery``) and
+**bitwise** loss/grad parity against the unfailed run — on both substrates.
+
+Alongside the acceptance runs:
+
+* CRN determinism — the same lossy config twice yields the identical event
+  signature (record/replay of lossy runs reduces to this determinism);
+* a property test driving :class:`ReliableChannel` directly through an
+  adversarial wire (arbitrary drop / duplicate / reorder interleavings of
+  transmissions, acks and RTO timers) — receiver-side dedup must keep
+  delivery exactly-once and the protocol must still settle;
+* strict ``parse_chaos`` coverage for the new drop / corrupt / partition /
+  fail_stages syntax, including unknown-key fail-fast.
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ModuleNotFoundError:  # deterministic fallback (tests/_hyp_stub.py)
+    import pathlib
+    import sys
+
+    sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1]))
+    from _hyp_stub import given, settings, strategies as st
+
+from harness import (
+    NumpyStageProgram,
+    artifact_on_failure,
+    check_all,
+    execute_complete_order,
+    sim_costs,
+)
+
+from repro.core import Kind, PipelineSpec, Task
+from repro.runtime.rrfp import (
+    ActorConfig,
+    ActorDriver,
+    ChaosConfig,
+    Envelope,
+    ReliableChannel,
+    ReliableConfig,
+    parse_chaos,
+)
+from repro.runtime.rrfp.conformance import check_reliable_delivery
+
+SPEC = PipelineSpec(4, 8)
+
+
+def _acceptance_chaos(seed: int, wall: bool = False) -> ChaosConfig:
+    """drop=0.2 + corruption + one partition (with heal) + two overlapping
+    stage kills.  ``wall=True`` compresses the partition window to thread-
+    substrate wall-clock scale."""
+    part = (1, 2, 0.05, 0.08) if wall else (1, 2, 3.0, 1.5)
+    return ChaosConfig(
+        seed=seed, drop_prob=0.2, corrupt_prob=0.05,
+        latency_base=1e-4 if wall else 0.0,
+        partitions=(part,),
+        fail_stages=((1, "kill", 3), (2, "kill", 4)))
+
+
+def _calm(cfg: ActorConfig) -> ActorConfig:
+    return dataclasses.replace(cfg, chaos=None, reliable=None,
+                               recover=False, respawn=None)
+
+
+@pytest.mark.parametrize("seed", range(4))
+def test_sim_lossy_multifault_acceptance(seed):
+    costs = sim_costs(SPEC, seed)
+    cfg = ActorConfig(
+        record_trace=True, seed=seed, chaos=_acceptance_chaos(17 + seed),
+        reliable=ReliableConfig(rto=0.5), recover=True)
+    driver = ActorDriver(SPEC, costs, cfg)
+    with artifact_on_failure(lambda: driver.trace, f"lossy_sim_{seed}"):
+        driver.run()
+        trace = driver.trace
+        wins = trace.recovery_windows()
+        assert len(wins) >= 2, f"expected overlapping faults, got {wins}"
+        check_all(trace, SPEC, cfg)  # includes check_reliable_delivery
+        stats = trace.meta["reliable_stats"]
+        assert stats["retransmits"] > 0, "drop=0.2 never exercised the RTO"
+        assert stats["link_failures"] == 0, (
+            "partition outlived the retry budget in the healing scenario")
+        # bitwise parity: the lossy, twice-failed run commits exactly the
+        # unfailed run's loss/grad bits
+        calm = ActorDriver(SPEC, costs, _calm(cfg))
+        calm.run()
+        got = execute_complete_order(trace, SPEC, seed)
+        want = execute_complete_order(calm.trace, SPEC, seed)
+        for s in range(SPEC.num_stages):
+            assert want[s].loss == got[s].loss, f"stage {s} loss bits differ"
+            assert np.array_equal(want[s].d_w, got[s].d_w), (
+                f"stage {s} grad bits differ")
+
+
+@pytest.mark.parametrize("seed", range(2))
+def test_thread_lossy_multifault_acceptance(seed):
+    spec = SPEC
+    cfg = ActorConfig(
+        record_trace=True, seed=seed,
+        chaos=_acceptance_chaos(23 + seed, wall=True),
+        reliable=ReliableConfig(rto=0.05), recover=True,
+        hb_deadline=0.05, deadlock_timeout=20.0)
+
+    def build(with_fault: bool):
+        progs = [NumpyStageProgram(s, spec, seed)
+                 for s in range(spec.num_stages)]
+
+        def respawn(s: int):
+            progs[s] = NumpyStageProgram(s, spec, seed)
+            return lambda t, p: progs[s](t, p)
+
+        c = dataclasses.replace(cfg, respawn=respawn) if with_fault \
+            else _calm(cfg)
+        drv = ActorDriver(spec, None, c)
+        fns = [(lambda s: (lambda t, p: progs[s](t, p)))(s)
+               for s in range(spec.num_stages)]
+        return drv, fns, progs, c
+
+    drv, fns, progs, c = build(True)
+    with artifact_on_failure(lambda: drv.trace, f"lossy_thread_{seed}"):
+        drv.run_threaded(fns)
+        trace = drv.trace
+        assert len(trace.recovery_windows()) >= 2
+        check_all(trace, spec, c)
+        calm_drv, calm_fns, calm_progs, _ = build(False)
+        calm_drv.run_threaded(calm_fns)
+        for p in progs:
+            p.finalize()
+        for p in calm_progs:
+            p.finalize()
+        for s in range(spec.num_stages):
+            assert calm_progs[s].loss == progs[s].loss, (
+                f"stage {s} loss bits differ under lossy multi-fault")
+            assert np.array_equal(calm_progs[s].d_w, progs[s].d_w), (
+                f"stage {s} grad bits differ under lossy multi-fault")
+
+
+def test_lossy_run_is_crn_deterministic():
+    """Same lossy config twice -> identical event signature: every drop,
+    corruption, retransmission and partition blackout is a pure function of
+    the chaos seed (record/replay exactness of lossy runs rests on this)."""
+    costs = sim_costs(SPEC, 3)
+    cfg = ActorConfig(
+        record_trace=True, seed=3, chaos=_acceptance_chaos(31),
+        reliable=ReliableConfig(rto=0.5), recover=True)
+    a = ActorDriver(SPEC, costs, cfg)
+    a.run()
+    b = ActorDriver(SPEC, costs, cfg)
+    b.run()
+    assert a.trace.signature() == b.trace.signature()
+
+
+def test_partition_escalates_to_link_failure_and_recovers():
+    """A partition outliving the retry budget becomes a link-failure event
+    the recovery coordinator heals like a stage fault (partition + death)."""
+    costs = sim_costs(SPEC, 5)
+    chaos = ChaosConfig(seed=41, partitions=((0, 1, 1.0, 200.0),),
+                        fail_stages=((2, "kill", 3),))
+    cfg = ActorConfig(
+        record_trace=True, seed=5, chaos=chaos,
+        reliable=ReliableConfig(rto=0.05, max_retries=3), recover=True)
+    driver = ActorDriver(SPEC, costs, cfg)
+    with artifact_on_failure(lambda: driver.trace, "lossy_partition_death"):
+        driver.run()
+        trace = driver.trace
+        kinds = {w["fail_kind"] for w in trace.recovery_windows()}
+        assert "link" in kinds, "partition never escalated"
+        assert "kill" in kinds, "planned death missing"
+        assert trace.meta["reliable_stats"]["link_failures"] >= 1
+        check_all(trace, SPEC, cfg)
+
+
+# ---------------------------------------------------------------------------
+# protocol property: dedup is idempotent under arbitrary adversarial wires
+# ---------------------------------------------------------------------------
+class _AdversarialWire:
+    """Manual wire around one ReliableChannel: every transmission, ack and
+    RTO timer is parked here, and the test interleaves/duplicates/drops
+    them in an arbitrary (drawn) order."""
+
+    def __init__(self, n_msgs: int):
+        self.transmissions: list[tuple[Envelope, int]] = []
+        self.acks: list = []
+        self.timers: list = []
+        self.delivered: list[Envelope] = []
+        self.channel = ReliableChannel(
+            ReliableConfig(rto=1.0, max_retries=10 ** 6),
+            transmit=lambda env, a, now: self.transmissions.append((env, a)),
+            send_ack=lambda ack, env, now: self.acks.append(ack),
+            set_timer=lambda d, fn: self.timers.append(fn),
+            deliver=lambda env, now: self.delivered.append(env),
+        )
+        self.n_msgs = n_msgs
+        for i in range(n_msgs):
+            self.channel.send(Envelope(
+                task=Task(Kind.F, 1, i, 0), src_stage=0, dst_stage=1,
+                payload=i))
+
+    def step(self, action: int, index: int) -> None:
+        """One adversarial move.  Duplication falls out of delivering the
+        same parked transmission twice (the wire never consumes it);
+        reordering from index-targeted picks; drop from firing a timer
+        instead of delivering (the retransmission re-parks)."""
+        if action == 0 and self.transmissions:  # deliver (dup/reorder ok)
+            env, att = self.transmissions[index % len(self.transmissions)]
+            self.channel.on_wire(env, att, 0.0)
+        elif action == 1 and self.timers:  # fire an RTO (drop-equivalent)
+            fn = self.timers.pop(index % len(self.timers))
+            fn(0.0)
+        elif action == 2 and self.acks:  # land an ack (reordered ok)
+            ack = self.acks.pop(index % len(self.acks))
+            self.channel.on_ack(ack, 0.0)
+        elif action == 3 and self.transmissions:  # corrupt then deliver
+            env, att = self.transmissions[index % len(self.transmissions)]
+            bad = dataclasses.replace(env, checksum=env.checksum ^ 0xBEEF)
+            self.channel.on_wire(bad, att, 0.0)
+
+    def settle(self) -> None:
+        """Honest endgame: ferry everything until nothing is unacked."""
+        for _ in range(10 ** 4):
+            if self.channel.inflight() == 0:
+                return
+            while self.transmissions:
+                env, att = self.transmissions.pop()
+                self.channel.on_wire(env, att, 0.0)
+            while self.acks:
+                self.channel.on_ack(self.acks.pop(), 0.0)
+            if self.channel.inflight() and self.timers:
+                self.timers.pop()(0.0)
+        raise AssertionError("protocol failed to settle")
+
+
+@settings(max_examples=40, deadline=None)
+@given(n_msgs=st.integers(2, 6), seed=st.integers(0, 10 ** 6))
+def test_reliable_dedup_idempotent_under_adversarial_wire(n_msgs, seed):
+    rng = np.random.default_rng(seed)
+    wire = _AdversarialWire(n_msgs)
+    for _ in range(int(rng.integers(5, 40))):
+        wire.step(int(rng.integers(0, 4)), int(rng.integers(0, 100)))
+        eseqs = [e.eseq for e in wire.delivered]
+        assert len(eseqs) == len(set(eseqs)), (
+            f"duplicate delivery mid-interleaving: {eseqs}")
+    wire.settle()
+    assert sorted(e.eseq for e in wire.delivered) == list(range(n_msgs)), (
+        "exactly-once violated after settling")
+    # payloads rode intact: delivery i carries payload i
+    for env in wire.delivered:
+        assert env.payload == env.eseq
+
+
+# ---------------------------------------------------------------------------
+# strict chaos grammar
+# ---------------------------------------------------------------------------
+def test_parse_chaos_lossy_syntax():
+    c = parse_chaos(
+        "drop_prob=0.05,corrupt_prob=0.01,partition=1:2:0.5:0.25,"
+        "fail_stages=1:kill:3+2:kill:4,seed=7")
+    assert c.drop_prob == 0.05 and c.corrupt_prob == 0.01
+    assert c.partitions == ((1, 2, 0.5, 0.25),)
+    assert c.fail_stages == ((1, "kill", 3), (2, "kill", 4))
+    assert c.lossy() and c.active()
+
+
+def test_parse_chaos_unknown_key_fails_fast():
+    with pytest.raises(ValueError, match="unknown chaos key 'drop_porb'"):
+        parse_chaos("drop_porb=0.05")
+    with pytest.raises(ValueError, match="valid keys"):
+        parse_chaos("latency_base=0.1,bogus=1")
+
+
+def test_parse_chaos_bad_value_fails_fast():
+    with pytest.raises(ValueError, match="bad chaos value"):
+        parse_chaos("drop_prob=lots")
+    with pytest.raises(ValueError, match="bad chaos value"):
+        parse_chaos("partition=1:2:0.5")  # needs a:b:t0:dur
+    with pytest.raises(ValueError):
+        parse_chaos("fail_stages=1:frobnicate:3")  # unknown fail kind
+
+
+def test_reliable_check_catches_seeded_duplicate():
+    """check_reliable_delivery is not vacuous: planting a duplicate DELIVER
+    record for an already-landed eseq must trip the dedup assertion."""
+    costs = sim_costs(SPEC, 9)
+    cfg = ActorConfig(record_trace=True, seed=9,
+                      chaos=ChaosConfig(seed=9, drop_prob=0.1),
+                      reliable=ReliableConfig(rto=0.5))
+    driver = ActorDriver(SPEC, costs, cfg)
+    driver.run()
+    trace = driver.trace
+    check_reliable_delivery(trace, SPEC)  # sane baseline
+    ev = next(e for e in trace.events
+              if e.kind == "deliver" and "eseq" in e.info)
+    trace.events.append(ev)
+    with pytest.raises(AssertionError, match="dedup violated"):
+        check_reliable_delivery(trace, SPEC)

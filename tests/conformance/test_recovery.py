@@ -118,12 +118,12 @@ def test_sim_recovery_dag_full_matrix(seed):
 # ---------------------------------------------------------------------------
 # thread substrate: real re-execution through numpy stage programs
 # ---------------------------------------------------------------------------
-def _run_thread(sc, seed: int) -> None:
+def _run_thread(sc, seed: int, recovery_mode: str = "respawn") -> None:
     spec = sc.spec
     cfg, fault = _arm_fault(sc, seed)
     # wall-clock scale: detect stalls fast, give recovery generous slack
     cfg = dataclasses.replace(cfg, hb_deadline=0.05, deadlock_timeout=20.0,
-                              recovery_mode="respawn")
+                              recovery_mode=recovery_mode)
 
     def build(with_fault: bool):
         progs = [NumpyStageProgram(s, spec, seed) for s in range(spec.num_stages)]
@@ -172,6 +172,16 @@ def test_thread_recovery_chain(seed):
 @pytest.mark.parametrize("seed", SEEDS_FAST[:3])
 def test_thread_recovery_dag(seed):
     _run_thread(make_dag_scenario(seed, substrate="thread"), seed)
+
+
+@pytest.mark.parametrize("seed", SEEDS_FAST[:6])
+def test_thread_recovery_remap(seed):
+    """Elastic remap on the *thread* substrate: a randomized kill folds the
+    dead stage onto a surviving neighbor (work_fns time-share the host via
+    a shared lock) and the run still produces the unfailed run's exact
+    loss/grad bits."""
+    _run_thread(make_scenario(seed, substrate="thread"), seed,
+                recovery_mode="remap")
 
 
 @pytest.mark.slow
